@@ -1,0 +1,62 @@
+"""Beyond-paper ablations (opt-in: ``--only ablation``).
+
+The paper evaluates one operator (top-k @1%), one topology (full), iid data.
+This suite sweeps what it holds fixed:
+
+  A. compression operators at comparable wire budgets
+     (block-top-k 1%, rand-k 1%, QSGD 4-bit, sign 1-bit)
+  B. gossip topologies (full / ring / star) at fixed compression
+  C. iid vs Dirichlet(0.3) non-iid shards (the FL stress case)
+
+Metrics per cell: accuracy / ECE / bytes-per-round on the radar task.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import (K, MINIBATCH, radar_world, run_method)
+from repro.config import FedConfig
+from repro.data.partition import partition_dirichlet
+from repro.data.radar import make_dataset
+from repro.train import FedTrainer
+
+
+def run(quick: bool = False) -> List[str]:
+    rows = []
+    rounds = 60 if quick else 120
+    cfg, model, shards, test_d1, _ = radar_world()
+
+    # A: compression operators
+    for comp, ratio in (("block_topk", 0.01), ("randk", 0.01),
+                        ("qsgd", None), ("sign", None)):
+        kw = {"compressor": comp}
+        if ratio is not None:
+            kw["ratio"] = ratio
+        tr, res = run_method(model, shards, "cdbfl", local_steps=8,
+                             rounds=rounds, eval_batch=test_d1, **kw)
+        rows.append(f"ablationA_{comp},{res.wall_s*1e6/rounds:.0f},"
+                    f"acc={res.accuracy:.4f};ece={res.ece:.4f};"
+                    f"bytes_per_round={res.bytes_sent_per_round:.3e}")
+
+    # B: topologies (bytes scale with edges — ring is the scarce-link case)
+    for topo in ("full", "ring", "star"):
+        fed = FedConfig(num_nodes=K, local_steps=8, eta=3e-3, zeta=0.3,
+                        rounds=rounds, burn_in=int(rounds * 2 / 3),
+                        compressor="block_topk", compress_ratio=0.01,
+                        topology=topo, temperature=0.2, algorithm="cdbfl")
+        tr = FedTrainer(model, fed, shards, minibatch=MINIBATCH)
+        res = tr.run(rounds=rounds, eval_batch=test_d1)
+        rows.append(f"ablationB_{topo},{res.wall_s*1e6/rounds:.0f},"
+                    f"acc={res.accuracy:.4f};ece={res.ece:.4f};"
+                    f"bytes_per_round={res.bytes_sent_per_round:.3e}")
+
+    # C: non-iid shards
+    train = make_dataset(K * 50, hw=cfg.input_hw, day=1, seed=0)
+    noniid = partition_dirichlet(train, K, alpha=0.3, seed=0)
+    # pad shards to equal minibatch viability
+    for algo in ("cdbfl", "cffl"):
+        tr, res = run_method(model, noniid, algo, local_steps=8,
+                             rounds=rounds, eval_batch=test_d1)
+        rows.append(f"ablationC_noniid_{algo},{res.wall_s*1e6/rounds:.0f},"
+                    f"acc={res.accuracy:.4f};ece={res.ece:.4f}")
+    return rows

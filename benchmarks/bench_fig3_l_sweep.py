@@ -1,0 +1,32 @@
+"""Paper Fig. 3: CD-BFL accuracy/ECE vs local steps L, against DSGLD.
+
+Claim: accuracy and ECE improve with L up to a sweet spot (paper: L=8),
+then degrade (overfitting in the local phase hurts calibration); CD-BFL at
+the sweet spot ≈ DSGLD accuracy at 1% of the bytes.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import ROUNDS, radar_world, run_method
+
+
+def run(quick: bool = False) -> List[str]:
+    rows = []
+    cfg, model, shards, test_d1, _ = radar_world()
+    rounds = 60 if quick else ROUNDS
+    l_values = [1, 4, 8] if quick else [1, 2, 4, 8, 12]
+
+    _, res_d = run_method(model, shards, "dsgld", rounds=rounds,
+                          eval_batch=test_d1)
+    rows.append(f"fig3_dsgld,{res_d.wall_s*1e6/rounds:.0f},"
+                f"acc={res_d.accuracy:.4f};ece={res_d.ece:.4f};"
+                f"bytes_per_round={res_d.bytes_sent_per_round:.3e}")
+
+    for L in l_values:
+        _, res = run_method(model, shards, "cdbfl", local_steps=L,
+                            rounds=rounds, eval_batch=test_d1)
+        rows.append(f"fig3_cdbfl_L{L},{res.wall_s*1e6/rounds:.0f},"
+                    f"acc={res.accuracy:.4f};ece={res.ece:.4f};"
+                    f"bytes_per_round={res.bytes_sent_per_round:.3e}")
+    return rows

@@ -1,0 +1,77 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the JSON records.
+
+    PYTHONPATH=src python -m benchmarks.report            # print markdown
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import (RESULTS_DIR, load_records, markdown_table,
+                                 roofline_row)
+
+
+def dryrun_table(results_dir: str = RESULTS_DIR) -> str:
+    lines = [
+        "| arch | shape | mesh | step | variant | FLOPs/dev | coll B/dev | "
+        "state GiB/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    skips = []
+    for rec in load_records(results_dir):
+        if "skipped" in rec:
+            skips.append(f"* **{rec['arch']} × {rec['shape']}** skipped: "
+                         f"{rec['skipped']}")
+            continue
+        if "error" in rec:
+            lines.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+                         f"| {rec.get('step')} | — | FAILED: {rec['error']} "
+                         f"| | | |")
+            continue
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+            f"| {rec['step']} | {rec.get('variant', '')} "
+            f"| {rec['flops_per_device']:.2e} "
+            f"| {rec['collective_total_per_device']:.2e} "
+            f"| {rec['state_bytes_per_device']/2**30:.2f} "
+            f"| {rec['compile_s']:.1f} |")
+    out = "\n".join(lines)
+    if skips:
+        out += "\n\nSkips:\n" + "\n".join(sorted(set(skips)))
+    return out
+
+
+def fed_table(results_dir: str = None) -> str:
+    results_dir = results_dir or os.path.join(
+        os.path.dirname(__file__), "results", "dryrun_fed")
+    lines = [
+        "| arch | mesh | K (fed axis) | FLOPs/dev | coll B/dev | state GiB/dev |",
+        "|---|---|---|---|---|---|",
+    ]
+    for fn in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        rec = json.load(open(fn))
+        if "error" in rec or "skipped" in rec:
+            continue
+        k = "2 (pod)" if rec["mesh"] == "2x16x16" else "16 (data)"
+        lines.append(
+            f"| {rec['arch']} | {rec['mesh']} | {k} "
+            f"| {rec['flops_per_device']:.2e} "
+            f"| {rec['collective_total_per_device']:.2e} "
+            f"| {rec['state_bytes_per_device']/2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    print("### §Dry-run results\n")
+    print(dryrun_table())
+    print("\n### §Dry-run — CD-BFL fed step\n")
+    print(fed_table())
+    print("\n### §Roofline — single-pod 16×16\n")
+    print(markdown_table(mesh="16x16"))
+    print("\n### §Roofline — multi-pod 2×16×16\n")
+    print(markdown_table(mesh="2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

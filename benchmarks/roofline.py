@@ -1,0 +1,214 @@
+"""§Roofline: derive the three roofline terms from the dry-run records.
+
+    compute    = HLO_FLOPs_per_device / 197e12           (bf16 peak/chip)
+    memory     = HLO_bytes_per_device / 819e9            (HBM BW/chip)
+    collective = collective_bytes_per_device / 50e9      (ICI per link)
+
+plus MODEL_FLOPS = 6·N_active·D tokens (training; 2·N_active for a forward
+pass, 2·N_active per generated token for decode) and the usefulness ratio
+MODEL_FLOPS / (HLO_FLOPs × devices).
+
+Methodology notes (also printed with the table):
+* HLO numbers come from repro.launch.hlo_cost (post-opt HLO walk with
+  while-body trip multiplication) — not from XLA's raw cost_analysis, which
+  counts loop bodies once.
+* The CPU backend lowers ragged_dot (MoE grouped GEMM) as a DENSE
+  all-experts dot, so HLO_FLOPs for MoE archs overcount by ~E/top_k on the
+  expert FFN part; a real TPU executes the grouped form. moe_corrected
+  subtracts the known artifact.
+* collective bytes assume ring algorithms and one ICI link; multi-link
+  meshes divide this term accordingly.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.config import INPUT_SHAPES, get_arch
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+# --------------------------------------------------------------------------
+# Analytic parameter/FLOP model
+# --------------------------------------------------------------------------
+
+def param_counts(cfg) -> Dict[str, float]:
+    """(total, active) parameter counts from the config."""
+    d, ff, v, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.num_layers
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+
+    def attn_params():
+        if cfg.kv_lora_rank:
+            lq, lkv, rp = cfg.q_lora_rank, cfg.kv_lora_rank, cfg.rope_head_dim
+            p = d * lkv + lkv * h * hd * 2 + d * rp + h * hd * d
+            p += (d * lq + lq * h * (hd + rp)) if lq else d * h * (hd + rp)
+            return p
+        return d * h * hd + 2 * d * kv * hd + h * hd * d
+
+    def mlp_params(width=None):
+        w = width or ff
+        return 3 * d * w
+
+    total = active = v * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.family == "ssm":
+        per = d * 3 * d + d * 2 * cfg.num_heads + d * d * 2   # mlstm approx
+        total += L * per
+        active += L * per
+        return {"total": total, "active": active}
+    if cfg.family == "hybrid":
+        pat = (cfg.block_pattern * ((L // len(cfg.block_pattern)) + 1))[:L]
+        dr = cfg.rglru_dim or d
+        rec = d * 2 * dr + 4 * dr + 2 * dr * dr + dr * d
+        for m in pat:
+            total += (rec if m == "rec" else attn_params()) + mlp_params()
+        active = total
+        return {"total": total, "active": active}
+    enc = cfg.encoder_layers if cfg.family == "audio" else 0
+    for _ in range(L + enc):
+        a = attn_params()
+        if cfg.moe.num_experts:
+            e_all = cfg.moe.num_experts * mlp_params()
+            e_act = cfg.moe.top_k * mlp_params()
+            shared = cfg.moe.num_shared_experts * mlp_params()
+            router = d * cfg.moe.num_experts
+            total += a + e_all + shared + router
+            active += a + e_act + shared + router
+        else:
+            total += a + mlp_params()
+            active += a + mlp_params()
+    if cfg.family == "audio":   # cross-attention
+        total += L * attn_params()
+        active += L * attn_params()
+    return {"total": total, "active": active}
+
+
+def model_flops(cfg, shape, step: str) -> float:
+    """Global useful FLOPs for one step (6ND train / 2ND forward rules)."""
+    pc = param_counts(cfg)
+    n_act = pc["active"]
+    if step == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if step == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    # decode: one token per request; attention reads the cache (memory-bound,
+    # the flops term is the projections)
+    return 2.0 * n_act * shape.global_batch
+
+
+def moe_flops_artifact(cfg, shape, step: str) -> float:
+    """CPU-backend ragged_dot artifact: dense-all-experts minus grouped."""
+    if not cfg.moe.num_experts:
+        return 0.0
+    d, ff = cfg.d_model, cfg.d_ff
+    tokens = shape.global_batch * (shape.seq_len if step != "serve" else 1)
+    per_tok_dense = cfg.num_layers * cfg.moe.num_experts * 3 * d * ff * 2
+    per_tok_grouped = cfg.num_layers * cfg.moe.top_k * 3 * d * ff * 2
+    # fed: L=4 local fwd+bwd passes over ~the same global token budget
+    mult = {"train": 3.0, "prefill": 1.0, "serve": 1.0, "fed": 12.0}[step]
+    return (per_tok_dense - per_tok_grouped) * tokens * mult
+
+
+# --------------------------------------------------------------------------
+# Table builder
+# --------------------------------------------------------------------------
+
+def load_records(results_dir: str = RESULTS_DIR) -> List[Dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    if "skipped" in rec or "error" in rec:
+        return None
+    arch = get_arch(rec["arch"])
+    cfg = arch.config
+    if rec.get("variant", "").startswith("sliding_window"):
+        cfg = cfg.replace(sliding_window=4096)
+    shape = INPUT_SHAPES[rec["shape"]]
+    step = rec["step"]
+    ndev = rec["num_devices"]
+
+    hlo_flops = rec["flops_per_device"]
+    # gshard dispatch does not use ragged_dot; its dense one-hot einsums are
+    # the real TPU cost of that formulation — no artifact to subtract.
+    if "moe_gshard" in rec.get("variant", ""):
+        artifact = 0.0
+    else:
+        artifact = moe_flops_artifact(cfg, shape, step) / ndev
+    hlo_flops_corr = max(hlo_flops - artifact, hlo_flops * 0.02)
+
+    t_comp = hlo_flops_corr / PEAK_FLOPS
+    # memory term: fused (TPU-fusion) model; the raw per-op bound is kept as
+    # t_memory_upper_s. Old records without the fused field fall back to raw.
+    mem_bytes = rec.get("hbm_bytes_fused_per_device",
+                        rec["hbm_bytes_per_device"])
+    t_mem = mem_bytes / HBM_BW
+    t_mem_upper = rec["hbm_bytes_per_device"] / HBM_BW
+    t_coll = rec["collective_total_per_device"] / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape, step)
+    ratio = mf / max(hlo_flops_corr * ndev, 1.0)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "step": step, "variant": rec.get("variant", "base"),
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_memory_upper_s": t_mem_upper, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf, "hlo_flops_dev": hlo_flops,
+        "hlo_flops_dev_corrected": hlo_flops_corr,
+        "useful_ratio": ratio,
+        "state_gib_dev": rec["state_bytes_per_device"] / 2 ** 30,
+    }
+
+
+def run(quick: bool = False) -> List[str]:
+    rows = []
+    for rec in load_records():
+        r = roofline_row(rec)
+        if r is None:
+            continue
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        rows.append(
+            f"{name},0,"
+            f"compute_s={r['t_compute_s']:.3e};mem_s={r['t_memory_s']:.3e};"
+            f"coll_s={r['t_collective_s']:.3e};dominant={r['dominant']};"
+            f"useful={r['useful_ratio']:.3f};state_gib={r['state_gib_dev']:.2f}")
+    if not rows:
+        rows.append("roofline_pending,0,run `python -m repro.launch.dryrun"
+                    " --all --both-meshes --out benchmarks/results/dryrun`")
+    return rows
+
+
+def markdown_table(results_dir: str = RESULTS_DIR,
+                   mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | step | compute s | memory s | collective s | "
+        "dominant | useful | GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_records(results_dir):
+        r = roofline_row(rec)
+        if r is None or r["mesh"] != mesh:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} "
+            f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+            f"| {r['t_collective_s']:.2e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['state_gib_dev']:.2f} |")
+    return "\n".join(lines)

@@ -1,0 +1,25 @@
+"""Uncertainty-aware serving: posterior-sample (BMA) batched decoding.
+
+Wraps repro.launch.serve: decodes with multiple posterior samples and shows
+the predictive-entropy safety signal — high entropy -> abstain/escalate,
+the serving-side counterpart of the paper's calibration claim.
+
+    PYTHONPATH=src python examples/bayesian_serving.py --arch qwen2.5-14b
+"""
+import argparse
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    args, _ = ap.parse_known_args()
+    sys.argv = [sys.argv[0], "--arch", args.arch, "--trim", "--batch", "4",
+                "--steps", "16", "--samples", "3"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro — CD-BFL: Compressed Decentralized Bayesian Federated Learning.
+
+A production-grade JAX framework reproducing and extending Barbieri et al.
+(2024), "Compressed Bayesian Federated Learning for Reliable Passive Radio
+Sensing in Industrial IoT", scaled to TPU multi-pod meshes.
+"""
+
+__version__ = "0.1.0"

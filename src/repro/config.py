@@ -1,0 +1,195 @@
+"""Configuration system.
+
+Plain dataclasses (no external deps), a registry keyed by ``--arch`` id, and
+the four assigned input shapes. Every architecture config module in
+``repro.configs`` registers itself at import via :func:`register_arch`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+
+# --------------------------------------------------------------------------
+# Model configuration
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0            # routed experts (0 = dense MLP)
+    num_shared_experts: int = 0     # always-on experts (DeepSeek style)
+    top_k: int = 2
+    aux_loss_weight: float = 0.01   # router load-balance loss
+    # "ragged": sort + grouped GEMM (ragged_dot) — exact, no drops, but
+    #   GSPMD cannot partition the global sort (per-layer all-reduce of the
+    #   full activation — see EXPERIMENTS §Perf iter 2b).
+    # "gshard": capacity-based one-hot dispatch einsums — expert-parallel
+    #   friendly (dispatch lowers to all-to-all-ish movement), token drops
+    #   beyond capacity_factor.
+    impl: str = "ragged"
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"           # dense | moe | hybrid | ssm | vlm | audio | lenet
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0               # 0 -> d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    max_seq_len: int = 8192
+    # attention
+    qkv_bias: bool = False          # Qwen2-style
+    sliding_window: int = 0         # 0 = full attention
+    rope_theta: float = 10000.0
+    # MoE
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    # MLA (DeepSeek-V2): 0 disables, >0 is the KV LoRA/latent rank
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    rope_head_dim: int = 64         # decoupled rope dims for MLA
+    # hybrid (RecurrentGemma / Griffin): block pattern, e.g. ("rec","rec","attn")
+    block_pattern: Tuple[str, ...] = ()
+    rglru_dim: int = 0              # 0 -> d_model
+    local_attn_window: int = 2048
+    # xLSTM
+    mlstm_ratio: int = 7            # mLSTM blocks per sLSTM block
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    encoder_seq_len: int = 1500     # stubbed frame-embedding length
+    # VLM stub frontend
+    num_image_patches: int = 0      # prepended patch embeddings per sample
+    # training-path memory control
+    attn_impl: str = "auto"         # naive | chunked | auto (chunked iff S >= chunk)
+    chunk_size: int = 512
+    # norms / activations
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    act: str = "silu"
+    dtype: Any = "bfloat16"
+    # LeNet (radar) specific
+    input_hw: Tuple[int, int] = (0, 0)
+    num_classes: int = 0
+    # layer scanning for deep stacks
+    scan_layers: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# --------------------------------------------------------------------------
+# Federated / CD-BFL configuration (the paper's knobs)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FedConfig:
+    num_nodes: int = 10             # K
+    topology: str = "full"          # full | ring | grid | star
+    mixing: str = "metropolis"      # metropolis | max_degree | uniform
+    local_steps: int = 8            # L (paper sweet spot)
+    zeta: float = 0.03              # consensus mixing weight
+    eta: float = 1e-4               # SGLD learning rate
+    temperature: float = 1.0        # posterior tempering (1.0 = paper)
+    burn_in: int = 700              # T_b
+    rounds: int = 800               # T
+    # compression
+    compressor: str = "block_topk"  # identity | topk | block_topk | qsgd | sign | randk
+    compress_ratio: float = 0.01    # paper: 1% of parameters
+    qsgd_levels: int = 16
+    block_size: int = 1024          # block-local top-k granularity
+    min_dense_size: int = 0         # leaves smaller than this sent dense
+    algorithm: str = "cdbfl"        # cdbfl | dsgld | cffl | sgld
+    control_dtype: str = "float32"  # v / v̄ storage (bfloat16 halves fed state)
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    global_batch: int = 256
+    seq_len: int = 4096
+    steps: int = 100
+    log_every: int = 10
+    optimizer: str = "sgld"         # sgld | sgd | adamw
+    lr: float = 1e-4
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0
+    warmup_steps: int = 0
+    param_dtype: Any = "float32"
+    remat: bool = False
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+    fed_axis: str = "data"          # mesh axis that carries federated nodes
+    fsdp_axis: str = "data"         # axis params are fully-sharded over
+    model_axis: str = "model"
+
+
+# --------------------------------------------------------------------------
+# Input shapes (assigned)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# --------------------------------------------------------------------------
+# Architecture registry
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    config: ModelConfig
+    reduced: ModelConfig            # smoke-test variant (<=2 layers, d_model<=512)
+    source: str                     # citation from the assignment table
+    notes: str = ""
+    # shapes this arch skips (with reason), e.g. {"long_500k": "full attention"}
+    skips: Dict[str, str] = field(default_factory=dict)
+
+
+_ARCHS: Dict[str, ArchSpec] = {}
+
+
+def register_arch(spec: ArchSpec) -> ArchSpec:
+    _ARCHS[spec.arch_id] = spec
+    return spec
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    _ensure_configs_imported()
+    if arch_id not in _ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCHS)}")
+    return _ARCHS[arch_id]
+
+
+def list_archs():
+    _ensure_configs_imported()
+    return sorted(_ARCHS)
+
+
+def _ensure_configs_imported():
+    # configs register themselves on import
+    import repro.configs  # noqa: F401

@@ -1,0 +1,14 @@
+"""Architecture configs. Importing this package registers all archs."""
+from repro.configs import (  # noqa: F401
+    lenet_radar,
+    recurrentgemma_9b,
+    deepseek_v2_236b,
+    mistral_large_123b,
+    llava_next_mistral_7b,
+    grok_1_314b,
+    yi_9b,
+    xlstm_1_3b,
+    smollm_135m,
+    whisper_tiny,
+    qwen2_5_14b,
+)

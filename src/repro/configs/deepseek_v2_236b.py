@@ -1,0 +1,38 @@
+"""deepseek-v2-236b [moe]: 60L d_model=5120 128H (GQA kv=128) d_ff=1536
+vocab=102400, MoE 160 routed experts top-6 + 2 shared — MLA kv_lora=512.
+[arXiv:2405.04434]"""
+from repro.config import ArchSpec, ModelConfig, MoEConfig, register_arch
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,
+    head_dim=128,
+    d_ff=1536,
+    vocab_size=102400,
+    moe=MoEConfig(num_experts=160, num_shared_experts=2, top_k=6),
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+    rope_head_dim=64,
+)
+
+REDUCED = CONFIG.replace(
+    name="deepseek-v2-reduced",
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
+    d_ff=64, vocab_size=512,
+    moe=MoEConfig(num_experts=4, num_shared_experts=1, top_k=2),
+    kv_lora_rank=32, q_lora_rank=48, rope_head_dim=16,
+)
+
+register_arch(ArchSpec(
+    arch_id="deepseek-v2-236b",
+    config=CONFIG,
+    reduced=REDUCED,
+    source="arXiv:2405.04434 (DeepSeek-V2)",
+    notes="MLA latent cache (512+64 per token) keeps decode caches small; "
+          "long_500k runs the MLA decode path (per-token cost O(S·rank), "
+          "cache linear in S at rank size — the arch's own long-context story).",
+))

@@ -1,0 +1,32 @@
+"""grok-1-314b [moe]: 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8 experts top-2. [hf:xai-org/grok-1]"""
+from repro.config import ArchSpec, ModelConfig, MoEConfig, register_arch
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131072,
+    moe=MoEConfig(num_experts=8, num_shared_experts=0, top_k=2),
+    act="gelu",
+)
+
+REDUCED = CONFIG.replace(
+    name="grok-1-reduced",
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+    d_ff=256, vocab_size=512,
+    moe=MoEConfig(num_experts=4, num_shared_experts=0, top_k=2),
+)
+
+register_arch(ArchSpec(
+    arch_id="grok-1-314b",
+    config=CONFIG,
+    reduced=REDUCED,
+    source="hf:xai-org/grok-1",
+    notes="8-expert top-2 MoE with GQA. long_500k via sliding_window variant.",
+))

@@ -1,0 +1,92 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run pattern).
+
+Nothing here allocates device memory: dry-runs lower against these specs.
+
+* ``train``  — one global batch: {tokens, (patches|frames)}.
+* ``fed``    — CD-BFL round inputs: leading (K, L) minibatch stack per node.
+* ``serve``  — single decode step: (tokens (B,1), pos) + the KV/recurrent
+               cache specs from the model's ``init_decode_state`` (evaluated
+               shape-only via ``jax.eval_shape``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import InputShape, INPUT_SHAPES, get_arch
+from repro.models import get_model
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _lm_batch_specs(cfg, batch: int, seq: int) -> Dict[str, Any]:
+    if cfg.family == "lenet":
+        return {
+            "x": SDS((batch, *cfg.input_hw, 1), jnp.float32),
+            "y": SDS((batch,), jnp.int32),
+        }
+    if cfg.family == "audio":
+        return {
+            "frames": SDS((batch, cfg.encoder_seq_len, cfg.d_model), jnp.float32),
+            "tokens": SDS((batch, seq), jnp.int32),
+        }
+    if cfg.family == "vlm" and cfg.num_image_patches:
+        text = max(2, seq - cfg.num_image_patches)  # patches + text = seq
+        return {
+            "tokens": SDS((batch, text), jnp.int32),
+            "patches": SDS((batch, cfg.num_image_patches, cfg.d_model), jnp.float32),
+        }
+    return {"tokens": SDS((batch, seq), jnp.int32)}
+
+
+def train_input_specs(cfg, shape: InputShape) -> Dict[str, Any]:
+    return _lm_batch_specs(cfg, shape.global_batch, shape.seq_len)
+
+
+def fed_input_specs(cfg, shape: InputShape, fed_cfg) -> Dict[str, Any]:
+    """Per-round CD-BFL batches: leading (K, L); per-node batch = global/K."""
+    k, l = fed_cfg.num_nodes, fed_cfg.local_steps
+    per_node = max(1, shape.global_batch // k)
+    base = _lm_batch_specs(cfg, per_node, shape.seq_len)
+    return {
+        name: SDS((k, l) + s.shape, s.dtype) for name, s in base.items()
+    }
+
+
+def serve_input_specs(cfg, shape: InputShape,
+                      kv_dtype=jnp.bfloat16) -> Tuple[Dict[str, Any], Any]:
+    """Returns (step_inputs, cache_specs). Cache sized at shape.seq_len."""
+    model = get_model(cfg)
+    if model.init_decode_state is None:
+        raise ValueError(f"{cfg.name} has no decode step")
+    cache_specs = jax.eval_shape(
+        lambda: model.init_decode_state(shape.global_batch, shape.seq_len, kv_dtype)
+    )
+    step = {
+        "tokens": SDS((shape.global_batch, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+    }
+    return step, cache_specs
+
+
+def params_specs(cfg, seed: int = 0):
+    model = get_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(seed)))
+
+
+def input_specs(arch_id: str, shape_name: str, step: str = "train",
+                fed_cfg=None, reduced: bool = False):
+    """One-stop shop used by dryrun.py and the benchmarks."""
+    spec = get_arch(arch_id)
+    cfg = spec.reduced if reduced else spec.config
+    shape = INPUT_SHAPES[shape_name]
+    if step == "train":
+        return train_input_specs(cfg, shape)
+    if step == "fed":
+        assert fed_cfg is not None
+        return fed_input_specs(cfg, shape, fed_cfg)
+    if step == "serve":
+        return serve_input_specs(cfg, shape)
+    raise ValueError(step)

@@ -1,0 +1,27 @@
+"""The paper's own model: LeNet on 256×63 range-azimuth radar maps, R=10
+ROI classes, p ≈ 2.7M trainable parameters (§IV). [paper, Table I / §IV]"""
+from repro.config import ArchSpec, ModelConfig, register_arch
+
+CONFIG = ModelConfig(
+    name="lenet-radar",
+    family="lenet",
+    input_hw=(256, 63),
+    num_classes=10,
+    dtype="float32",
+)
+
+REDUCED = CONFIG.replace(name="lenet-radar-reduced", input_hw=(32, 16))
+
+register_arch(ArchSpec(
+    arch_id="lenet-radar",
+    config=CONFIG,
+    reduced=REDUCED,
+    source="Barbieri et al. 2024 §IV; LeCun et al. 1998 [32]",
+    notes="Paper's radar ROI classifier; the CD-BFL case-study model.",
+    skips={
+        "train_4k": "classifier, not an LM — trained via the radar pipeline",
+        "prefill_32k": "no sequence dimension",
+        "decode_32k": "no decode step",
+        "long_500k": "no decode step",
+    },
+))

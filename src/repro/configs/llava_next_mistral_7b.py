@@ -1,0 +1,36 @@
+"""llava-next-mistral-7b [vlm]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000 — anyres tiling (vision frontend stubbed: input_specs provides
+precomputed patch embeddings). [hf:llava-hf/llava-v1.6-mistral-7b-hf]"""
+from repro.config import ArchSpec, ModelConfig, register_arch
+
+# anyres: base 576 patches + up to 4 tiles -> we model 1152 patch tokens
+NUM_PATCHES = 1152
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    num_image_patches=NUM_PATCHES,
+)
+
+REDUCED = CONFIG.replace(
+    name="llava-next-reduced",
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+    d_ff=256, vocab_size=512, num_image_patches=16,
+)
+
+register_arch(ArchSpec(
+    arch_id="llava-next-mistral-7b",
+    config=CONFIG,
+    reduced=REDUCED,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+    notes="Backbone = Mistral-7B. ViT/projector stubbed per the brief: "
+          "input_specs() supplies (B, 1152, 4096) patch embeddings; text loss "
+          "masked to token positions. long_500k via sliding_window variant.",
+))

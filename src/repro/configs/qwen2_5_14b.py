@@ -1,0 +1,30 @@
+"""qwen2.5-14b [dense]: 48L d_model=5120 40H (GQA kv=8) d_ff=13824
+vocab=152064 — GQA with QKV bias. [hf:Qwen/Qwen2.5-0.5B]"""
+from repro.config import ArchSpec, ModelConfig, register_arch
+
+CONFIG = ModelConfig(
+    name="qwen2.5-14b",
+    family="dense",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=13824,
+    vocab_size=152064,
+    qkv_bias=True,
+)
+
+REDUCED = CONFIG.replace(
+    name="qwen2.5-reduced",
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+    d_ff=256, vocab_size=512,
+)
+
+register_arch(ArchSpec(
+    arch_id="qwen2.5-14b",
+    config=CONFIG,
+    reduced=REDUCED,
+    source="hf:Qwen/Qwen2.5-0.5B (family card)",
+    notes="Dense GQA with QKV bias. long_500k via sliding_window variant.",
+))

@@ -1,0 +1,34 @@
+"""recurrentgemma-9b [hybrid]: 38L d_model=4096 16H (GQA kv=1) d_ff=12288
+vocab=256000 — RG-LRU + local attention, pattern 1 attn : 2 recurrent.
+[arXiv:2402.19427]"""
+from repro.config import ArchSpec, ModelConfig, register_arch
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    block_pattern=("rec", "rec", "local_attn"),
+    rglru_dim=4096,
+    local_attn_window=2048,
+    act="gelu",
+)
+
+REDUCED = CONFIG.replace(
+    name="recurrentgemma-reduced",
+    num_layers=3, d_model=128, num_heads=4, num_kv_heads=1, d_ff=256,
+    vocab_size=512, rglru_dim=128, local_attn_window=32,
+)
+
+register_arch(ArchSpec(
+    arch_id="recurrentgemma-9b",
+    config=CONFIG,
+    reduced=REDUCED,
+    source="arXiv:2402.19427 (Griffin/RecurrentGemma)",
+    notes="Hybrid: RG-LRU recurrence makes long_500k decode O(1) state; "
+          "local attention window 2048 bounds the KV cache.",
+))

@@ -1,0 +1,39 @@
+"""whisper-tiny [audio]: 4L (enc + dec) d_model=384 6H (kv=6) d_ff=1536
+vocab=51865 — enc-dec, conv frontend stubbed (precomputed frame embeddings).
+[arXiv:2212.04356]"""
+from repro.config import ArchSpec, ModelConfig, register_arch
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    num_layers=4,
+    encoder_layers=4,
+    encoder_seq_len=1500,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    scan_layers=False,
+)
+
+REDUCED = CONFIG.replace(
+    name="whisper-reduced",
+    num_layers=2, encoder_layers=2, encoder_seq_len=64,
+    d_model=96, num_heads=3, num_kv_heads=3, d_ff=192, vocab_size=512,
+)
+
+register_arch(ArchSpec(
+    arch_id="whisper-tiny",
+    config=CONFIG,
+    reduced=REDUCED,
+    source="arXiv:2212.04356 (Whisper)",
+    notes="Enc-dec; mel+conv frontend stubbed per the brief — input_specs() "
+          "supplies (B, 1500, 384) frame embeddings. decode_32k lowers the "
+          "decoder self-attn cache at 32k (beyond the audio model's nominal "
+          "448 ctx but architecturally exercised).",
+    skips={
+        "long_500k": "enc-dec with full attention; no sub-quadratic variant "
+                     "in the family (see DESIGN.md §Shape skips)",
+    },
+))

@@ -1,0 +1,30 @@
+"""xlstm-1.3b [ssm]: 48L d_model=2048 4H (GQA kv=4) d_ff=0 vocab=50304 —
+sLSTM + mLSTM blocks (ratio 7 mLSTM : 1 sLSTM). [arXiv:2405.04517]"""
+from repro.config import ArchSpec, ModelConfig, register_arch
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,                 # blocks carry their own projections
+    vocab_size=50304,
+    mlstm_ratio=7,
+)
+
+REDUCED = CONFIG.replace(
+    name="xlstm-reduced",
+    num_layers=2, d_model=128, num_heads=2, num_kv_heads=2,
+    vocab_size=512, mlstm_ratio=1,
+)
+
+register_arch(ArchSpec(
+    arch_id="xlstm-1.3b",
+    config=CONFIG,
+    reduced=REDUCED,
+    source="arXiv:2405.04517 (xLSTM)",
+    notes="Recurrent-state decode: long_500k runs natively (O(1) state). "
+          "mLSTM trains in the stabilized parallel form, sLSTM via lax.scan.",
+))

@@ -1,0 +1,29 @@
+"""yi-9b [dense]: 48L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000 —
+llama-arch GQA. [arXiv:2403.04652]"""
+from repro.config import ArchSpec, ModelConfig, register_arch
+
+CONFIG = ModelConfig(
+    name="yi-9b",
+    family="dense",
+    num_layers=48,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=64000,
+)
+
+REDUCED = CONFIG.replace(
+    name="yi-reduced",
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+    d_ff=256, vocab_size=512,
+)
+
+register_arch(ArchSpec(
+    arch_id="yi-9b",
+    config=CONFIG,
+    reduced=REDUCED,
+    source="arXiv:2403.04652 (Yi)",
+    notes="Llama-style dense GQA. long_500k via sliding_window variant.",
+))

@@ -1,0 +1,21 @@
+"""Core: the paper's contribution — CD-BFL and its baselines."""
+from repro.core.compression import Compressor, make_compressor
+from repro.core.mixing import mixing_matrix, adjacency, spectral_gap
+from repro.core.fed_state import FedState, init_fed_state
+from repro.core.algorithms import (
+    make_cdbfl_round,
+    make_dsgld_round,
+    make_cffl_round,
+    make_sgld_step,
+    make_round_fn,
+    RoundMetrics,
+)
+from repro.core.posterior import SampleBank, bma_predict, point_predict
+from repro.core import calibration
+
+__all__ = [
+    "Compressor", "make_compressor", "mixing_matrix", "adjacency",
+    "spectral_gap", "FedState", "init_fed_state", "make_cdbfl_round",
+    "make_dsgld_round", "make_cffl_round", "make_sgld_step", "make_round_fn",
+    "RoundMetrics", "SampleBank", "bma_predict", "point_predict", "calibration",
+]

@@ -1,0 +1,342 @@
+"""Decentralized (Bayesian) FL round functions.
+
+Implements, mesh-agnostically (leading node axis ``K`` on every leaf):
+
+* ``cdbfl_round``  — the paper's Algorithm 1 (compressed Bayesian, L local steps)
+* ``dsgld_round``  — uncompressed decentralized SGLD baseline (paper Eq. 4)
+* ``cffl_round``   — CHOCO-SGD / compressed *frequentist* baseline [23]
+* ``sgld_step``    — centralized SGLD oracle (paper Eq. 2)
+
+All round functions share the signature
+
+    round_fn(state, batches, key) -> (state', metrics)
+
+where ``batches`` carries leading dims ``(K, L, ...)`` (local minibatch
+sequences per node). They are pure and jit/pjit-safe: under ``jax.jit`` with
+the node axis sharded over a mesh axis, the Ω-mixing einsum lowers to the
+collective schedule analyzed in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import Compressor
+from repro.core.fed_state import FedState
+from repro.utils.tree import tree_random_normal, split_key_like
+
+
+LossFn = Callable[[Any, Any, jax.Array], Tuple[jax.Array, Any]]
+
+
+# --------------------------------------------------------------------------
+# Shared pieces
+# --------------------------------------------------------------------------
+
+def _local_sgd(params, batches_l, key, loss_fn: LossFn, eta: float,
+               prior_weight: float, data_scale: float, num_steps_static: int):
+    """L plain SGD steps on one node (paper Eq. 5). ``batches_l`` leads with L.
+
+    The gradient is of f_k (paper Eq. 3): data_scale * NLL + prior_weight *
+    N(0,I) prior term. ``data_scale`` converts the minibatch mean NLL into an
+    estimate of the local-sum NLL (E_k); ``prior_weight`` is 1/K so the K
+    nodes jointly represent one prior.
+    """
+
+    def step(carry, batch):
+        p, k = carry
+        k, ksub = jax.random.split(k)
+
+        def f(pp):
+            nll, aux = loss_fn(pp, batch, ksub)
+            prior = sum(
+                jnp.sum(jnp.square(x.astype(jnp.float32)))
+                for x in jax.tree.leaves(pp)
+            )
+            return data_scale * nll + 0.5 * prior_weight * prior, aux
+
+        (loss, aux), grads = jax.value_and_grad(f, has_aux=True)(p)
+        p = jax.tree.map(lambda x, g: x - eta * g.astype(x.dtype), p, grads)
+        return (p, k), loss
+
+    (params, _), losses = jax.lax.scan(step, (params, key), batches_l,
+                                       length=num_steps_static)
+    return params, losses
+
+
+def _mix(omega: jax.Array, delta):
+    """Ω-weighted neighbor aggregation along the node axis (paper Eq. 8).
+
+    Dense formulation: lowers to an all-gather + local contraction when the
+    node axis is mesh-sharded. The ring-optimized ppermute variant lives in
+    repro.launch.sharding (perf pass).
+    """
+    return jax.tree.map(
+        lambda d: jnp.einsum(
+            "kj,j...->k...", omega.astype(jnp.float32), d.astype(jnp.float32)
+        ).astype(d.dtype),
+        delta,
+    )
+
+
+def _langevin_noise(key, tree, eta: float, temperature: float):
+    scale = jnp.sqrt(2.0 * eta * temperature)
+    return tree_random_normal(key, tree, scale=scale, dtype=jnp.float32)
+
+
+class RoundMetrics(NamedTuple):
+    loss: jax.Array            # (K, L) local losses
+    consensus_error: jax.Array  # scalar: mean ||θ_k - θ̄||²
+    delta_norm: jax.Array      # scalar: mean ||Δθ_k||²
+
+
+def _consensus_error(params):
+    def leaf(x):
+        mean = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
+        return jnp.sum(jnp.square(x.astype(jnp.float32) - mean))
+    return sum(jax.tree.leaves(jax.tree.map(leaf, params)))
+
+
+def _sq_norm(tree):
+    return sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)
+    )
+
+
+# --------------------------------------------------------------------------
+# CD-BFL — the paper's Algorithm 1
+# --------------------------------------------------------------------------
+
+def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
+                     data_scale: float = 1.0, mixer=None):
+    """Build the jit-able CD-BFL round function.
+
+    One round = L local SGLD-style SGD steps per node, compressed residual
+    exchange, CHOCO control-variate bookkeeping, consensus correction and
+    Langevin noise injection (paper Eqs. 5-9).
+
+    ``mixer``: optional mix(tree)->tree override (e.g. the circulant ring
+    mixer from repro.core.gossip — collective-permutes instead of the dense
+    einsum's all-gather when the node axis is mesh-sharded).
+    """
+    eta = fed_cfg.eta
+    zeta = fed_cfg.zeta
+    K = fed_cfg.num_nodes
+    L = fed_cfg.local_steps
+    import numpy as _np
+    omega_np = _np.asarray(omega)
+    omega = jnp.asarray(omega, jnp.float32)
+    if mixer is None:
+        from repro.core.gossip import make_mixer
+        mixer = make_mixer(omega_np, fed_cfg.topology)
+    prior_weight = 1.0 / K
+
+    def round_fn(state: FedState, batches, key) -> Tuple[FedState, RoundMetrics]:
+        kql, knoise = jax.random.split(key)
+        node_keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
+            state.key, state.round
+        )
+
+        # -- Eq. 5: L local steps on every node (vmapped over K) -------------
+        local = partial(
+            _local_sgd, loss_fn=loss_fn, eta=eta,
+            prior_weight=prior_weight, data_scale=data_scale,
+            num_steps_static=L,
+        )
+        theta_L, losses = jax.vmap(local)(state.params, batches, node_keys)
+
+        # -- Eq. 6: compressed residual vs control sequence ------------------
+        residual = jax.tree.map(lambda t, v: t - v.astype(t.dtype), theta_L,
+                                state.v)
+        delta = compressor(residual, kql)
+
+        # -- Eq. 7 / Eq. 8: control sequences (stored in control_dtype) ------
+        v_new = jax.tree.map(lambda v, d: (v + d.astype(v.dtype)), state.v, delta)
+        mixed = mixer(delta)
+        v_bar_new = jax.tree.map(lambda vb, m: (vb + m.astype(vb.dtype)),
+                                 state.v_bar, mixed)
+
+        # -- Eq. 9: consensus correction + Langevin noise --------------------
+        noise = _langevin_noise(knoise, theta_L, eta, fed_cfg.temperature)
+        params_new = jax.tree.map(
+            lambda t, vb, v, n: (
+                t.astype(jnp.float32)
+                + zeta * (vb.astype(jnp.float32) - v.astype(jnp.float32))
+                + n
+            ).astype(t.dtype),
+            theta_L, v_bar_new, v_new, noise,
+        )
+
+        metrics = RoundMetrics(
+            loss=losses,
+            consensus_error=_consensus_error(params_new) / K,
+            delta_norm=_sq_norm(delta) / K,
+        )
+        new_state = FedState(
+            params=params_new, v=v_new, v_bar=v_bar_new,
+            opt_state=state.opt_state, key=state.key, round=state.round + 1,
+        )
+        return new_state, metrics
+
+    return round_fn
+
+
+# --------------------------------------------------------------------------
+# DSGLD — uncompressed decentralized Bayesian baseline (Eq. 4)
+# --------------------------------------------------------------------------
+
+def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0):
+    """One DSGLD iteration: θ_{k,t+1} = Σ_j ω_kj θ_j - η ∇f_k + √(2η) ξ.
+
+    For fairness against CD-BFL with L local steps, ``batches`` still has the
+    (K, L, ...) layout and we take the first minibatch (L is 1 per exchange in
+    DSGLD); the driver calls it L times per CD-BFL round when matching
+    gradient budgets.
+    """
+    eta = fed_cfg.eta
+    K = fed_cfg.num_nodes
+    omega = jnp.asarray(omega, jnp.float32)
+    prior_weight = 1.0 / K
+
+    def round_fn(state: FedState, batches, key) -> Tuple[FedState, RoundMetrics]:
+        knoise, kgrad = jax.random.split(key)
+        batch0 = jax.tree.map(lambda b: b[:, 0], batches)  # (K, ...)
+
+        def node_grad(p, b, k):
+            def f(pp):
+                nll, _ = loss_fn(pp, b, k)
+                prior = sum(
+                    jnp.sum(jnp.square(x.astype(jnp.float32)))
+                    for x in jax.tree.leaves(pp)
+                )
+                return data_scale * nll + 0.5 * prior_weight * prior
+            return jax.value_and_grad(f)(p)
+
+        node_keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
+            state.key, state.round
+        )
+        losses, grads = jax.vmap(node_grad)(state.params, batch0, node_keys)
+
+        mixed = _mix(omega, state.params)       # full θ exchange (uncompressed)
+        noise = _langevin_noise(knoise, state.params, eta, fed_cfg.temperature)
+        params_new = jax.tree.map(
+            lambda m, g, n: (
+                m.astype(jnp.float32) - eta * g.astype(jnp.float32) + n
+            ).astype(m.dtype),
+            mixed, grads, noise,
+        )
+        metrics = RoundMetrics(
+            loss=losses[:, None],
+            consensus_error=_consensus_error(params_new) / K,
+            delta_norm=_sq_norm(state.params) / K,
+        )
+        return (
+            FedState(params_new, state.v, state.v_bar, state.opt_state,
+                     state.key, state.round + 1),
+            metrics,
+        )
+
+    return round_fn
+
+
+# --------------------------------------------------------------------------
+# CF-FL — CHOCO-SGD, compressed frequentist baseline [23]
+# --------------------------------------------------------------------------
+
+def make_cffl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
+                    data_scale: float = 1.0):
+    """CD-BFL minus the Langevin noise and prior: a point-estimate learner."""
+    eta = fed_cfg.eta
+    zeta = fed_cfg.zeta
+    K = fed_cfg.num_nodes
+    L = fed_cfg.local_steps
+    omega = jnp.asarray(omega, jnp.float32)
+
+    def round_fn(state: FedState, batches, key) -> Tuple[FedState, RoundMetrics]:
+        kq, _ = jax.random.split(key)
+        node_keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
+            state.key, state.round
+        )
+        local = partial(
+            _local_sgd, loss_fn=loss_fn, eta=eta,
+            prior_weight=0.0, data_scale=data_scale, num_steps_static=L,
+        )
+        theta_L, losses = jax.vmap(local)(state.params, batches, node_keys)
+
+        residual = jax.tree.map(lambda t, v: t - v.astype(t.dtype), theta_L,
+                                state.v)
+        delta = compressor(residual, kq)
+        v_new = jax.tree.map(lambda v, d: (v + d.astype(v.dtype)), state.v, delta)
+        mixed = _mix(omega, delta)
+        v_bar_new = jax.tree.map(lambda vb, m: (vb + m.astype(vb.dtype)),
+                                 state.v_bar, mixed)
+        params_new = jax.tree.map(
+            lambda t, vb, v: (
+                t.astype(jnp.float32)
+                + zeta * (vb.astype(jnp.float32) - v.astype(jnp.float32))
+            ).astype(t.dtype),
+            theta_L, v_bar_new, v_new,
+        )
+        metrics = RoundMetrics(
+            loss=losses,
+            consensus_error=_consensus_error(params_new) / K,
+            delta_norm=_sq_norm(delta) / K,
+        )
+        return (
+            FedState(params_new, v_new, v_bar_new, state.opt_state,
+                     state.key, state.round + 1),
+            metrics,
+        )
+
+    return round_fn
+
+
+# --------------------------------------------------------------------------
+# Centralized SGLD oracle (Eq. 2) — sanity baseline on pooled data
+# --------------------------------------------------------------------------
+
+def make_sgld_step(loss_fn: LossFn, eta: float, temperature: float = 1.0,
+                   data_scale: float = 1.0):
+    def step(params, batch, key):
+        kgrad, knoise = jax.random.split(key)
+
+        def f(p):
+            nll, _ = loss_fn(p, batch, kgrad)
+            prior = sum(
+                jnp.sum(jnp.square(x.astype(jnp.float32)))
+                for x in jax.tree.leaves(p)
+            )
+            return data_scale * nll + 0.5 * prior
+
+        loss, grads = jax.value_and_grad(f)(params)
+        noise = _langevin_noise(knoise, params, eta, temperature)
+        params = jax.tree.map(
+            lambda x, g, n: (
+                x.astype(jnp.float32) - eta * g.astype(jnp.float32) + n
+            ).astype(x.dtype),
+            params, grads, noise,
+        )
+        return params, loss
+
+    return step
+
+
+ALGORITHMS = {
+    "cdbfl": make_cdbfl_round,
+    "dsgld": make_dsgld_round,
+    "cffl": make_cffl_round,
+}
+
+
+def make_round_fn(algorithm: str, loss_fn: LossFn, fed_cfg, omega,
+                  compressor: Compressor = None, data_scale: float = 1.0):
+    if algorithm == "cdbfl":
+        return make_cdbfl_round(loss_fn, fed_cfg, omega, compressor, data_scale)
+    if algorithm == "dsgld":
+        return make_dsgld_round(loss_fn, fed_cfg, omega, data_scale)
+    if algorithm == "cffl":
+        return make_cffl_round(loss_fn, fed_cfg, omega, compressor, data_scale)
+    raise ValueError(f"unknown algorithm {algorithm!r}")

@@ -1,0 +1,84 @@
+"""Calibration metrics: ECE (paper Eq. 10), reliability diagrams, NLL, Brier.
+
+All functions take predicted probabilities (N, C) and integer labels (N,).
+Jit-safe (static number of bins).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ReliabilityBins(NamedTuple):
+    bin_confidence: jnp.ndarray   # (O,) mean confidence per bin
+    bin_accuracy: jnp.ndarray     # (O,) mean accuracy per bin
+    bin_counts: jnp.ndarray       # (O,) samples per bin
+    edges: jnp.ndarray            # (O+1,)
+
+
+def reliability_bins(probs: jnp.ndarray, labels: jnp.ndarray,
+                     num_bins: int = 10) -> ReliabilityBins:
+    probs = probs.astype(jnp.float32)
+    conf = jnp.max(probs, axis=-1)
+    pred = jnp.argmax(probs, axis=-1)
+    correct = (pred == labels).astype(jnp.float32)
+    edges = jnp.linspace(0.0, 1.0, num_bins + 1)
+    # bin index: right-inclusive bins like Guo et al. '17
+    idx = jnp.clip(jnp.ceil(conf * num_bins).astype(jnp.int32) - 1, 0, num_bins - 1)
+    counts = jnp.zeros(num_bins).at[idx].add(1.0)
+    conf_sum = jnp.zeros(num_bins).at[idx].add(conf)
+    acc_sum = jnp.zeros(num_bins).at[idx].add(correct)
+    safe = jnp.maximum(counts, 1.0)
+    return ReliabilityBins(conf_sum / safe, acc_sum / safe, counts, edges)
+
+
+def ece(probs: jnp.ndarray, labels: jnp.ndarray, num_bins: int = 10) -> jnp.ndarray:
+    """Expected Calibration Error (paper Eq. 10)."""
+    bins = reliability_bins(probs, labels, num_bins)
+    total = jnp.sum(bins.bin_counts)
+    w = bins.bin_counts / jnp.maximum(total, 1.0)
+    return jnp.sum(w * jnp.abs(bins.bin_accuracy - bins.bin_confidence))
+
+
+def mce(probs: jnp.ndarray, labels: jnp.ndarray, num_bins: int = 10) -> jnp.ndarray:
+    """Maximum Calibration Error (worst bin)."""
+    bins = reliability_bins(probs, labels, num_bins)
+    gaps = jnp.abs(bins.bin_accuracy - bins.bin_confidence)
+    return jnp.max(jnp.where(bins.bin_counts > 0, gaps, 0.0))
+
+
+def accuracy(probs: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(probs, axis=-1) == labels).astype(jnp.float32))
+
+
+def nll(probs: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    p = jnp.take_along_axis(probs, labels[:, None], axis=-1)[:, 0]
+    return -jnp.mean(jnp.log(jnp.maximum(p, 1e-12)))
+
+
+def brier(probs: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    onehot = jax.nn.one_hot(labels, probs.shape[-1], dtype=jnp.float32)
+    return jnp.mean(jnp.sum(jnp.square(probs - onehot), axis=-1))
+
+
+def predictive_entropy(probs: jnp.ndarray) -> jnp.ndarray:
+    """Mean predictive entropy — the uncertainty signal for safety gating."""
+    return -jnp.mean(jnp.sum(probs * jnp.log(jnp.maximum(probs, 1e-12)), axis=-1))
+
+
+def render_reliability(bins: ReliabilityBins, title: str = "") -> str:
+    """ASCII reliability diagram (paper Fig. 4) for logs/EXPERIMENTS.md."""
+    import numpy as np
+    conf = np.asarray(bins.bin_confidence)
+    acc = np.asarray(bins.bin_accuracy)
+    cnt = np.asarray(bins.bin_counts)
+    lines = [f"reliability: {title}", "bin    conf    acc     gap     n"]
+    for i in range(len(cnt)):
+        if cnt[i] == 0:
+            continue
+        lines.append(
+            f"{i:3d}  {conf[i]:6.3f}  {acc[i]:6.3f}  {acc[i]-conf[i]:+6.3f}  {int(cnt[i]):5d}"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,207 @@
+"""Compression operators Q(.) for CD-BFL (paper Eq. 6).
+
+All operators satisfy the standard delta-contraction contract used by the
+CHOCO/Koloskova analysis the paper builds on:
+
+    E ||Q(x) - x||^2  <=  (1 - delta) ||x||^2,   0 < delta <= 1
+
+Operators act per-leaf on pytrees and are fully jittable (static shapes: the
+sparse operators return *dense masked* tensors; the wire-format byte count is
+reported separately by :func:`compressed_bytes`, since on TPU the ``(values,
+indices)`` pair is materialized only at the ICI/DCN boundary).
+
+TPU adaptation (see DESIGN.md §2): exact *global* top-k needs a global sort —
+hostile to VMEM tiling. ``block_topk`` keeps the top ``k_b`` entries of every
+aligned block instead, which is computable tile-locally (Pallas kernel in
+``repro.kernels.topk``) and satisfies the same contraction bound with
+delta = ratio.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.tree import split_key_like, tree_count
+
+
+# --------------------------------------------------------------------------
+# Leaf-level operators. Each takes (x, key) -> dense-masked x_hat.
+# --------------------------------------------------------------------------
+
+def _identity_leaf(x, key, **_):
+    return x
+
+
+def _topk_leaf(x, key, *, ratio: float, **_):
+    """Exact global top-|.| sparsification of a leaf (reference semantics)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    k = max(1, int(np.ceil(ratio * n)))
+    if k >= n:
+        return x
+    mag = jnp.abs(flat)
+    # threshold = k-th largest magnitude
+    thresh = jax.lax.top_k(mag, k)[0][-1]
+    mask = mag >= thresh
+    return (flat * mask).reshape(x.shape)
+
+
+def _block_topk_leaf(x, key, *, ratio: float, block_size: int, **_):
+    """Block-local top-k: each contiguous block keeps its own top entries.
+
+    Same sparsity budget as global top-k but the selection is local to a
+    block (VMEM-tile computable on TPU). Pads the tail block with zeros.
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    if n <= block_size:
+        return _topk_leaf(x, key, ratio=ratio)
+    nb = -(-n // block_size)
+    padded = jnp.pad(flat, (0, nb * block_size - n))
+    blocks = padded.reshape(nb, block_size)
+    k = max(1, int(np.ceil(ratio * block_size)))
+    mag = jnp.abs(blocks)
+    thresh = jax.lax.top_k(mag, k)[0][:, -1:]
+    out = jnp.where(mag >= thresh, blocks, 0.0)
+    return out.reshape(-1)[:n].reshape(x.shape)
+
+
+def _randk_leaf(x, key, *, ratio: float, **_):
+    """Random-k sparsification with unbiased 1/ratio rescaling."""
+    flat = x.reshape(-1)
+    mask = jax.random.bernoulli(key, p=ratio, shape=flat.shape)
+    return (flat * mask / ratio).reshape(x.shape)
+
+
+def _sign_leaf(x, key, **_):
+    """1-bit sign compression scaled by mean magnitude (SignSGD w/ norm)."""
+    scale = jnp.mean(jnp.abs(x))
+    return jnp.sign(x) * scale
+
+
+def _qsgd_omega(n: int, levels: int) -> float:
+    """QSGD variance bound: E||q(x)-x||^2 <= omega ||x||^2 (Alistarh '17,
+    Thm 3.2): omega = min(n/s^2, sqrt(n)/s)."""
+    return float(min(n / levels ** 2, np.sqrt(n) / levels))
+
+
+def _qsgd_leaf(x, key, *, levels: int, **_):
+    """QSGD stochastic quantization (Alistarh et al. '17), per-leaf norm.
+
+    Scaled by 1/(1+omega) so the operator is a delta-contraction with
+    delta = 1/(1+omega) — the form CHOCO-style error feedback requires
+    (an *unbiased* high-variance q would break the control sequences).
+    """
+    norm = jnp.linalg.norm(x.reshape(-1).astype(jnp.float32)) + 1e-12
+    scaled = jnp.abs(x.astype(jnp.float32)) / norm * levels
+    lower = jnp.floor(scaled)
+    prob = scaled - lower
+    rnd = jax.random.uniform(key, x.shape)
+    q = lower + (rnd < prob).astype(jnp.float32)
+    omega = _qsgd_omega(x.size, levels)
+    out = jnp.sign(x) * q * norm / levels / (1.0 + omega)
+    return out.astype(x.dtype)
+
+
+_LEAF_OPS: Dict[str, Callable] = {
+    "identity": _identity_leaf,
+    "topk": _topk_leaf,
+    "block_topk": _block_topk_leaf,
+    "randk": _randk_leaf,
+    "sign": _sign_leaf,
+    "qsgd": _qsgd_leaf,
+}
+
+
+@dataclass(frozen=True)
+class Compressor:
+    """Pytree compression operator with wire-cost accounting."""
+
+    name: str = "block_topk"
+    ratio: float = 0.01
+    block_size: int = 1024
+    qsgd_levels: int = 16
+    min_dense_size: int = 0   # leaves with fewer elements are passed through
+
+    def __call__(self, tree, key):
+        """Apply Q leaf-wise. ``key`` seeds the stochastic operators."""
+        if self.name in ("block_topk_pallas", "qsgd_pallas"):
+            return self._call_pallas(tree, key)
+        op = _LEAF_OPS[self.name]
+        keys = split_key_like(key, tree)
+
+        def leaf(x, k):
+            if self.min_dense_size and x.size <= self.min_dense_size:
+                return x
+            return op(
+                x, k,
+                ratio=self.ratio,
+                block_size=self.block_size,
+                levels=self.qsgd_levels,
+            )
+
+        return jax.tree.map(leaf, tree, keys)
+
+    def _call_pallas(self, tree, key):
+        """Pallas TPU kernel path (interpret=True on CPU)."""
+        from repro.kernels import ops as kops
+        keys = split_key_like(key, tree)
+
+        def leaf(x, k):
+            if self.min_dense_size and x.size <= self.min_dense_size:
+                return x
+            if self.name == "block_topk_pallas":
+                return kops.block_topk(x, ratio=self.ratio,
+                                       block_size=self.block_size)
+            return kops.qsgd(x, k, levels=self.qsgd_levels)
+
+        return jax.tree.map(leaf, tree, keys)
+
+    # -- wire-format accounting (bytes actually sent over the scarce link) --
+    def wire_bytes(self, tree, elem_bytes: int = 4, index_bytes: int = 4) -> int:
+        n = tree_count(tree)
+        name = self.name.replace("_pallas", "")
+        if name == "identity":
+            return n * elem_bytes
+        if name in ("topk", "block_topk", "randk"):
+            k = int(np.ceil(self.ratio * n))
+            # values + indices (block_topk indices are block-local -> 2 bytes
+            # suffice for block_size <= 65536, we count 2)
+            ib = 2 if self.name == "block_topk" else index_bytes
+            return k * (elem_bytes + ib)
+        if name == "sign":
+            return n // 8 + 4 * len(jax.tree.leaves(tree))
+        if name == "qsgd":
+            import math
+            bits = max(1, int(np.ceil(np.log2(self.qsgd_levels + 1))) + 1)
+            return n * bits // 8 + 4 * len(jax.tree.leaves(tree))
+        raise ValueError(self.name)
+
+    @property
+    def delta(self) -> float:
+        """Contraction constant (lower bound) for analysis/tests."""
+        name = self.name.replace("_pallas", "")
+        if name == "identity":
+            return 1.0
+        if name in ("topk", "block_topk", "randk"):
+            return self.ratio
+        if name == "sign":
+            return 1e-3  # depends on leaf kurtosis; loose bound
+        if name == "qsgd":
+            return 1e-3  # true delta is per-leaf: 1/(1+omega(n, levels))
+        raise ValueError(self.name)
+
+
+def make_compressor(fed_cfg) -> Compressor:
+    return Compressor(
+        name=fed_cfg.compressor,
+        ratio=fed_cfg.compress_ratio,
+        block_size=fed_cfg.block_size,
+        qsgd_levels=fed_cfg.qsgd_levels,
+        min_dense_size=fed_cfg.min_dense_size,
+    )

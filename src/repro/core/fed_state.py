@@ -1,0 +1,54 @@
+"""Federated state container for decentralized (Bayesian) FL.
+
+Every per-node quantity is a pytree whose leaves carry a leading node axis
+``K``. On a single host this axis is vmapped; on the production mesh it is
+sharded over the federated mesh axis (``data`` in-pod, ``pod`` across pods)
+so that "node k's replica" physically lives on one slice of the machine.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FedState(NamedTuple):
+    params: Any          # θ_k        leaves: (K, ...)
+    v: Any               # v_k        control sequence (paper Eq. 7)
+    v_bar: Any           # v̄_k       neighbor aggregate (paper Eq. 8)
+    opt_state: Any       # per-node optimizer state (frequentist baselines)
+    key: jax.Array       # (K, 2) per-node PRNG keys (uint32)
+    round: jax.Array     # scalar int32
+
+
+def stack_node_params(params_single, num_nodes: int, key=None, jitter: float = 0.0):
+    """Replicate single-model params to K nodes (optionally jittered inits)."""
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (num_nodes,) + x.shape), params_single
+    )
+    if key is not None and jitter > 0.0:
+        from repro.utils.tree import tree_random_normal
+        noise = tree_random_normal(key, stacked, scale=jitter, dtype=jnp.float32)
+        stacked = jax.tree.map(lambda x, n: x + n.astype(x.dtype), stacked, noise)
+    return stacked
+
+
+def init_fed_state(params_single, fed_cfg, opt_init=None, key=None) -> FedState:
+    key = key if key is not None else jax.random.PRNGKey(fed_cfg.seed)
+    kinit, kstack, knodes = jax.random.split(key, 3)
+    params = stack_node_params(params_single, fed_cfg.num_nodes, kstack, jitter=0.0)
+    cdtype = jnp.dtype(getattr(fed_cfg, "control_dtype", "float32"))
+    zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, cdtype), params)
+    opt_state = (
+        jax.vmap(opt_init)(params) if opt_init is not None else ()
+    )
+    node_keys = jax.random.split(knodes, fed_cfg.num_nodes)
+    return FedState(
+        params=params,
+        v=zeros,
+        v_bar=jax.tree.map(jnp.zeros_like, zeros),
+        opt_state=opt_state,
+        key=node_keys,
+        round=jnp.zeros((), jnp.int32),
+    )

@@ -1,0 +1,56 @@
+"""Gossip communicators: how Ω-mixing executes on the machine.
+
+* ``dense_mix`` — einsum with the full Ω (general graphs; on a mesh it
+  lowers to an all-gather along the fed axis: O(K·p) wire bytes).
+* ``ring_mix``  — exploits the circulant structure of a ring Ω:
+  ``w_self·x + w_side·(roll(x,+1) + roll(x,-1))`` along the node axis.
+  When that axis is mesh-sharded, GSPMD lowers the rolls to
+  collective-permutes: O(2·p) wire bytes regardless of K, and per-leaf
+  body shardings are untouched. The beyond-paper collective optimization
+  for CD-BFL on the production mesh (EXPERIMENTS §Perf pair 5).
+
+Both are numerically identical for ring topologies (Metropolis ring Ω is
+circulant with weights (w_self, w_side, w_side)).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_mix(omega, tree):
+    om = jnp.asarray(omega)
+    return jax.tree.map(
+        lambda d: jnp.einsum(
+            "kj,j...->k...", om.astype(jnp.float32), d.astype(jnp.float32)
+        ).astype(d.dtype),
+        tree,
+    )
+
+
+def ring_mix(omega: np.ndarray, tree):
+    """Circulant (ring) mixing via rolls along the leading node axis."""
+    k = omega.shape[0]
+    if k < 3:
+        return dense_mix(omega, tree)
+    w_self = float(omega[0, 0])
+    w_side = float(omega[0, 1])
+
+    def leaf(d):
+        x = d.astype(jnp.float32)
+        out = (w_self * x
+               + w_side * (jnp.roll(x, 1, axis=0) + jnp.roll(x, -1, axis=0)))
+        return out.astype(d.dtype)
+
+    return jax.tree.map(leaf, tree)
+
+
+def make_mixer(omega: np.ndarray, topology: str,
+               use_ring: bool = True):
+    """Returns mix(tree) -> tree (leaves lead with the node axis K)."""
+    if topology == "ring" and use_ring:
+        return lambda tree: ring_mix(np.asarray(omega), tree)
+    return lambda tree: dense_mix(omega, tree)

@@ -1,0 +1,81 @@
+"""Posterior sample bank + Bayesian model averaging.
+
+Gradient-based MCMC (SGLD family) treats post burn-in iterates as samples
+from p(θ|D). We keep a bounded reservoir of samples (thinned) and predict by
+averaging the *probabilities* (not logits) across samples — the standard BMA
+predictive distribution that gives the calibration gains the paper measures.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SampleBank:
+    """Host-side reservoir of posterior samples (thinned, post burn-in)."""
+
+    def __init__(self, burn_in: int, max_samples: int = 50, thin: int = 1):
+        self.burn_in = burn_in
+        self.max_samples = max_samples
+        self.thin = thin
+        self.samples: List[Any] = []
+        self._seen = 0
+
+    def maybe_add(self, round_idx: int, params) -> bool:
+        if round_idx < self.burn_in:
+            return False
+        self._seen += 1
+        if (self._seen - 1) % self.thin != 0:
+            return False
+        params = jax.tree.map(np.asarray, params)
+        if len(self.samples) >= self.max_samples:
+            # reservoir-style: drop the oldest (keeps a moving posterior window,
+            # which also tracks the paper's continual daily re-training)
+            self.samples.pop(0)
+        self.samples.append(params)
+        return True
+
+    def __len__(self):
+        return len(self.samples)
+
+
+def bma_predict(apply_fn: Callable, samples: List[Any], batch,
+                node_axis: Optional[int] = None) -> jnp.ndarray:
+    """Average softmax probabilities over posterior samples.
+
+    ``apply_fn(params, batch) -> logits``. If params carry a leading node
+    axis (decentralized setting), ``node_axis=0`` additionally averages over
+    nodes — each node's chain contributes samples, as in the paper's
+    evaluation of the device consensus model.
+    """
+    probs = None
+    n = 0
+    for params in samples:
+        if node_axis is not None:
+            logits = jax.vmap(lambda p: apply_fn(p, batch))(params)
+            p_s = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+            p_s = jnp.mean(p_s, axis=0)
+            n_s = 1
+        else:
+            logits = apply_fn(params, batch)
+            p_s = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+            n_s = 1
+        probs = p_s if probs is None else probs + p_s
+        n += n_s
+    if probs is None:
+        raise ValueError("empty sample bank")
+    return probs / n
+
+
+def point_predict(apply_fn: Callable, params, batch,
+                  node_axis: Optional[int] = None) -> jnp.ndarray:
+    """Frequentist prediction (CF-FL baseline): single-point softmax."""
+    if node_axis is not None:
+        logits = jax.vmap(lambda p: apply_fn(p, batch))(params)
+        return jnp.mean(
+            jax.nn.softmax(logits.astype(jnp.float32), axis=-1), axis=0
+        )
+    return jax.nn.softmax(apply_fn(params, batch).astype(jnp.float32), axis=-1)

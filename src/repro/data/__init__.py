@@ -1,0 +1,1 @@
+from repro.data import radar, partition, synthetic_lm  # noqa: F401

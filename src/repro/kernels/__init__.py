@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for CD-BFL's compute hot-spots.
+
+* block_topk — the paper's Q (top-k sparsification) as a VMEM-tile-local
+  threshold-bisection kernel (no sort).
+* fused_update — paper Eq. 9 (consensus correction + Langevin noise) in one
+  memory-bound pass.
+* qsgd — stochastic quantization (paper ref [26]) with contraction scaling.
+
+ops.py: jit'd wrappers (padding/tiling); ref.py: pure-jnp oracles.
+Validated with interpret=True on CPU; interpret=False on real TPU.
+EXAMPLE.md documents the layout convention.
+"""
+from repro.kernels import ops, ref  # noqa: F401

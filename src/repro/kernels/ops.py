@@ -1,0 +1,100 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle flattening/padding of arbitrary param leaves into the kernels' tiled
+2D layouts, and expose pytree-level entry points used by the CD-BFL round
+when ``use_pallas=True``. ``interpret=True`` everywhere on CPU (the brief's
+validation mode); on TPU the same code path sets interpret=False.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.block_topk import ROWS_PER_TILE, block_topk_pallas
+from repro.kernels.fused_update import TILE_C, TILE_R, fused_update_pallas
+from repro.kernels.qsgd import qsgd_pallas
+
+
+def _pad_to_2d(x: jnp.ndarray, cols: int, row_mult: int
+               ) -> Tuple[jnp.ndarray, int]:
+    """Flatten to (rows, cols), zero-padded; returns (x2d, orig_size)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    rows = -(-n // cols)
+    rows = -(-rows // row_mult) * row_mult
+    padded = jnp.zeros((rows * cols,), flat.dtype).at[:n].set(flat)
+    return padded.reshape(rows, cols), n
+
+
+def _unpad(x2d: jnp.ndarray, n: int, shape) -> jnp.ndarray:
+    return x2d.reshape(-1)[:n].reshape(shape)
+
+
+# --------------------------------------------------------------------------
+# block top-k
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("ratio", "block_size", "interpret"))
+def block_topk(x: jnp.ndarray, ratio: float = 0.01, block_size: int = 1024,
+               interpret: bool = True) -> jnp.ndarray:
+    """Leaf-level block top-k. Keeps ceil(ratio·block_size) per block."""
+    k = max(1, int(np.ceil(ratio * block_size)))
+    x2d, n = _pad_to_2d(x, block_size, ROWS_PER_TILE)
+    out = block_topk_pallas(x2d, k, interpret=interpret)
+    return _unpad(out, n, x.shape)
+
+
+# --------------------------------------------------------------------------
+# fused Eq. 9 update
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("zeta", "noise_scale", "interpret"))
+def fused_update(theta, vbar, v, noise, zeta: float, noise_scale: float,
+                 interpret: bool = True):
+    t2, n = _pad_to_2d(theta, TILE_C, TILE_R)
+    vb2, _ = _pad_to_2d(vbar, TILE_C, TILE_R)
+    v2, _ = _pad_to_2d(v, TILE_C, TILE_R)
+    n2, _ = _pad_to_2d(noise, TILE_C, TILE_R)
+    out = fused_update_pallas(t2, vb2, v2, n2, zeta, noise_scale,
+                              interpret=interpret)
+    return _unpad(out, n, theta.shape)
+
+
+# --------------------------------------------------------------------------
+# QSGD
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("levels", "interpret"))
+def qsgd(x, key, levels: int = 16, interpret: bool = True):
+    from repro.core.compression import _qsgd_omega
+    norm = jnp.linalg.norm(x.reshape(-1).astype(jnp.float32)).reshape(1, 1)
+    x2d, n = _pad_to_2d(x, TILE_C, TILE_R)
+    u = jax.random.uniform(key, x2d.shape, jnp.float32)
+    out = qsgd_pallas(x2d, u, norm, levels,
+                      omega=_qsgd_omega(int(np.prod(x.shape)), levels),
+                      interpret=interpret)
+    return _unpad(out, n, x.shape)
+
+
+# --------------------------------------------------------------------------
+# pytree-level CD-BFL entry points (used when FedConfig.use_pallas)
+# --------------------------------------------------------------------------
+
+def tree_block_topk(tree, ratio: float, block_size: int = 1024,
+                    interpret: bool = True):
+    return jax.tree.map(
+        lambda x: block_topk(x, ratio=ratio, block_size=block_size,
+                             interpret=interpret), tree)
+
+
+def tree_fused_update(theta_tree, vbar_tree, v_tree, noise_tree,
+                      zeta: float, noise_scale: float, interpret: bool = True):
+    return jax.tree.map(
+        lambda t, vb, v, n: fused_update(t, vb, v, n, zeta=zeta,
+                                         noise_scale=noise_scale,
+                                         interpret=interpret),
+        theta_tree, vbar_tree, v_tree, noise_tree)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_topk_ref(x2d: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Exact per-row top-k by magnitude (sort-based semantics)."""
+    mag = jnp.abs(x2d.astype(jnp.float32))
+    thresh = jax.lax.top_k(mag, k)[0][:, -1:]
+    return jnp.where(mag >= thresh, x2d, jnp.zeros_like(x2d))
+
+
+def block_topk_bisect_ref(x2d: jnp.ndarray, k: int, iters: int = 40
+                          ) -> jnp.ndarray:
+    """Bisection semantics — bit-exact oracle of the kernel's algorithm."""
+    mag = jnp.abs(x2d.astype(jnp.float32))
+    hi = jnp.max(mag, axis=1, keepdims=True) + 1.0
+    lo = jnp.zeros_like(hi)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((mag >= mid).astype(jnp.float32), axis=1, keepdims=True)
+        pred = cnt >= k
+        return jnp.where(pred, mid, lo), jnp.where(pred, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return jnp.where(mag >= lo, x2d, jnp.zeros_like(x2d))
+
+
+def fused_update_ref(theta, vbar, v, noise, zeta: float, noise_scale: float):
+    out = (theta.astype(jnp.float32)
+           + zeta * (vbar.astype(jnp.float32) - v.astype(jnp.float32))
+           + noise_scale * noise.astype(jnp.float32))
+    return out.astype(theta.dtype)
+
+
+def qsgd_ref(x, uniform, norm, levels: int, omega: float = 0.0):
+    xf = x.astype(jnp.float32)
+    n = norm.reshape(()) + 1e-12
+    scaled = jnp.abs(xf) / n * levels
+    q = jnp.floor(scaled + uniform.astype(jnp.float32))
+    return (jnp.sign(xf) * q * (n / levels / (1.0 + omega))).astype(x.dtype)

@@ -1,0 +1,3 @@
+# launch: mesh construction, sharding rules, dry-run and train/serve drivers.
+# NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import it only as an
+# entry point, never from library code.

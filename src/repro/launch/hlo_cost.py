@@ -1,0 +1,244 @@
+"""Post-optimization HLO cost model (per-device).
+
+``compiled.cost_analysis()`` on the CPU backend neither multiplies while-loop
+bodies by their trip count nor exposes collective traffic, so the roofline
+terms are derived here by walking the HLO text:
+
+* computations are parsed into (name -> ops);
+* the call graph (ENTRY -> while bodies × known_trip_count -> fusions/calls)
+  assigns an execution multiplier to every computation;
+* FLOPs: every ``dot`` counts 2 · prod(out_dims) · prod(contracting_dims)
+  (batch dims are part of out_dims — correct for dot_general);
+* HBM bytes: per top-level op, output + operand bytes (fusion internals are
+  skipped — only fusion boundaries move HBM traffic);
+* collective wire bytes: ring-algorithm factors over the parsed replica
+  group size g: all-gather/all-to-all (g-1)/g·out, reduce-scatter (g-1)·out
+  (out is the scattered shard), all-reduce 2(g-1)/g·out,
+  collective-permute 1·out.
+
+All numbers are per-device (SPMD module). This is an estimate — the
+methodology and its biases are recorded in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+"
+    r"([a-z][\w\-]*)\((.*?)\)(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(|\{)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "copy", "after-all", "partition-id",
+                   "replica-id", "iota", "reshape"}
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, List[int]]]:
+    return [(dt, [int(x) for x in dims.split(",") if x])
+            for dt, dims in _SHAPE_RE.findall(type_str)]
+
+
+def _nbytes(shapes: List[Tuple[str, List[int]]]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+class Op:
+    __slots__ = ("name", "type_str", "kind", "args", "tail", "shapes")
+
+    def __init__(self, name, type_str, kind, args, tail):
+        self.name = name
+        self.type_str = type_str
+        self.kind = kind
+        self.args = args
+        self.tail = tail
+        self.shapes = _shape_list(type_str)
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, List[Op]], Optional[str]]:
+    comps: Dict[str, List[Op]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if stripped.endswith("{") and "=" not in stripped.split("(")[0]:
+            m = _COMP_HDR_RE.match(stripped)
+            cur = m.group(1) if m else f"comp{len(comps)}"
+            comps[cur] = []
+            if stripped.startswith("ENTRY"):
+                entry = cur
+            continue
+        if stripped == "}":
+            continue
+        m = _OP_RE.match(line)
+        if m and cur is not None:
+            comps[cur].append(Op(m.group(1), m.group(2), m.group(3),
+                                 m.group(4), m.group(5)))
+    return comps, entry
+
+
+def _group_size(tail: str, num_devices: int) -> int:
+    # iota form: replica_groups=[ngroups,gsize]<=[...]
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", tail)
+    if m:
+        return int(m.group(2))
+    # explicit form: replica_groups={{0,1,2},{3,4,5}}
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", tail)
+    if m:
+        return len(m.group(1).split(","))
+    return num_devices
+
+
+def _trip_count(tail: str) -> int:
+    m = re.search(r'known_trip_count[^\d]*(\d+)', tail)
+    return int(m.group(1)) if m else 1
+
+
+def _dot_flops(op: Op, shapes: Dict[str, List[Tuple[str, List[int]]]]) -> float:
+    out = op.shapes
+    n_out = 1
+    for dt, dims in out:
+        for d in dims:
+            n_out *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.tail)
+    contract = 1
+    if m and m.group(1):
+        lhs_name = op.args.split(",")[0].strip().lstrip("%")
+        lhs_shapes = shapes.get(lhs_name)
+        if lhs_shapes:
+            dims = lhs_shapes[0][1]
+            for idx in m.group(1).split(","):
+                i = int(idx)
+                if i < len(dims):
+                    contract *= dims[i]
+    return 2.0 * n_out * contract
+
+
+def _conv_flops(op: Op, shapes) -> float:
+    # approx: 2 * prod(out) * kernel_spatial * in_channels
+    n_out = 1
+    for dt, dims in op.shapes:
+        for d in dims:
+            n_out *= d
+    rhs_name = op.args.split(",")[1].strip().lstrip("%") if "," in op.args else None
+    kflops = 1
+    if rhs_name and rhs_name in shapes:
+        dims = shapes[rhs_name][0][1]
+        for d in dims[:-1]:
+            kflops *= d
+    return 2.0 * n_out * kflops
+
+
+def analyze(hlo: str, num_devices: int) -> Dict[str, float]:
+    comps, entry = parse_computations(hlo)
+    # shape dict per computation
+    comp_shapes = {
+        cname: {op.name: op.shapes for op in ops}
+        for cname, ops in comps.items()
+    }
+
+    # --- call-graph multipliers -------------------------------------------
+    mult: Dict[str, float] = {}
+    is_fusion_body: Dict[str, bool] = {}
+    for cname, ops in comps.items():
+        for op in ops:
+            for callee_m in re.finditer(r"(?:calls|body|condition|branch_computations|to_apply|comparator)=%?([\w.\-]+)", op.tail):
+                is_fusion_body.setdefault(callee_m.group(1), op.kind == "fusion")
+    if entry is None:
+        called = set(is_fusion_body)
+        roots = [c for c in comps if c not in called]
+        entry = roots[0] if roots else next(iter(comps))
+
+    mult[entry] = 1.0
+    # BFS propagate
+    frontier = [entry]
+    seen = {entry}
+    while frontier:
+        cname = frontier.pop()
+        m = mult.get(cname, 1.0)
+        for op in comps[cname]:
+            trip = _trip_count(op.tail) if op.kind == "while" else 1
+            for cm in re.finditer(
+                    r"(?:calls|body|condition|branch_computations|to_apply|comparator)=%?([\w.\-]+)",
+                    op.tail):
+                callee = cm.group(1)
+                factor = trip if op.kind == "while" else 1
+                mult[callee] = mult.get(callee, 0.0) + m * factor
+                if callee not in seen:
+                    seen.add(callee)
+                    frontier.append(callee)
+
+    # --- accumulate costs --------------------------------------------------
+    flops = 0.0
+    bytes_hbm = 0.0        # pessimistic: every op boundary is HBM traffic
+    bytes_hbm_fused = 0.0  # optimistic: TPU-style fusion — only matmul-class
+    #                        ops, slices (cache R/W), reduces and collectives
+    #                        stream HBM; elementwise chains fuse away.
+    _FUSED_KINDS = {"dot", "convolution", "dynamic-slice",
+                    "dynamic-update-slice", "reduce", "sort", "scatter",
+                    "gather", *COLLECTIVES}
+    coll: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    coll_counts: Dict[str, int] = {k: 0 for k in COLLECTIVES}
+
+    for cname, ops in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        shapes = comp_shapes[cname]
+        fusion_body = is_fusion_body.get(cname, False)
+        for op in ops:
+            if op.kind == "dot":
+                flops += m * _dot_flops(op, shapes)
+            elif op.kind == "convolution":
+                flops += m * _conv_flops(op, shapes)
+            if fusion_body:
+                continue  # bytes counted at the fusion boundary
+            if op.kind in _SKIP_BYTES_OPS:
+                continue
+            out_b = _nbytes(op.shapes)
+            arg_b = 0
+            for a in op.args.split(","):
+                a = a.strip().lstrip("%")
+                if a in shapes:
+                    arg_b += _nbytes(shapes[a])
+            bytes_hbm += m * (out_b + arg_b)
+            if op.kind in _FUSED_KINDS:
+                bytes_hbm_fused += m * (out_b + arg_b)
+            if op.kind in COLLECTIVES:
+                g = _group_size(op.tail, num_devices)
+                if op.kind == "all-gather":
+                    wire = out_b * (g - 1) / max(g, 1)
+                elif op.kind == "all-reduce":
+                    wire = out_b * 2 * (g - 1) / max(g, 1)
+                elif op.kind == "reduce-scatter":
+                    wire = out_b * (g - 1)
+                elif op.kind == "all-to-all":
+                    wire = out_b * (g - 1) / max(g, 1)
+                else:  # collective-permute
+                    wire = out_b
+                coll[op.kind] += m * wire
+                coll_counts[op.kind] += int(m)
+
+    return {
+        "flops": flops,
+        "bytes_hbm": bytes_hbm,
+        "bytes_hbm_fused": bytes_hbm_fused,
+        "collective_bytes": coll,
+        "collective_total": sum(coll.values()),
+        "collective_counts": coll_counts,
+        "num_computations": len(comps),
+    }

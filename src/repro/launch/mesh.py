@@ -1,0 +1,30 @@
+"""Production mesh definitions.
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis carries the federated nodes of CD-BFL in the cross-pod deployment
+(DESIGN.md §2): CD-BFL compresses exactly the traffic that crosses it.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Degenerate mesh on the real local devices (CPU tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that carry the batch dimension."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

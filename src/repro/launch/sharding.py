@@ -1,0 +1,220 @@
+"""Sharding rules: param/activation PartitionSpecs for the production mesh.
+
+Approach (MaxText-style, compacted): every param leaf resolves to a tuple of
+*logical axes* — by suffix match against ``repro.models.layers.LOGICAL_AXES``
+with a shape heuristic fallback — and logical axes map to mesh axes through a
+rules table. Divisibility is always checked; a non-dividing dim falls back to
+replication, so every (arch × mesh) combination lowers.
+
+Baseline rules (= the §Roofline baseline):
+    embed-ish dim  -> "data"   (FSDP / fully-sharded params)
+    heads/mlp/vocab/expert/rnn -> "model"  (tensor/expert parallel)
+    pod            -> replicated params, batch data-parallel (except the
+                      CD-BFL fed step, where "pod"/"data" carries node k)
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import LOGICAL_AXES
+
+# logical axis -> mesh axis (baseline; the perf pass iterates on this table)
+DEFAULT_RULES: Dict[str, Optional[str]] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "expert": "model",
+    "embed": "data",
+    "embed_in": None,
+    "head_dim": None,
+    "lora": None,
+    "rope_dim": None,
+    "rnn": "model",
+    "rnn2": "model",
+    "conv_k": None,
+    "qkv3": None,
+    "heads2": None,
+    "gates": "model",
+    "gates_h": None,
+    "layers": None,
+}
+
+_CANON = [("self_attn", "attn"), ("cross_attn", "attn")]
+
+
+def _canon_path(path: str) -> str:
+    for a, b in _CANON:
+        path = path.replace(a, b)
+    return path
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def logical_axes_for(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    """Resolve a leaf path to logical axes (padded with leading 'layers')."""
+    cpath = _canon_path(path)
+    # longest-suffix match wins
+    best = None
+    for pat, axes in LOGICAL_AXES.items():
+        if cpath.endswith(pat) and (best is None or len(pat) > len(best[0])):
+            best = (pat, axes)
+    if best is not None:
+        axes = best[1]
+        if len(axes) == ndim:
+            return axes
+        if len(axes) < ndim:   # stacked under scan groups / whisper lists
+            return ("layers",) * (ndim - len(axes)) + tuple(axes)
+    # heuristic fallback
+    if ndim == 0 or ndim == 1:
+        return (None,) * ndim
+    if ndim == 2:
+        return ("embed", "mlp")
+    if ndim == 3:
+        return ("layers", "embed", "mlp")
+    return ("layers",) * (ndim - 2) + ("embed", "mlp")
+
+
+def spec_for_leaf(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                  rules: Dict[str, Optional[str]],
+                  min_shard_size: int = 4096) -> P:
+    """PartitionSpec for one param leaf, with divisibility fallbacks."""
+    if int(np.prod(shape)) < min_shard_size:
+        return P()
+    axes = logical_axes_for(path, len(shape))
+    used = set()
+    spec = []
+    for dim, ax in zip(shape, axes):
+        mesh_ax = rules.get(ax) if ax else None
+        if (mesh_ax is not None and mesh_ax not in used
+                and mesh_ax in mesh.axis_names
+                and dim % mesh.shape[mesh_ax] == 0):
+            spec.append(mesh_ax)
+            used.add(mesh_ax)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def params_shardings(params, mesh: Mesh,
+                     rules: Optional[Dict[str, Optional[str]]] = None,
+                     fed_axis: Optional[str] = None):
+    """NamedSharding tree for a params pytree.
+
+    ``fed_axis``: if set, leaves carry a leading federated-node dim K that
+    shards over that mesh axis (CD-BFL state), and the remaining dims use
+    the standard rules.
+    """
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+    if fed_axis is not None:
+        # the fed axis is consumed by the node dim; remove from body rules
+        rules = {k: (None if v == fed_axis else v) for k, v in rules.items()}
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        shape = tuple(leaf.shape)
+        if fed_axis is not None:
+            body = spec_for_leaf(pstr, shape[1:], mesh, rules)
+            k_ax = fed_axis if (shape[0] % mesh.shape[fed_axis] == 0) else None
+            return NamedSharding(mesh, P(k_ax, *body))
+        return NamedSharding(mesh, spec_for_leaf(pstr, shape, mesh, rules))
+
+    leaves = [one(p, l) for p, l in flat]
+    return jax.tree.unflatten(jax.tree.structure(params), leaves)
+
+
+# --------------------------------------------------------------------------
+# Activation / batch shardings
+# --------------------------------------------------------------------------
+
+def batch_shardings(batch_specs, mesh: Mesh, fed_axis: Optional[str] = None):
+    """Batch dims shard over the data axes; (K, L, ...) fed stacks put K on
+    the fed axis and the per-node batch dim on the remaining data axes."""
+    from repro.launch.mesh import data_axes
+    d_axes = [a for a in data_axes(mesh) if a != fed_axis]
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        if fed_axis is not None:
+            # (K, L, M, ...): K -> fed_axis, M -> remaining data axes
+            spec = [None] * len(shape)
+            if shape[0] % mesh.shape[fed_axis] == 0:
+                spec[0] = fed_axis
+            if len(shape) > 2:
+                for ax in d_axes:
+                    if shape[2] % mesh.shape[ax] == 0:
+                        spec[2] = ax
+                        break
+            return NamedSharding(mesh, P(*spec))
+        # plain batch: dim 0 over all data axes jointly (if divisible)
+        total = int(np.prod([mesh.shape[a] for a in d_axes])) if d_axes else 1
+        if d_axes and shape[0] % total == 0:
+            return NamedSharding(mesh, P(tuple(d_axes)))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, batch_specs)
+
+
+def cache_shardings(cache_specs, mesh: Mesh):
+    """KV/recurrent cache: batch dim over data axes; heads/slots over model.
+
+    Cache leaves are (B, slots, KV, hd) / (B, slots, rank) / recurrent
+    states (B, ...); scan-stacked caches (under a ``groups`` subtree) carry
+    a leading *layer-groups* dim that must stay replicated (it is
+    dynamic-sliced every scan step — sharding it forces SPMD full-remat).
+    """
+    from repro.launch.mesh import data_axes
+    d_axes = list(data_axes(mesh))
+    flat = jax.tree_util.tree_flatten_with_path(cache_specs)[0]
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        shape = tuple(leaf.shape)
+        spec: list = [None] * len(shape)
+        stacked = "groups" in pstr.split("/")
+        b0 = 1 if stacked else 0          # index of the batch dim
+        if not shape or int(np.prod(shape)) < 4096 or len(shape) <= b0:
+            return NamedSharding(mesh, P(*spec))
+        total = int(np.prod([mesh.shape[a] for a in d_axes])) if d_axes else 1
+        used_data = False
+        if d_axes and shape[b0] % total == 0 and shape[b0] >= total:
+            spec[b0] = tuple(d_axes)
+            used_data = True
+        rest = [(dim, i) for i, dim in enumerate(shape) if i > b0]
+        rest.sort(reverse=True)
+        m = mesh.shape["model"]
+        for dim, i in rest:
+            if dim % m == 0 and dim >= m:
+                spec[i] = "model"
+                break
+        if not used_data and d_axes:
+            # batch=1 long-context: spread slots over data axes too
+            for dim, i in rest:
+                if spec[i] is None and dim % total == 0 and dim >= total:
+                    spec[i] = tuple(d_axes)
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    leaves = [one(p, l) for p, l in flat]
+    return jax.tree.unflatten(jax.tree.structure(cache_specs), leaves)
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,93 @@
+"""Distributed CD-BFL training driver (runs on whatever devices exist).
+
+On the production mesh the federated nodes live on a mesh axis; on this CPU
+container it degrades to a 1-device mesh and the node axis is vmapped — the
+same jitted round function either way (DESIGN.md §3).
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --trim --nodes 4 --rounds 20 --local-steps 4 --seq 128 --batch 4
+
+``--trim`` shrinks the model to the reduced config (CPU-budget runs);
+omit it on real hardware.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.config import FedConfig, get_arch
+from repro.core import (init_fed_state, make_compressor, make_round_fn,
+                        mixing_matrix)
+from repro.data.synthetic_lm import fed_lm_round_batch
+from repro.models import get_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--trim", action="store_true", help="use reduced config")
+    ap.add_argument("--algorithm", default="cdbfl",
+                    choices=["cdbfl", "dsgld", "cffl"])
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4, help="per-node minibatch")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--eta", type=float, default=1e-4)
+    ap.add_argument("--zeta", type=float, default=0.3)
+    ap.add_argument("--topology", default="ring")
+    ap.add_argument("--compressor", default="block_topk")
+    ap.add_argument("--ratio", type=float, default=0.01)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg = spec.reduced if args.trim else spec.config
+    model = get_model(cfg)
+    fed = FedConfig(
+        num_nodes=args.nodes, local_steps=args.local_steps,
+        eta=args.eta, zeta=args.zeta, topology=args.topology,
+        compressor=args.compressor, compress_ratio=args.ratio,
+        algorithm=args.algorithm,
+    )
+    omega = mixing_matrix(fed.topology, fed.num_nodes, fed.mixing)
+    comp = make_compressor(fed)
+    round_fn = jax.jit(make_round_fn(args.algorithm, model.loss, fed, omega,
+                                     comp, data_scale=1.0))
+
+    key = jax.random.PRNGKey(fed.seed)
+    params0 = model.init(key)
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params0))
+    state = init_fed_state(params0, fed, key=key)
+    wire = comp.wire_bytes(params0)
+    print(f"arch={cfg.name} params={n_params/1e6:.2f}M nodes={fed.num_nodes} "
+          f"L={fed.local_steps} Q={fed.compressor}@{fed.compress_ratio} "
+          f"wire={wire/1e6:.3f}MB/node/round "
+          f"(dense {n_params*4/1e6:.1f}MB, saving "
+          f"{100*(1-wire/(n_params*4)):.1f}%)")
+
+    t0 = time.time()
+    for t in range(args.rounds):
+        batch = fed_lm_round_batch(fed.num_nodes, fed.local_steps, args.batch,
+                                   args.seq, cfg.vocab_size, seed=t)
+        batch = jax.tree.map(jnp.asarray, batch)
+        state, metrics = round_fn(state, batch, jax.random.fold_in(key, t))
+        if (t + 1) % args.log_every == 0:
+            print(f"round {t+1:4d} loss={float(jnp.mean(metrics.loss)):.4f} "
+                  f"consensus={float(metrics.consensus_error):.3e} "
+                  f"({(time.time()-t0)/(t+1):.2f}s/round)")
+    if args.ckpt_dir:
+        path = save_checkpoint(args.ckpt_dir, args.rounds, state.params,
+                               metadata={"arch": cfg.name, "fed": vars(args)})
+        print("saved", path)
+
+
+if __name__ == "__main__":
+    main()

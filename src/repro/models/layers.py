@@ -1,0 +1,169 @@
+"""Shared neural-net layers (pure functional, params = nested dicts).
+
+Conventions:
+* ``init_*`` functions take a PRNG key + config and return a params pytree.
+* ``apply`` functions are pure; compute dtype comes from ``cfg.dtype`` while
+  params stay in their stored dtype (cast at use).
+* every weight leaf is annotated with a *logical sharding axis name* via
+  :data:`LOGICAL_AXES` (path-pattern -> tuple of logical axes), consumed by
+  ``repro.launch.sharding``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, in_dim: int, out_shape: Tuple[int, ...], scale: float = 1.0,
+               dtype=jnp.float32):
+    """Truncated-normal fan-in init (matches common LLM inits)."""
+    std = scale / math.sqrt(in_dim)
+    return (std * jax.random.truncated_normal(
+        key, -2.0, 2.0, (in_dim,) + tuple(out_shape))).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / plain GELU)
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, act: str = "silu", dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d, (d_ff,), dtype=dtype),
+        "up": dense_init(k2, d, (d_ff,), dtype=dtype),
+        "down": dense_init(k3, d_ff, (d,), dtype=dtype),
+    }
+
+
+def mlp(params, x, act: str = "silu"):
+    dt = x.dtype
+    act_fn = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[act]
+    g = act_fn(x @ params["gate"].astype(dt))
+    u = x @ params["up"].astype(dt)
+    return (g * u) @ params["down"].astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Logical sharding axes: path-suffix pattern -> logical axes per dim.
+# Resolved against mesh axes by repro.launch.sharding rules.
+# --------------------------------------------------------------------------
+
+LOGICAL_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings / head
+    "embed/tok": ("vocab", "embed"),
+    "embed/img_proj": ("embed_in", "embed"),
+    "lm_head": ("embed", "vocab"),
+    # attention
+    "attn/wq": ("embed", "heads", "head_dim"),
+    "attn/wk": ("embed", "kv_heads", "head_dim"),
+    "attn/wv": ("embed", "kv_heads", "head_dim"),
+    "attn/wo": ("heads", "head_dim", "embed"),
+    "attn/bq": ("heads", "head_dim"),
+    "attn/bk": ("kv_heads", "head_dim"),
+    "attn/bv": ("kv_heads", "head_dim"),
+    # MLA
+    "mla/wdq": ("embed", "lora"),
+    "mla/wuq": ("lora", "heads", "head_dim"),
+    "mla/wdkv": ("embed", "lora"),
+    "mla/wukv": ("lora", "heads", "head_dim"),
+    "mla/wkr": ("embed", "rope_dim"),
+    "mla/wo": ("heads", "head_dim", "embed"),
+    # MLP
+    "mlp/gate": ("embed", "mlp"),
+    "mlp/up": ("embed", "mlp"),
+    "mlp/down": ("mlp", "embed"),
+    # MoE
+    "moe/router": ("embed", "expert"),
+    "moe/gate": ("expert", "embed", "mlp"),
+    "moe/up": ("expert", "embed", "mlp"),
+    "moe/down": ("expert", "mlp", "embed"),
+    "shared/gate": ("embed", "mlp"),
+    "shared/up": ("embed", "mlp"),
+    "shared/down": ("mlp", "embed"),
+    # RG-LRU / recurrent
+    "rec/in_proj": ("embed", "rnn2"),
+    "rec/conv_w": ("conv_k", "rnn"),
+    "rec/conv_b": ("rnn",),
+    "rec/a_param": ("rnn",),
+    "rec/wa": ("rnn", "rnn"),
+    "rec/ba": ("rnn",),
+    "rec/wx": ("rnn", "rnn"),
+    "rec/bx": ("rnn",),
+    "rec/out_proj": ("rnn", "embed"),
+    # xLSTM
+    "mlstm/wqkv": ("embed", "qkv3"),
+    "mlstm/wif": ("embed", "heads2"),
+    "mlstm/wo": ("embed", "embed"),
+    "mlstm/proj": ("embed", "embed"),
+    "slstm/wx": ("embed", "gates"),
+    "slstm/wh": ("heads", "head_dim", "gates_h"),
+    "slstm/b": ("gates",),
+    "slstm/proj": ("embed", "embed"),
+    # norms / misc
+    "scale": ("embed",),
+    "bias": ("embed",),
+    # lenet
+    "conv1/w": (None, None, None, None),
+    "conv2/w": (None, None, None, None),
+    "fc": ("embed_in", "embed"),
+}

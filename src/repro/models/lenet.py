@@ -1,0 +1,74 @@
+"""LeNet classifier for range-azimuth radar maps (the paper's ML model, §IV).
+
+Input: (B, H, W, 1) range-azimuth maps (paper: 256×63); output: R=10 ROI
+logits. Sized to ~2.7M trainable parameters at the paper's input resolution
+(fc1 width 220 → p ≈ 2.7e6), scaling down gracefully for reduced smoke/bench
+variants.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def _conv(x, w, b):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _flat_dim(hw):
+    h, w = hw
+    h = (h - 4) // 2       # conv5 valid + pool2
+    w = (w - 4) // 2
+    h = (h - 4) // 2
+    w = (w - 4) // 2
+    return 16 * h * w
+
+
+def init_lenet(key, cfg) -> Dict:
+    ks = jax.random.split(key, 5)
+    fdim = _flat_dim(cfg.input_hw)
+    fc1 = max(32, min(220, fdim // 4)) if fdim < 2048 else 220
+    return {
+        "conv1": {"w": dense_init(ks[0], 25, (6,)).reshape(5, 5, 1, 6),
+                  "b": jnp.zeros((6,))},
+        "conv2": {"w": dense_init(ks[1], 150, (16,)).reshape(5, 5, 6, 16),
+                  "b": jnp.zeros((16,))},
+        "fc1": {"w": dense_init(ks[2], fdim, (fc1,)), "b": jnp.zeros((fc1,))},
+        "fc2": {"w": dense_init(ks[3], fc1, (84,)), "b": jnp.zeros((84,))},
+        "fc3": {"w": dense_init(ks[4], 84, (cfg.num_classes,)),
+                "b": jnp.zeros((cfg.num_classes,))},
+    }
+
+
+def lenet_logits(params, x) -> jnp.ndarray:
+    """x (B, H, W, 1) -> logits (B, R)."""
+    h = jnp.tanh(_conv(x, params["conv1"]["w"], params["conv1"]["b"]))
+    h = _pool(h)
+    h = jnp.tanh(_conv(h, params["conv2"]["w"], params["conv2"]["b"]))
+    h = _pool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jnp.tanh(h @ params["fc1"]["w"] + params["fc1"]["b"])
+    h = jnp.tanh(h @ params["fc2"]["w"] + params["fc2"]["b"])
+    return h @ params["fc3"]["w"] + params["fc3"]["b"]
+
+
+def lenet_loss(params, batch, key=None):
+    """batch: {'x': (B,H,W,1), 'y': (B,)} -> mean CE."""
+    logits = lenet_logits(params, batch["x"])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+    return jnp.mean(nll), {"logits": logits}

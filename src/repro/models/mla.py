@@ -1,0 +1,144 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV are compressed to a rank-``kv_lora_rank`` latent c_kv plus a single shared
+decoupled-RoPE key; the decode path uses the *absorbed* formulation (query is
+projected into latent space) so the per-token cache is only
+``kv_lora_rank + rope_head_dim`` — the property that makes 32k/500k decode
+caches small.
+
+Head layout: q/k have ``nope`` (= head_dim) + ``rope_head_dim`` channels;
+values have ``head_dim`` channels.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, init_rmsnorm, rmsnorm
+
+NEG_INF = -1e30
+
+
+def init_mla(key, cfg, dtype=jnp.float32) -> Dict:
+    d, h = cfg.d_model, cfg.num_heads
+    nope, rope, vd = cfg.resolved_head_dim, cfg.rope_head_dim, cfg.resolved_head_dim
+    lq, lkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = jax.random.split(key, 8)
+    p = {
+        "wdkv": dense_init(ks[0], d, (lkv,), dtype=dtype),
+        "kv_norm": init_rmsnorm(lkv, dtype),
+        "wuk": dense_init(ks[1], lkv, (h, nope), dtype=dtype),
+        "wuv": dense_init(ks[2], lkv, (h, vd), dtype=dtype),
+        "wkr": dense_init(ks[3], d, (rope,), dtype=dtype),
+        "wo": dense_init(ks[4], h * vd, (d,), dtype=dtype).reshape(h, vd, d),
+    }
+    if lq:
+        p["wdq"] = dense_init(ks[5], d, (lq,), dtype=dtype)
+        p["q_norm"] = init_rmsnorm(lq, dtype)
+        p["wuq"] = dense_init(ks[6], lq, (h, nope + rope), dtype=dtype)
+    else:
+        p["wq"] = dense_init(ks[7], d, (h, nope + rope), dtype=dtype)
+    return p
+
+
+def _queries(params, x, positions, cfg):
+    dt = x.dtype
+    nope = cfg.resolved_head_dim
+    if "wdq" in params:
+        cq = rmsnorm(params["q_norm"], x @ params["wdq"].astype(dt), cfg.norm_eps)
+        q = jnp.einsum("bsl,lhk->bshk", cq, params["wuq"].astype(dt))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(params, x, positions, cfg):
+    dt = x.dtype
+    ckv = rmsnorm(params["kv_norm"], x @ params["wdkv"].astype(dt), cfg.norm_eps)
+    kr = (x @ params["wkr"].astype(dt))[:, :, None, :]        # (B,S,1,rope)
+    kr = apply_rope(kr, positions, cfg.rope_theta)[:, :, 0]   # (B,S,rope)
+    return ckv, kr
+
+
+def mla_attention(params, x, positions, cfg, causal: bool = True):
+    """Training/prefill path (decompressed K/V, standard causal softmax)."""
+    dt = x.dtype
+    b, s, _ = x.shape
+    nope, rope = cfg.resolved_head_dim, cfg.rope_head_dim
+    q_nope, q_rope = _queries(params, x, positions, cfg)
+    ckv, kr = _latents(params, x, positions, cfg)
+    k_nope = jnp.einsum("bsl,lhk->bshk", ckv, params["wuk"].astype(dt))
+    v = jnp.einsum("bsl,lhk->bshk", ckv, params["wuv"].astype(dt))
+
+    use_chunked = causal and (
+        cfg.attn_impl == "chunked"
+        or (cfg.attn_impl == "auto" and s >= 2 * cfg.chunk_size
+            and s % cfg.chunk_size == 0)
+    )
+    if use_chunked:
+        from repro.models.chunked import chunked_gqa
+        h = cfg.num_heads
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr[:, :, None], (b, s, h, rope))], axis=-1)
+        ctx = chunked_gqa(q_full, k_full, v, window=0, chunk=cfg.chunk_size)
+        return jnp.einsum("bshk,hkd->bsd", ctx, params["wo"].astype(dt))
+
+    scale = 1.0 / jnp.sqrt(nope + rope).astype(dt)
+    scores = (
+        jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+        + jnp.einsum("bshk,btk->bhst", q_rope, kr)
+    ) * scale
+    if causal:
+        ii, jj = jnp.arange(s)[:, None], jnp.arange(s)[None, :]
+        scores = jnp.where((jj <= ii)[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(dt)
+    ctx = jnp.einsum("bhst,bthk->bshk", probs, v)
+    return jnp.einsum("bshk,hkd->bsd", ctx, params["wo"].astype(dt))
+
+
+# --------------------------------------------------------------------------
+# Decode with latent cache (absorbed formulation)
+# --------------------------------------------------------------------------
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+        "slot_pos": jnp.full((max_len,), -1, jnp.int32),
+    }
+
+
+def mla_decode(params, cache, x, pos, cfg):
+    """One decode step; scores/ctx computed in the latent space, so the
+    per-step FLOPs are O(S·(lkv+rope)·H) and the cache is rank-sized."""
+    dt = x.dtype
+    nope, rope = cfg.resolved_head_dim, cfg.rope_head_dim
+    positions = jnp.broadcast_to(pos, (x.shape[0], 1))
+    q_nope, q_rope = _queries(params, x, positions, cfg)   # (B,1,H,·)
+    ckv_new, kr_new = _latents(params, x, positions, cfg)  # (B,1,lkv), (B,1,rope)
+
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(
+        cache["kr"], kr_new.astype(cache["kr"].dtype), pos, axis=1)
+    slot_pos = cache["slot_pos"].at[pos].set(pos)
+
+    # absorb: q_lat[h,l] = q_nope[h,k] · wuk[l,h,k]
+    q_lat = jnp.einsum("bshk,lhk->bshl", q_nope, params["wuk"].astype(dt))
+    scale = 1.0 / jnp.sqrt(nope + rope).astype(dt)
+    scores = (
+        jnp.einsum("bshl,btl->bhst", q_lat, ckv.astype(dt))
+        + jnp.einsum("bshk,btk->bhst", q_rope, kr.astype(dt))
+    ) * scale                                              # (B,H,1,S)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(dt)
+    ctx_lat = jnp.einsum("bhst,btl->bshl", probs, ckv.astype(dt))   # (B,1,H,lkv)
+    ctx = jnp.einsum("bshl,lhk->bshk", ctx_lat, params["wuv"].astype(dt))
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"].astype(dt))
+    return {"ckv": ckv, "kr": kr, "slot_pos": slot_pos}, out

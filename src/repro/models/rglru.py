@@ -1,0 +1,132 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block: x -> in_proj -> [gate branch (GeLU)] x [conv1d(4) -> RG-LRU] -> out_proj
+
+RG-LRU recurrence (diagonal, hence associative-scannable):
+
+    r_t = sigmoid(W_a u_t + b_a)              recurrence gate
+    i_t = sigmoid(W_x u_t + b_x)              input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)    per-channel decay, c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` (log-depth on TPU);
+decode keeps (h, conv window) as state. This is what makes long_500k decode
+O(1) memory for the recurrent layers.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+_C = 8.0
+_CONV_K = 4
+
+
+def init_rglru_block(key, cfg, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    dr = cfg.rglru_dim or cfg.d_model
+    ks = jax.random.split(key, 6)
+    # Lambda init so decay a ~ U(0.9, 0.999) at r=1 (Griffin appendix)
+    u = jax.random.uniform(ks[0], (dr,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))        # softplus^-1(-log u / c)
+    return {
+        "in_proj": dense_init(ks[1], d, (2 * dr,), dtype=dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[2], (_CONV_K, dr))).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "a_param": lam.astype(jnp.float32),
+        "wa": dense_init(ks[3], dr, (dr,), dtype=dtype),
+        "ba": jnp.zeros((dr,), dtype),
+        "wx": dense_init(ks[4], dr, (dr,), dtype=dtype),
+        "bx": jnp.zeros((dr,), dtype),
+        "out_proj": dense_init(ks[5], dr, (d,), dtype=dtype),
+    }
+
+
+def _causal_conv(u, w, b, state=None):
+    """u (B,S,C); w (K,C) depthwise causal conv. state (B,K-1,C) for decode."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    ext = jnp.concatenate([pad, u], axis=1)            # (B, S+K-1, C)
+    out = sum(
+        ext[:, i : i + u.shape[1]] * w[i].astype(u.dtype) for i in range(k)
+    ) + b.astype(u.dtype)
+    new_state = ext[:, -(k - 1):]                       # last K-1 inputs
+    return out, new_state
+
+
+def _gates(params, u):
+    dt = u.dtype
+    r = jax.nn.sigmoid(u @ params["wa"].astype(dt) + params["ba"].astype(dt))
+    i = jax.nn.sigmoid(u @ params["wx"].astype(dt) + params["bx"].astype(dt))
+    log_a = (-_C * jax.nn.softplus(params["a_param"]) * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i.astype(jnp.float32) * u.astype(jnp.float32)
+    )
+    return a, gated
+
+
+def rglru_scan(params, u):
+    """u (B,S,C) -> h (B,S,C) via associative scan over the diagonal LRU."""
+    a, b = _gates(params, u)                            # fp32
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype)
+
+
+def rglru_block(params, x, cfg):
+    """Full Griffin recurrent block, training/prefill path."""
+    dt = x.dtype
+    s = x.shape[1]
+    u = x @ params["in_proj"].astype(dt)
+    gate, rec = jnp.split(u, 2, axis=-1)
+    rec, _ = _causal_conv(rec, params["conv_w"], params["conv_b"])
+    use_chunked = (
+        cfg.attn_impl == "chunked"
+        or (cfg.attn_impl == "auto" and s >= 2 * cfg.chunk_size
+            and s % cfg.chunk_size == 0)
+    )
+    if use_chunked:
+        from repro.models.chunked import chunked_lru
+        a, b = _gates(params, rec)
+        h = chunked_lru(a, b, chunk=cfg.chunk_size).astype(dt)
+    else:
+        h = rglru_scan(params, rec)
+    y = jax.nn.gelu(gate) * h
+    return y @ params["out_proj"].astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Decode (single-step) path
+# --------------------------------------------------------------------------
+
+def init_rglru_state(cfg, batch: int, dtype=jnp.float32) -> Dict:
+    dr = cfg.rglru_dim or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, dr), dtype),
+        "conv": jnp.zeros((batch, _CONV_K - 1, dr), dtype),
+    }
+
+
+def rglru_block_decode(params, state, x, cfg):
+    """x (B,1,D) -> (state', y (B,1,D))."""
+    dt = x.dtype
+    u = x @ params["in_proj"].astype(dt)
+    gate, rec = jnp.split(u, 2, axis=-1)
+    rec, conv_state = _causal_conv(rec, params["conv_w"], params["conv_b"],
+                                   state=state["conv"])
+    a, b = _gates(params, rec)                          # (B,1,C) fp32
+    h = a[:, 0] * state["h"].astype(jnp.float32) + b[:, 0]
+    y = jax.nn.gelu(gate) * h[:, None].astype(dt)
+    out = y @ params["out_proj"].astype(dt)
+    return {"h": h.astype(state["h"].dtype), "conv": conv_state.astype(state["conv"].dtype)}, out

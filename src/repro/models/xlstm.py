@@ -1,0 +1,233 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM and sLSTM.
+
+* mLSTM — matrix-memory LSTM with exponential gating. Training/prefill uses
+  the stabilized *parallel* (attention-like) form; decode keeps the
+  per-head matrix state (C, n, m) and is O(1) in sequence length.
+* sLSTM — scalar-memory LSTM with exponential gating and a normalizer
+  state; the recurrence is non-diagonal (hidden-to-gate matrices per head)
+  so training runs a ``lax.scan`` over time.
+
+d_ff = 0 for the assigned xlstm-1.3b: blocks carry their own projections and
+there is no separate FFN.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+# ==========================================================================
+# mLSTM
+# ==========================================================================
+
+def init_mlstm_block(key, cfg, dtype=jnp.float32) -> Dict:
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    ks = jax.random.split(key, 4)
+    return {
+        "wqkv": dense_init(ks[0], d, (3, h, hd), dtype=dtype),
+        "wif": dense_init(ks[1], d, (2, h), dtype=jnp.float32),
+        "bif": jnp.stack([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]).astype(jnp.float32),
+        "wo_gate": dense_init(ks[2], d, (d,), dtype=dtype),
+        "proj": dense_init(ks[3], d, (d,), dtype=dtype),
+    }
+
+
+def _mlstm_qkvif(params, x):
+    dt = x.dtype
+    qkv = jnp.einsum("bsd,dthk->tbshk", x, params["wqkv"].astype(dt))
+    q, k, v = qkv[0], qkv[1], qkv[2]
+    gates = (
+        jnp.einsum("bsd,dth->tbsh", x.astype(jnp.float32), params["wif"])
+        + params["bif"][:, None, None]
+    )
+    log_i = gates[0]                                   # pre-activation i (log-space)
+    log_f = jax.nn.log_sigmoid(gates[1])               # (B,S,H)
+    return q, k, v, log_i, log_f
+
+
+def mlstm_block(params, x, cfg):
+    """Stabilized parallel form (Beck et al. eq. 21-27). x (B,S,D).
+
+    Long sequences route to the chunkwise form (inter-chunk recurrent
+    state), bounding memory to O(S·chunk) instead of O(S²)."""
+    dt = x.dtype
+    b, s, d = x.shape
+    h = cfg.num_heads
+    hd = d // h
+    q, k, v, log_i, log_f = _mlstm_qkvif(params, x)
+
+    use_chunked = (
+        cfg.attn_impl == "chunked"
+        or (cfg.attn_impl == "auto" and s >= 2 * cfg.chunk_size
+            and s % cfg.chunk_size == 0)
+    )
+    if use_chunked:
+        from repro.models.chunked import chunkwise_mlstm
+        hout = chunkwise_mlstm(q, k, v, log_i, log_f,
+                               chunk=min(cfg.chunk_size, 256))
+        hout = hout.reshape(b, s, d)
+        og = jax.nn.sigmoid(x @ params["wo_gate"].astype(dt))
+        return (og * hout) @ params["proj"].astype(dt)
+
+    # D_ts = cumsum(log_f)[t] - cumsum(log_f)[s] + log_i[s], lower-triangular
+    cf = jnp.cumsum(log_f, axis=1)                      # (B,S,H)
+    dmat = cf[:, :, None, :] - cf[:, None, :, :] + log_i[:, None, :, :]
+    ii, jj = jnp.arange(s)[:, None], jnp.arange(s)[None, :]
+    dmat = jnp.where((jj <= ii)[None, :, :, None], dmat, -jnp.inf)  # (B,T,S,H)
+    m = jnp.max(dmat, axis=2, keepdims=True)            # stabilizer
+    m = jnp.maximum(m, 0.0)
+    dexp = jnp.exp(dmat - m)                            # (B,T,S,H)
+
+    scores = jnp.einsum("bthk,bshk->btsh", q, k).astype(jnp.float32) / jnp.sqrt(hd)
+    w = scores * dexp
+    norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)), jnp.exp(-m[:, :, 0]))  # (B,T,H)
+    hout = jnp.einsum("btsh,bshk->bthk", w.astype(dt), v) / (
+        norm[..., None].astype(dt) + 1e-6
+    )
+    hout = hout.reshape(b, s, d)
+    og = jax.nn.sigmoid(x @ params["wo_gate"].astype(dt))
+    return (og * hout) @ params["proj"].astype(dt)
+
+
+def init_mlstm_state(cfg, batch: int, dtype=jnp.float32) -> Dict:
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), dtype),
+        "n": jnp.zeros((batch, h, hd), dtype),
+        "m": jnp.zeros((batch, h), dtype),
+    }
+
+
+def mlstm_block_decode(params, state, x, cfg):
+    """Recurrent step: C_t = f C + i v k^T (stabilized). x (B,1,D)."""
+    dt = x.dtype
+    b, _, d = x.shape
+    h = cfg.num_heads
+    hd = d // h
+    q, k, v, log_i, log_f = _mlstm_qkvif(params, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                 # (B,H,hd)
+    log_i, log_f = log_i[:, 0], log_f[:, 0]             # (B,H)
+
+    m_prev = state["m"].astype(jnp.float32)
+    m_new = jnp.maximum(log_f + m_prev, log_i)
+    f_sc = jnp.exp(log_f + m_prev - m_new)              # (B,H)
+    i_sc = jnp.exp(log_i - m_new)
+
+    kf = k.astype(jnp.float32) / jnp.sqrt(hd)
+    C = f_sc[..., None, None] * state["C"].astype(jnp.float32) + i_sc[..., None, None] * (
+        v.astype(jnp.float32)[..., :, None] * kf[..., None, :]
+    )
+    n = f_sc[..., None] * state["n"].astype(jnp.float32) + i_sc[..., None] * kf
+    num = jnp.einsum("bhvk,bhk->bhv", C, q.astype(jnp.float32))
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", n, q.astype(jnp.float32))), jnp.exp(-m_new)
+    )
+    hout = (num / (den[..., None] + 1e-6)).reshape(b, 1, d).astype(dt)
+    og = jax.nn.sigmoid(x @ params["wo_gate"].astype(dt))
+    out = (og * hout) @ params["proj"].astype(dt)
+    new_state = {
+        "C": C.astype(state["C"].dtype),
+        "n": n.astype(state["n"].dtype),
+        "m": m_new.astype(state["m"].dtype),
+    }
+    return new_state, out
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+
+def init_slstm_block(key, cfg, dtype=jnp.float32) -> Dict:
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        # input -> 4 gates (i, f, z, o), per channel
+        "wx": dense_init(ks[0], d, (4, d), dtype=dtype),
+        # hidden -> gates, block-diagonal per head: (H, hd, 4, hd)
+        "wh": dense_init(ks[1], hd, (cfg.num_heads, 4, hd),
+                         dtype=dtype).transpose(1, 0, 2, 3),
+        "b": jnp.concatenate(
+            [jnp.zeros((d,)), 2.0 * jnp.ones((d,)), jnp.zeros((2 * d,))]
+        ).astype(jnp.float32),
+        "proj": dense_init(ks[2], d, (d,), dtype=dtype),
+    }
+
+
+def init_slstm_state(cfg, batch: int, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), dtype),
+        "n": jnp.ones((batch, d), dtype),
+        "m": jnp.zeros((batch, d), dtype),
+        "h": jnp.zeros((batch, d), dtype),
+    }
+
+
+def _slstm_step(params, cfg, state, xg):
+    """xg (B, 4, D) precomputed input contribution; state dict of (B, D)."""
+    h, hd = cfg.num_heads, cfg.d_model // cfg.num_heads
+    b = xg.shape[0]
+    hprev = state["h"].astype(jnp.float32).reshape(b, h, hd)
+    # hidden contribution, block-diagonal per head
+    hg = jnp.einsum("bhk,hkgv->bghv", hprev, params["wh"].astype(jnp.float32))
+    gates = xg.astype(jnp.float32) + hg.reshape(b, 4, -1) + params["b"].reshape(4, -1)
+    gi, gf, gz, go = gates[:, 0], gates[:, 1], gates[:, 2], gates[:, 3]
+
+    m_prev = state["m"].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + m_prev, gi)
+    i_sc = jnp.exp(gi - m_new)
+    f_sc = jnp.exp(log_f + m_prev - m_new)
+    c = f_sc * state["c"].astype(jnp.float32) + i_sc * jnp.tanh(gz)
+    n = jnp.maximum(f_sc * state["n"].astype(jnp.float32) + i_sc, 1e-6)
+    hnew = jax.nn.sigmoid(go) * (c / n)
+    return {
+        "c": c.astype(state["c"].dtype), "n": n.astype(state["n"].dtype),
+        "m": m_new.astype(state["m"].dtype), "h": hnew.astype(state["h"].dtype),
+    }
+
+
+def slstm_block(params, x, cfg):
+    """Training path: lax.scan over time, checkpointed per chunk so the
+    backward pass stores only chunk-boundary states. x (B,S,D)."""
+    import functools
+
+    dt = x.dtype
+    b, s, d = x.shape
+    xg = jnp.einsum("bsd,dgv->sbgv", x, params["wx"].astype(dt))  # (S,B,4,D)
+    state0 = init_slstm_state(cfg, b)
+
+    def step(state, xg_t):
+        new = _slstm_step(params, cfg, state, xg_t)
+        return new, new["h"]
+
+    chunk = cfg.chunk_size
+    if s >= 2 * chunk and s % chunk == 0 and cfg.attn_impl != "naive":
+        nc = s // chunk
+        xg_c = xg.reshape(nc, chunk, *xg.shape[1:])
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def chunk_scan(state, xs):
+            return jax.lax.scan(step, state, xs)
+
+        _, hs = jax.lax.scan(chunk_scan, state0, xg_c)
+        hs = hs.reshape(s, b, d)
+    else:
+        _, hs = jax.lax.scan(step, state0, xg)
+    hs = hs.transpose(1, 0, 2).astype(dt)               # (B,S,D)
+    return hs @ params["proj"].astype(dt)
+
+
+def slstm_block_decode(params, state, x, cfg):
+    dt = x.dtype
+    xg = jnp.einsum("bd,dgv->bgv", x[:, 0], params["wx"].astype(dt))
+    new = _slstm_step(params, cfg, state, xg)
+    out = (new["h"].astype(dt) @ params["proj"].astype(dt))[:, None, :]
+    return new, out

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    sgd, momentum, adamw, make_optimizer, cosine_schedule, warmup_cosine,
+)

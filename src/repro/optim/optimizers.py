@@ -1,0 +1,106 @@
+"""Minimal optimizer substrate (no external deps): SGD / momentum / AdamW.
+
+API mirrors optax: ``opt.init(params) -> state``,
+``opt.update(grads, state, params) -> (updates, state)``; apply with
+``tree_axpy(1.0, updates, params)`` (updates already carry the sign).
+"""
+from __future__ import annotations
+
+from types import SimpleNamespace
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _tree_map2(f, a, b):
+    return jax.tree.map(f, a, b)
+
+
+def sgd(lr):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step_lr = lr_fn(state["count"])
+        upd = jax.tree.map(lambda g: -step_lr * g, grads)
+        return upd, {"count": state["count"] + 1}
+
+    return SimpleNamespace(init=init, update=update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params=None):
+        mu = _tree_map2(lambda m, g: beta * m + g, state["mu"], grads)
+        if nesterov:
+            upd_g = _tree_map2(lambda m, g: beta * m + g, mu, grads)
+        else:
+            upd_g = mu
+        step_lr = lr_fn(state["count"])
+        upd = jax.tree.map(lambda u: -step_lr * u, upd_g)
+        return upd, {"count": state["count"] + 1, "mu": mu}
+
+    return SimpleNamespace(init=init, update=update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"count": jnp.zeros((), jnp.int32), "m": z,
+                "v": jax.tree.map(jnp.zeros_like, z)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        m = _tree_map2(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                       state["m"], grads)
+        v = _tree_map2(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                       state["v"], grads)
+        mhat = jax.tree.map(lambda x: x / (1 - b1 ** c.astype(jnp.float32)), m)
+        vhat = jax.tree.map(lambda x: x / (1 - b2 ** c.astype(jnp.float32)), v)
+        step_lr = lr_fn(state["count"])
+        upd = jax.tree.map(
+            lambda mh, vh, p: (-step_lr * (mh / (jnp.sqrt(vh) + eps)
+                                           + weight_decay * p.astype(jnp.float32))
+                               ).astype(p.dtype),
+            mhat, vhat, params)
+        return upd, {"count": c, "m": m, "v": v}
+
+    return SimpleNamespace(init=init, update=update)
+
+
+def cosine_schedule(base_lr: float, total_steps: int, min_frac: float = 0.1):
+    def lr(step):
+        frac = jnp.clip(step / max(1, total_steps), 0.0, 1.0)
+        return base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return lr
+
+
+def warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                  min_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(1, total_steps - warmup), min_frac)
+
+    def lr(step):
+        w = jnp.minimum(1.0, (step + 1) / max(1, warmup))
+        return w * cos(jnp.maximum(0, step - warmup))
+    return lr
+
+
+def make_optimizer(name: str, lr, **kw):
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise ValueError(name)

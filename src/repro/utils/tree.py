@@ -1,0 +1,93 @@
+"""Pytree utilities used across the framework.
+
+Everything here is jit-safe (pure jnp / tree ops) unless noted.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, c):
+    return jax.tree.map(lambda x: x * c, tree)
+
+
+def tree_axpy(a, x, y):
+    """a*x + y elementwise over matching pytrees."""
+    return jax.tree.map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def tree_dot(a, b):
+    """Global inner product <a, b> across all leaves."""
+    leaves = jax.tree.map(lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return jax.tree.reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_sq_norm(tree):
+    return tree_dot(tree, tree)
+
+
+def tree_count(tree) -> int:
+    """Total number of elements across leaves (static)."""
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def tree_bytes(tree) -> int:
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_where_finite(tree, fallback):
+    return jax.tree.map(
+        lambda x, f: jnp.where(jnp.isfinite(x), x, f), tree, fallback
+    )
+
+
+def tree_any_nan(tree):
+    leaves = [jnp.any(~jnp.isfinite(x)) for x in jax.tree.leaves(tree)]
+    out = jnp.array(False)
+    for l in leaves:
+        out = jnp.logical_or(out, l)
+    return out
+
+
+def split_key_like(key, tree):
+    """One PRNG key per leaf, preserving tree structure."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, list(keys))
+
+
+def tree_random_normal(key, tree, scale=1.0, dtype=None):
+    keys = split_key_like(key, tree)
+    return jax.tree.map(
+        lambda k, x: scale * jax.random.normal(k, x.shape, dtype or x.dtype),
+        keys,
+        tree,
+    )
+
+
+def global_norm(tree):
+    return jnp.sqrt(tree_sq_norm(tree))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    factor = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return tree_scale(tree, factor), norm

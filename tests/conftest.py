@@ -1,0 +1,11 @@
+import os
+
+# Tests run on the real host device(s); only the dry-run entry point fakes
+# 512 devices. Keep hypothesis deterministic and CPU-friendly.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import pytest
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

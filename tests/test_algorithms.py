@@ -1,0 +1,155 @@
+"""Algorithm-level invariants of CD-BFL / DSGLD / CF-FL."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FedConfig
+from repro.core import (init_fed_state, make_cdbfl_round, make_cffl_round,
+                        make_compressor, make_dsgld_round, make_round_fn,
+                        make_sgld_step, mixing_matrix)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def quad_loss(params, batch, key):
+    x, y = batch
+    pred = x @ params["w"]
+    return jnp.mean((pred - y) ** 2), ()
+
+
+def _setup(algorithm="cdbfl", K=4, L=3, compressor="topk", ratio=0.5,
+           eta=1e-2, zeta=0.3, temperature=1.0, topology="ring", dim=6):
+    fed = FedConfig(num_nodes=K, local_steps=L, eta=eta, zeta=zeta,
+                    compressor=compressor, compress_ratio=ratio,
+                    topology=topology, temperature=temperature,
+                    algorithm=algorithm)
+    omega = mixing_matrix(topology, K)
+    comp = make_compressor(fed)
+    rf = jax.jit(make_round_fn(algorithm, quad_loss, fed, omega, comp))
+    params0 = {"w": jnp.zeros((dim,))}
+    state = init_fed_state(params0, fed)
+    kx, ky = jax.random.split(KEY)
+    X = jax.random.normal(kx, (K, L, 8, dim))
+    wtrue = jnp.arange(1.0, dim + 1.0) / dim
+    Y = X @ wtrue
+    return fed, rf, state, (X, Y), wtrue
+
+
+def test_cdbfl_converges_toward_truth():
+    fed, rf, state, batch, wtrue = _setup(eta=5e-3)
+    for t in range(300):
+        state, m = rf(state, batch, jax.random.fold_in(KEY, t))
+    w_mean = np.asarray(state.params["w"]).mean(0)
+    assert np.linalg.norm(w_mean - np.asarray(wtrue)) < 0.5
+    assert np.isfinite(m.loss).all()
+
+
+def test_cdbfl_consensus_bounded():
+    """Compression noise must vanish (control sequences do their job):
+    consensus error stays bounded over time rather than diverging."""
+    fed, rf, state, batch, _ = _setup(eta=1e-3, ratio=0.25)
+    cons = []
+    for t in range(400):
+        state, m = rf(state, batch, jax.random.fold_in(KEY, t))
+        cons.append(float(m.consensus_error))
+    late = np.mean(cons[-50:])
+    mid = np.mean(cons[150:200])
+    assert late < 10 * (mid + 1e-9)
+
+
+def test_cffl_is_cdbfl_without_noise():
+    """With temperature->0 CD-BFL == CF-FL plus the prior term; with the
+    prior weight ~0 (many nodes) trajectories coincide."""
+    K, L, dim = 4, 2, 5
+    fed = FedConfig(num_nodes=K, local_steps=L, eta=1e-2, zeta=0.3,
+                    compressor="topk", compress_ratio=0.5, topology="full",
+                    temperature=0.0)
+    omega = mixing_matrix("full", K)
+    comp = make_compressor(fed)
+    rf_b = jax.jit(make_cdbfl_round(quad_loss, fed, omega, comp,
+                                    data_scale=1.0))
+    rf_f = jax.jit(make_cffl_round(quad_loss, fed, omega, comp,
+                                   data_scale=1.0))
+    params0 = {"w": jnp.ones((dim,))}
+    sb = init_fed_state(params0, fed)
+    sf = init_fed_state(params0, fed)
+    kx = jax.random.PRNGKey(3)
+    X = jax.random.normal(kx, (K, L, 8, dim))
+    Y = X @ jnp.ones((dim,))
+    for t in range(20):
+        sb, _ = rf_b(sb, (X, Y), jax.random.fold_in(KEY, t))
+        sf, _ = rf_f(sf, (X, Y), jax.random.fold_in(KEY, t))
+    # prior term (1/K)·θ with eta 1e-2 drifts ~1e-2·norm per step; allow it
+    diff = float(jnp.max(jnp.abs(sb.params["w"] - sf.params["w"])))
+    assert diff < 0.12
+
+
+def test_dsgld_uncompressed_consensus_fast():
+    fed, rf, state, batch, wtrue = _setup(algorithm="dsgld", eta=5e-3,
+                                          topology="full", temperature=0.25)
+    for t in range(300):
+        state, m = rf(state, batch, jax.random.fold_in(KEY, t))
+    w_mean = np.asarray(state.params["w"]).mean(0)
+    assert np.linalg.norm(w_mean - np.asarray(wtrue)) < 0.5
+
+
+def test_sgld_gaussian_posterior_moments():
+    """SGLD on a conjugate Gaussian: samples match the analytic posterior.
+
+    Model: y ~ N(theta, sigma2), prior theta ~ N(0, 1). Posterior:
+    N(sum(y)/(n + sigma2), sigma2/(n + sigma2)).
+    """
+    sigma2 = 1.0
+    n = 16
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(rng.normal(1.5, np.sqrt(sigma2), n))
+
+    def loss_fn(params, batch, key):
+        nll = 0.5 * jnp.sum((batch - params["t"]) ** 2) / sigma2
+        return nll, ()
+
+    # data_scale=1: full-batch gradient; prior folded in by make_sgld_step
+    step = jax.jit(make_sgld_step(loss_fn, eta=5e-3, data_scale=1.0))
+    params = {"t": jnp.zeros(())}
+    samples = []
+    key = KEY
+    for t in range(4000):
+        key, ks = jax.random.split(key)
+        params, _ = step(params, y, ks)
+        if t > 1000 and t % 3 == 0:
+            samples.append(float(params["t"]))
+    post_mean = float(jnp.sum(y)) / (n + sigma2)
+    post_var = sigma2 / (n + sigma2)
+    assert abs(np.mean(samples) - post_mean) < 0.15
+    assert abs(np.var(samples) - post_var) / post_var < 0.6
+
+
+def test_identity_compression_reduces_to_choco_dense():
+    """With Q=identity and zeta=1 on a full graph, one round moves local
+    models onto their Ω-average (plus local steps/noise-free CF-FL)."""
+    K, dim = 4, 8
+    fed = FedConfig(num_nodes=K, local_steps=1, eta=0.0, zeta=1.0,
+                    compressor="identity", topology="full", temperature=0.0)
+    omega = mixing_matrix("full", K)
+    comp = make_compressor(fed)
+    rf = jax.jit(make_cffl_round(quad_loss, fed, omega, comp))
+    params0 = {"w": jnp.zeros((dim,))}
+    state = init_fed_state(params0, fed)
+    # give nodes distinct params
+    w0 = jax.random.normal(KEY, (K, dim))
+    state = state._replace(params={"w": w0}, v={"w": jnp.zeros_like(w0)},
+                           v_bar={"w": jnp.zeros_like(w0)})
+    X = jnp.zeros((K, 1, 4, dim))
+    Y = jnp.zeros((K, 1, 4))
+    state, _ = rf(state, (X, Y), KEY)
+    want = np.asarray(jnp.einsum("kj,jd->kd", jnp.asarray(omega, jnp.float32), w0))
+    np.testing.assert_allclose(np.asarray(state.params["w"]), want, atol=1e-5)
+
+
+def test_round_metrics_shapes():
+    fed, rf, state, batch, _ = _setup()
+    state, m = rf(state, batch, KEY)
+    assert m.loss.shape == (fed.num_nodes, fed.local_steps)
+    assert np.isfinite(float(m.consensus_error))
+    assert int(state.round) == 1

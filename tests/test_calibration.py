@@ -1,0 +1,73 @@
+"""Calibration metrics: ECE (paper Eq. 10), reliability bins, NLL, Brier."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import calibration as cal
+
+
+def test_ece_perfectly_calibrated_zero():
+    # two bins, confidence == accuracy in each
+    probs = np.array([[0.95, 0.05]] * 100 + [[0.55, 0.45]] * 100, np.float32)
+    labels = np.array([0] * 95 + [1] * 5 + [0] * 55 + [1] * 45, np.int32)
+    e = float(cal.ece(jnp.asarray(probs), jnp.asarray(labels)))
+    assert e < 0.02
+
+
+def test_ece_overconfident_detected():
+    """90% confidence, 50% accuracy -> ECE ~ 0.4 (CF-FL failure mode)."""
+    probs = np.array([[0.9, 0.1]] * 200, np.float32)
+    labels = np.array([0, 1] * 100, np.int32)
+    e = float(cal.ece(jnp.asarray(probs), jnp.asarray(labels)))
+    assert abs(e - 0.4) < 0.02
+
+
+def test_ece_handcrafted_two_bins():
+    probs = np.array([[0.95, 0.05]] * 10 + [[0.65, 0.35]] * 10, np.float32)
+    labels = np.array([0] * 10 + [1] * 10, np.int32)
+    # bin .9-1.0: conf .95 acc 1.0 gap .05 ; bin .6-.7: conf .65 acc 0 gap .65
+    want = 0.5 * 0.05 + 0.5 * 0.65
+    got = float(cal.ece(jnp.asarray(probs), jnp.asarray(labels)))
+    assert abs(got - want) < 1e-6
+
+
+@given(seed=st.integers(0, 50), n=st.integers(16, 256))
+def test_ece_bounds(seed, n):
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=(n, 5)).astype(np.float32)
+    probs = np.asarray(jax.nn.softmax(jnp.asarray(logits), axis=-1))
+    labels = rng.integers(0, 5, n).astype(np.int32)
+    e = float(cal.ece(jnp.asarray(probs), jnp.asarray(labels)))
+    assert 0.0 <= e <= 1.0
+
+
+def test_bin_counts_sum():
+    rng = np.random.default_rng(1)
+    probs = np.asarray(jax.nn.softmax(jnp.asarray(rng.normal(size=(100, 3))), -1))
+    labels = rng.integers(0, 3, 100).astype(np.int32)
+    bins = cal.reliability_bins(jnp.asarray(probs), jnp.asarray(labels), 10)
+    assert int(jnp.sum(bins.bin_counts)) == 100
+
+
+def test_nll_brier_accuracy():
+    probs = jnp.asarray([[0.8, 0.2], [0.3, 0.7]], jnp.float32)
+    labels = jnp.asarray([0, 1], jnp.int32)
+    assert abs(float(cal.accuracy(probs, labels)) - 1.0) < 1e-6
+    want_nll = -(np.log(0.8) + np.log(0.7)) / 2
+    assert abs(float(cal.nll(probs, labels)) - want_nll) < 1e-6
+    want_brier = ((0.2 ** 2 + 0.2 ** 2) + (0.3 ** 2 + 0.3 ** 2)) / 2
+    assert abs(float(cal.brier(probs, labels)) - want_brier) < 1e-6
+
+
+def test_predictive_entropy_uniform_max():
+    u = jnp.full((4, 10), 0.1, jnp.float32)
+    e = float(cal.predictive_entropy(u))
+    assert abs(e - np.log(10)) < 1e-5
+
+
+def test_render_reliability_smoke():
+    probs = jnp.asarray([[0.9, 0.1]] * 7, jnp.float32)
+    labels = jnp.asarray([0] * 7, jnp.int32)
+    out = cal.render_reliability(cal.reliability_bins(probs, labels), "t")
+    assert "reliability" in out and "0.900" in out

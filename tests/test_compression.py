@@ -1,0 +1,112 @@
+"""Property tests for the compression operators Q (paper Eq. 6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import Compressor
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand_tree(seed, shapes=((64,), (33, 7), (128, 130))):
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(shapes))
+    return {f"w{i}": jax.random.normal(k, s)
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+ALL_NAMES = ["identity", "topk", "block_topk", "randk", "sign", "qsgd",
+             "block_topk_pallas", "qsgd_pallas"]
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_shapes_and_dtypes_preserved(name):
+    tree = _rand_tree(0)
+    comp = Compressor(name=name, ratio=0.1, block_size=128)
+    out = comp(tree, KEY)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert a.shape == b.shape
+        assert a.dtype == b.dtype
+
+
+@pytest.mark.parametrize("name", ["topk", "block_topk", "sign", "qsgd",
+                                  "block_topk_pallas"])
+@given(seed=st.integers(0, 100))
+def test_contraction_property(name, seed):
+    """E||Q(x) - x||^2 <= (1 - delta)||x||^2 — the CHOCO requirement."""
+    tree = _rand_tree(seed)
+    comp = Compressor(name=name, ratio=0.05, block_size=128)
+    out = comp(tree, jax.random.PRNGKey(seed))
+    err = sum(float(jnp.sum((a - b) ** 2))
+              for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)))
+    norm = sum(float(jnp.sum(a ** 2)) for a in jax.tree.leaves(tree))
+    assert err <= (1 - comp.delta) * norm + 1e-5
+
+
+@given(seed=st.integers(0, 50), ratio=st.sampled_from([0.01, 0.05, 0.25]))
+def test_topk_sparsity_budget(seed, ratio):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4096,))
+    comp = Compressor(name="topk", ratio=ratio)
+    out = comp({"w": x}, KEY)["w"]
+    k = int(np.ceil(ratio * 4096))
+    nnz = int(jnp.sum(out != 0))
+    assert nnz <= k + 8  # ties tolerance
+    # kept entries are the largest magnitudes
+    kept = jnp.abs(x)[out != 0]
+    dropped = jnp.abs(x)[out == 0]
+    if len(kept) and len(dropped):
+        assert float(kept.min()) >= float(dropped.max()) - 1e-6
+
+
+@given(seed=st.integers(0, 50))
+def test_block_topk_matches_global_within_block(seed):
+    """Each block keeps exactly its own top-k (distinct magnitudes)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 128))
+    comp = Compressor(name="block_topk", ratio=0.1, block_size=128)
+    out = comp({"w": x.reshape(-1)}, KEY)["w"].reshape(4, 128)
+    k = int(np.ceil(0.1 * 128))
+    for b in range(4):
+        nnz = int(jnp.sum(out[b] != 0))
+        assert nnz == k
+
+
+@given(seed=st.integers(0, 30))
+def test_qsgd_mean_proportional_to_x(seed):
+    """The scaled QSGD satisfies E[Q(x)] = x/(1+omega) — unbiased up to the
+    contraction scaling (the CHOCO control sequences absorb the factor)."""
+    from repro.core.compression import _qsgd_omega
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,))
+    comp = Compressor(name="qsgd", qsgd_levels=8)
+    acc = jnp.zeros_like(x)
+    n = 64
+    for i in range(n):
+        acc = acc + comp({"w": x}, jax.random.PRNGKey(1000 + i))["w"]
+    mean = acc / n * (1.0 + _qsgd_omega(256, 8))
+    err = float(jnp.linalg.norm(mean - x) / jnp.linalg.norm(x))
+    assert err < 0.15
+
+
+def test_wire_bytes_99_percent_saving():
+    """The paper's headline: top-k @1% cuts ~99% of the payload bytes."""
+    tree = {"w": jnp.zeros((2_700_000,))}  # the paper's p=2.7M
+    dense = Compressor(name="identity").wire_bytes(tree)
+    comp = Compressor(name="topk", ratio=0.01).wire_bytes(tree)
+    saving = 1 - comp / dense
+    assert saving > 0.97  # values+indices overhead keeps it just under 99%
+
+
+def test_pallas_matches_reference_block_topk():
+    x = jax.random.normal(KEY, (8 * 1024,))
+    a = Compressor(name="block_topk", ratio=0.05, block_size=1024)({"w": x}, KEY)
+    b = Compressor(name="block_topk_pallas", ratio=0.05, block_size=1024)({"w": x}, KEY)
+    np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]), atol=1e-6)
+
+
+def test_min_dense_size_passthrough():
+    tree = {"small": jnp.ones((10,)),
+            "big": jax.random.normal(KEY, (4096,))}
+    comp = Compressor(name="topk", ratio=0.01, min_dense_size=64)
+    out = comp(tree, KEY)
+    np.testing.assert_array_equal(np.asarray(out["small"]), np.ones(10))
+    assert int(jnp.sum(out["big"] != 0)) < 4096

@@ -1,0 +1,80 @@
+"""Dry-run smoke tests (subprocess: the entry point owns XLA_FLAGS)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+def _run_dryrun(tmp_path, *args):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--out", str(tmp_path), *args]
+    return subprocess.run(cmd, env=ENV, cwd=REPO, capture_output=True,
+                          text=True, timeout=560)
+
+
+@pytest.mark.slow
+def test_dryrun_single_pod_smollm_decode(tmp_path):
+    r = _run_dryrun(tmp_path, "--arch", "smollm-135m", "--shape", "decode_32k")
+    assert "[ok]" in r.stdout, r.stdout + r.stderr
+    recs = [json.load(open(os.path.join(tmp_path, f)))
+            for f in os.listdir(tmp_path)]
+    assert recs and recs[0]["flops_per_device"] > 0
+    assert recs[0]["num_devices"] == 256
+
+
+@pytest.mark.slow
+def test_dryrun_multi_pod_and_fed_step(tmp_path):
+    r = _run_dryrun(tmp_path, "--arch", "smollm-135m", "--shape", "train_4k",
+                    "--multi-pod", "--step", "fed")
+    assert "[ok]" in r.stdout, r.stdout + r.stderr
+    rec = [json.load(open(os.path.join(tmp_path, f)))
+           for f in os.listdir(tmp_path)][0]
+    assert rec["num_devices"] == 512
+    assert rec["step"] == "fed"
+    # CD-BFL gossip must produce cross-device traffic
+    assert rec["collective_total_per_device"] > 0
+
+
+def test_hlo_cost_parser_units():
+    """Parser on a hand-built HLO snippet."""
+    from repro.launch.hlo_cost import analyze
+    hlo = """
+HloModule test
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %d = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ni, %d)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %tup = (s32[], f32[8,16]) tuple(%zero, %a)
+  %wh = (s32[], f32[8,16]) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  %ar = f32[8,16]{1,0} all-reduce(%a), replica_groups=[4,2]<=[8], to_apply=%cond
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+    r = analyze(hlo, 8)
+    # dot: 2*8*16*16 = 4096 flops × trip 7
+    assert r["flops"] == 7 * 4096
+    # all-reduce wire: out 8*16*4 bytes × 2(g-1)/g with g=2 -> 512
+    assert abs(r["collective_bytes"]["all-reduce"] - 512.0) < 1e-6

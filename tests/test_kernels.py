@@ -1,0 +1,120 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + allclose."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.block_topk import block_topk_pallas
+from repro.kernels.fused_update import fused_update_pallas
+from repro.kernels.qsgd import qsgd_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+SHAPES = [(1024,), (8, 1024), (3, 1000, 7), (4097,), (128, 130)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+# --------------------------------------------------------------------------
+# block top-k
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("ratio", [0.01, 0.1])
+def test_block_topk_sweep(shape, dtype, ratio):
+    x = jax.random.normal(KEY, shape, dtype)
+    got = ops.block_topk(x, ratio=ratio, block_size=1024)
+    x2d, n = ops._pad_to_2d(x, 1024, 8)
+    k = max(1, int(np.ceil(ratio * 1024)))
+    want2d = ref.block_topk_bisect_ref(x2d, k)
+    want = ops._unpad(want2d, n, shape)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=0)
+
+
+@given(seed=st.integers(0, 40))
+def test_block_topk_matches_exact_sort_semantics(seed):
+    """Bisection == exact top-k when magnitudes are distinct."""
+    x2d = jax.random.normal(jax.random.PRNGKey(seed), (8, 512))
+    got = block_topk_pallas(x2d, k=32, interpret=True)
+    want = ref.block_topk_ref(x2d, k=32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_block_topk_keeps_exactly_k_per_block():
+    x2d = jax.random.normal(KEY, (16, 1024))
+    out = block_topk_pallas(x2d, k=10, interpret=True)
+    nnz = np.asarray((out != 0).sum(axis=1))
+    np.testing.assert_array_equal(nnz, np.full(16, 10))
+
+
+# --------------------------------------------------------------------------
+# fused Eq. 9 update
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_update_sweep(shape, dtype):
+    ks = jax.random.split(KEY, 4)
+    th, vb, v, xi = [jax.random.normal(k, shape, dtype) for k in ks]
+    got = ops.fused_update(th, vb, v, xi, zeta=0.03, noise_scale=0.014)
+    want = ref.fused_update_ref(th, vb, v, xi, 0.03, 0.014)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+
+@given(zeta=st.floats(0.0, 1.0), ns=st.floats(0.0, 0.1))
+@settings(max_examples=10)
+def test_fused_update_params(zeta, ns):
+    ks = jax.random.split(KEY, 4)
+    th, vb, v, xi = [jax.random.normal(k, (256, 128)) for k in ks]
+    got = fused_update_pallas(th, vb, v, xi, zeta, ns, interpret=True)
+    want = ref.fused_update_ref(th, vb, v, xi, zeta, ns)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# QSGD
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("levels", [4, 16, 64])
+def test_qsgd_sweep(shape, levels):
+    from repro.core.compression import _qsgd_omega
+    x = jax.random.normal(KEY, shape)
+    got = ops.qsgd(x, KEY, levels=levels)
+    norm = jnp.linalg.norm(x.reshape(-1)).reshape(1, 1)
+    x2d, n = ops._pad_to_2d(x, 128, 256)
+    u = jax.random.uniform(KEY, x2d.shape)
+    omega = _qsgd_omega(int(np.prod(shape)), levels)
+    want = ops._unpad(ref.qsgd_ref(x2d, u, norm, levels, omega), n, shape)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_qsgd_quantization_grid():
+    """Outputs live on the (1/(1+omega))-scaled {0, ±norm/s, ...} grid."""
+    from repro.core.compression import _qsgd_omega
+    x = jax.random.normal(KEY, (512,))
+    levels = 8
+    omega = _qsgd_omega(512, levels)
+    out = np.asarray(ops.qsgd(x, KEY, levels=levels), np.float64)
+    norm = float(jnp.linalg.norm(x))
+    q = out * levels / norm * (1.0 + omega)
+    np.testing.assert_allclose(q, np.round(q), atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# padding helpers
+# --------------------------------------------------------------------------
+
+@given(n=st.integers(1, 5000))
+@settings(max_examples=20)
+def test_pad_unpad_roundtrip(n):
+    x = jnp.arange(n, dtype=jnp.float32)
+    x2d, n_ = ops._pad_to_2d(x, 128, 8)
+    assert x2d.shape[0] % 8 == 0 and x2d.shape[1] == 128
+    back = ops._unpad(x2d, n_, (n,))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))

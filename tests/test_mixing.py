@@ -1,0 +1,60 @@
+"""Mixing matrix Ω properties (paper Eq. 4/8, refs [25]/[35])."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.mixing import adjacency, mixing_matrix, spectral_gap
+
+TOPOLOGIES = ["full", "ring", "star", "grid"]
+
+
+def _k_for(topo, k):
+    if topo == "grid":
+        side = max(2, int(np.sqrt(k)))
+        return side * side
+    return k
+
+
+@pytest.mark.parametrize("topo", TOPOLOGIES)
+@given(k=st.integers(2, 20))
+def test_doubly_stochastic_and_symmetric(topo, k):
+    k = _k_for(topo, k)
+    w = mixing_matrix(topo, k, "metropolis")
+    np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(w, w.T, atol=1e-12)
+    assert (w >= -1e-12).all()
+
+
+@pytest.mark.parametrize("topo", TOPOLOGIES)
+@pytest.mark.parametrize("rule", ["metropolis", "max_degree"])
+def test_consensus_convergence(topo, rule):
+    """Ω^t x -> mean(x): the consensus contraction CD-BFL relies on."""
+    k = 9
+    w = mixing_matrix(topo, k, rule)
+    x = np.random.default_rng(0).normal(size=(k, 5))
+    target = x.mean(0, keepdims=True).repeat(k, 0)
+    y = x.copy()
+    for _ in range(600):
+        y = w @ y
+    np.testing.assert_allclose(y, target, atol=1e-6)
+
+
+def test_spectral_gap_ordering():
+    """Denser graphs mix faster: gap(full) >= gap(grid) >= gap(ring)."""
+    k = 16
+    g_full = spectral_gap(mixing_matrix("full", k))
+    g_grid = spectral_gap(mixing_matrix("grid", k))
+    g_ring = spectral_gap(mixing_matrix("ring", k))
+    assert g_full >= g_grid >= g_ring > 0
+
+
+def test_adjacency_no_self_loops():
+    for topo in TOPOLOGIES:
+        a = adjacency(topo, 9)
+        assert np.diag(a).sum() == 0
+
+
+def test_k1_degenerate():
+    w = mixing_matrix("full", 1)
+    assert w.shape == (1, 1) and w[0, 0] == 1.0

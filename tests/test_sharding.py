@@ -1,0 +1,98 @@
+"""Sharding-rule resolution tests (no multi-device mesh needed: rules are
+pure functions over AbstractMesh shapes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.config import get_arch
+from repro.launch import sharding as shd
+from repro.models import get_model
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_logical_axes_suffix_match():
+    assert shd.logical_axes_for("groups/u0/attn/wq", 4) == \
+        ("layers", "embed", "heads", "head_dim")
+    assert shd.logical_axes_for("decoder/3/self_attn/wk", 3) == \
+        ("embed", "kv_heads", "head_dim")
+    assert shd.logical_axes_for("embed/tok", 2) == ("vocab", "embed")
+    assert shd.logical_axes_for("groups/u0/moe/gate", 4) == \
+        ("layers", "expert", "embed", "mlp")
+
+
+def test_spec_divisibility_fallback():
+    # heads=9 not divisible by model=16 -> replicated on that dim
+    spec = shd.spec_for_leaf("attn/wq", (576, 9, 64), MESH, shd.DEFAULT_RULES)
+    assert spec == P("data", None, None)
+    # heads=32 divisible -> sharded
+    spec = shd.spec_for_leaf("attn/wq", (4096, 32, 128), MESH, shd.DEFAULT_RULES)
+    assert spec == P("data", "model", None)
+
+
+def test_tiny_leaves_replicated():
+    spec = shd.spec_for_leaf("norm1/scale", (128,), MESH, shd.DEFAULT_RULES)
+    assert spec == P()
+
+
+def test_no_mesh_axis_used_twice():
+    # embed->data and mlp->model; if both mapped to "model" only one wins
+    rules = dict(shd.DEFAULT_RULES, embed="model")
+    spec = shd.spec_for_leaf("mlp/gate", (4096, 11008), MESH, rules)
+    assert spec in (P("model", None), P(None, "model"), P("model",),)
+    used = [s for s in spec if s is not None]
+    assert len(used) == len(set(used))
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "deepseek-v2-236b", "xlstm-1.3b",
+                                  "recurrentgemma-9b", "whisper-tiny"])
+def test_full_param_tree_resolves(arch):
+    """Every full-size param leaf gets a legal PartitionSpec on both meshes."""
+    cfg = get_arch(arch).config
+    model = get_model(cfg)
+    pspecs = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    for mesh in (MESH, MESH3):
+        shards = shd.params_shardings(pspecs, mesh)
+        for leaf, s in zip(jax.tree.leaves(pspecs), jax.tree.leaves(shards)):
+            assert len(s.spec) <= len(leaf.shape)
+            for dim, ax in zip(leaf.shape, s.spec):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                total = int(np.prod([mesh.shape[a] for a in axes]))
+                assert dim % total == 0, (arch, leaf.shape, s.spec)
+
+
+def test_fed_axis_sharding():
+    cfg = get_arch("smollm-135m").config
+    model = get_model(cfg)
+    pspecs = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    stacked = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((16,) + x.shape, x.dtype), pspecs)
+    shards = shd.params_shardings(stacked, MESH, fed_axis="data")
+    for leaf, s in zip(jax.tree.leaves(stacked), jax.tree.leaves(shards)):
+        if int(np.prod(leaf.shape)) >= 4096:
+            assert s.spec[0] == "data", (leaf.shape, s.spec)
+        # body never re-uses the fed axis
+        assert "data" not in [a for a in s.spec[1:] if not isinstance(a, tuple)]
+
+
+def test_batch_shardings_divisibility():
+    batch = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
+    sh = shd.batch_shardings(batch, MESH)
+    assert sh["tokens"].spec[0] in ("data", ("data",))
+    odd = {"tokens": jax.ShapeDtypeStruct((7, 64), jnp.int32)}
+    sh = shd.batch_shardings(odd, MESH)
+    assert sh["tokens"].spec == P()
+
+
+def test_cache_shardings_long_context_batch1():
+    """batch=1 long-context: slots spread over the data axes instead."""
+    cache = {"k": jax.ShapeDtypeStruct((1, 524288, 8, 128), jnp.bfloat16)}
+    sh = shd.cache_shardings(cache, MESH)
+    spec = sh["k"].spec
+    assert spec[0] is None
+    assert ("data",) in tuple(spec) or "model" in tuple(spec)

@@ -1,0 +1,139 @@
+"""Substrate tests: optimizers, checkpointing, data pipelines, tree utils."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.data.radar import ROIS, make_dataset, synth_map
+from repro.data.synthetic_lm import fed_lm_round_batch, markov_tokens
+from repro.optim import adamw, cosine_schedule, momentum, sgd, warmup_cosine
+from repro.utils import tree as tu
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------------------------
+# optimizers
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: sgd(0.1),
+    lambda: momentum(0.05, 0.9),
+    lambda: adamw(0.05, weight_decay=0.0),
+])
+def test_optimizers_minimize_quadratic(make_opt):
+    opt = make_opt()
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.tree.map(lambda p: 2 * p, params)      # d/dp ||p||^2
+        upd, state = opt.update(grads, state, params)
+        params = jax.tree.map(jnp.add, params, upd)
+    assert float(jnp.linalg.norm(params["w"])) < 1e-2
+
+
+def test_schedules():
+    lr = cosine_schedule(1.0, 100)
+    assert abs(float(lr(0)) - 1.0) < 1e-6
+    assert float(lr(100)) <= 0.11
+    wl = warmup_cosine(1.0, 10, 100)
+    assert float(wl(0)) < 0.2
+    assert float(wl(10)) > 0.9
+
+
+# --------------------------------------------------------------------------
+# checkpointing
+# --------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)},
+            "d": [jnp.zeros((2,)), jnp.full((3,), 7.0)]}
+    save_checkpoint(str(tmp_path), 7, tree, metadata={"note": "t"})
+    assert latest_step(str(tmp_path)) == 7
+    back = load_checkpoint(str(tmp_path), like=tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# --------------------------------------------------------------------------
+# radar data
+# --------------------------------------------------------------------------
+
+def test_radar_dataset_shapes_and_normalization():
+    ds = make_dataset(20, hw=(64, 32), seed=0)
+    assert ds["x"].shape == (20, 64, 32, 1)
+    assert ds["y"].shape == (20,)
+    assert abs(float(ds["x"].mean())) < 0.1          # per-map normalized
+    assert ds["y"].min() >= 0 and ds["y"].max() <= 9
+
+
+def test_radar_blob_geometry():
+    """Target energy concentrates in the labeled ROI's range rows."""
+    rng = np.random.default_rng(0)
+    h, w = 128, 64
+    # label 0 is far (d>=2m) -> blob in the lower 40% rows is weak
+    m_far = np.mean([synth_map(rng, 0, (h, w)) for _ in range(8)], axis=0)
+    m_near = np.mean([synth_map(rng, 2, (h, w)) for _ in range(8)], axis=0)
+    # label 2: 0.3-0.5m -> early range rows
+    near_rows = slice(0, int(0.2 * h))
+    far_rows = slice(int(0.55 * h), h)
+    assert m_near[near_rows].mean() > m_far[near_rows].mean() * 0.9
+    assert m_far[far_rows].mean() > m_near[far_rows].mean()
+
+
+def test_radar_day_shift_changes_distribution():
+    d1 = make_dataset(40, hw=(32, 16), day=1, seed=0)
+    d2 = make_dataset(40, hw=(32, 16), day=2, seed=0)
+    assert not np.allclose(d1["x"], d2["x"])
+
+
+def test_rois_table_matches_paper():
+    assert ROIS.shape == (10, 4)
+    assert ROIS[0][0] == 2.0                      # label 0: d >= 2m
+    np.testing.assert_allclose(ROIS[5], [0.9, 1.1, -10, 10])
+    np.testing.assert_allclose(ROIS[9], [1.2, 1.6, -20, -10])
+
+
+# --------------------------------------------------------------------------
+# LM data
+# --------------------------------------------------------------------------
+
+def test_markov_tokens_deterministic_and_ranged():
+    a = markov_tokens(4, 32, 100, seed=1, node=2)
+    b = markov_tokens(4, 32, 100, seed=1, node=2)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < 100
+
+
+def test_fed_round_batch_layout():
+    batch = fed_lm_round_batch(k=3, l=2, m=4, seq_len=16, vocab=64)
+    assert batch["tokens"].shape == (3, 2, 4, 16)
+
+
+# --------------------------------------------------------------------------
+# tree utils
+# --------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 20))
+def test_tree_algebra(seed):
+    k = jax.random.PRNGKey(seed)
+    t1 = {"a": jax.random.normal(k, (5,)), "b": jax.random.normal(k, (2, 3))}
+    t2 = jax.tree.map(lambda x: x * 2, t1)
+    s = tu.tree_sub(t2, t1)
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(t1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    assert float(tu.tree_dot(t1, t1)) >= 0
+    assert tu.tree_count(t1) == 11
+
+
+def test_clip_by_global_norm():
+    t = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = tu.clip_by_global_norm(t, 1.0)
+    assert abs(float(tu.global_norm(clipped)) - 1.0) < 1e-5
+    assert abs(float(norm) - 20.0) < 1e-5

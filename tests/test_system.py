@@ -1,0 +1,108 @@
+"""End-to-end behaviour tests: the paper's system on the radar case study."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FedConfig, get_arch
+from repro.core import SampleBank, bma_predict
+from repro.data.partition import (minibatch_stack, partition_dirichlet,
+                                  partition_iid)
+from repro.data.radar import critical_subset, make_dataset
+from repro.models import get_model
+from repro.train import FedTrainer
+
+K = 5
+
+
+@pytest.fixture(scope="module")
+def radar_setup():
+    cfg = get_arch("lenet-radar").reduced
+    model = get_model(cfg)
+    train = make_dataset(K * 30, hw=cfg.input_hw, day=1, seed=0)
+    test = make_dataset(80, hw=cfg.input_hw, day=1, seed=99)
+    shards = partition_iid(train, K)
+    return cfg, model, shards, test
+
+
+def _fed(**kw):
+    base = dict(num_nodes=K, local_steps=4, eta=3e-3, zeta=0.3,
+                rounds=50, burn_in=30, compressor="block_topk",
+                compress_ratio=0.05, topology="full", algorithm="cdbfl")
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def test_cdbfl_learns_radar_task(radar_setup):
+    cfg, model, shards, test = radar_setup
+    tr = FedTrainer(model, _fed(), shards, minibatch=8)
+    res = tr.run(rounds=50, eval_batch=test)
+    assert res.accuracy > 0.5          # 10-class task, chance = 0.1
+    assert np.isfinite(res.ece)
+    assert len(tr.bank) > 0            # posterior samples collected
+
+
+def test_compression_saves_99_percent(radar_setup):
+    cfg, model, shards, test = radar_setup
+    tr_c = FedTrainer(model, _fed(compressor="topk", compress_ratio=0.01),
+                      shards, minibatch=8)
+    tr_d = FedTrainer(model, _fed(algorithm="dsgld"), shards, minibatch=8)
+    saving = 1 - tr_c.bytes_per_round / tr_d.bytes_per_round
+    assert saving > 0.97
+
+
+def test_cffl_runs_and_reports_point_estimate(radar_setup):
+    cfg, model, shards, test = radar_setup
+    tr = FedTrainer(model, _fed(algorithm="cffl", eta=5e-3), shards,
+                    minibatch=8)
+    res = tr.run(rounds=40, eval_batch=test)
+    assert res.accuracy > 0.4
+    assert len(tr.bank) == 0           # frequentist: no posterior samples
+
+
+def test_distribution_shift_day2_harder(radar_setup):
+    """Day-2 test maps (gain drift + clutter) should be harder than day-1 —
+    the premise of the paper's §V-B calibration-under-shift experiment."""
+    cfg, model, shards, _ = radar_setup
+    tr = FedTrainer(model, _fed(rounds=50), shards, minibatch=8)
+    tr.run(rounds=50)
+    test1 = critical_subset(make_dataset(150, hw=cfg.input_hw, day=1, seed=7))
+    test2 = critical_subset(make_dataset(150, hw=cfg.input_hw, day=2, seed=7))
+    r1 = tr.evaluate(test1)
+    r2 = tr.evaluate(test2)
+    assert r2.accuracy <= r1.accuracy + 0.05
+
+
+def test_dirichlet_partition_noniid():
+    ds = make_dataset(400, hw=(32, 16), seed=0)
+    shards = partition_dirichlet(ds, 8, alpha=0.2, seed=0)
+    assert len(shards) == 8
+    assert sum(len(s["y"]) for s in shards) >= 392   # near-complete cover
+    # label skew present: some shard misses some label
+    misses = sum(len(np.unique(s["y"])) < 10 for s in shards)
+    assert misses > 0
+
+
+def test_minibatch_stack_shapes():
+    ds = make_dataset(100, hw=(32, 16), seed=0)
+    shards = partition_iid(ds, 4)
+    rng = np.random.default_rng(0)
+    stack = minibatch_stack(shards, l=3, m=8, rng=rng)
+    assert stack["x"].shape == (4, 3, 8, 32, 16, 1)
+    assert stack["y"].shape == (4, 3, 8)
+
+
+def test_bma_predict_uses_all_samples():
+    cfg = get_arch("lenet-radar").reduced
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    bank = SampleBank(burn_in=0, max_samples=4)
+    for i in range(3):
+        p = model.init(jax.random.fold_in(key, i))
+        stacked = jax.tree.map(lambda x: jnp.stack([x, x]), p)  # 2 "nodes"
+        bank.maybe_add(i, stacked)
+    batch = {"x": jnp.ones((4, *cfg.input_hw, 1))}
+    probs = bma_predict(lambda p, b: model.logits(p, b), bank.samples, batch,
+                        node_axis=0)
+    assert probs.shape == (4, 10)
+    np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, atol=1e-5)
