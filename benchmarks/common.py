@@ -61,11 +61,13 @@ def run_method(model, shards, algorithm: str, local_steps: int = 8,
                rounds: int = ROUNDS, compressor: str = "topk",
                ratio: float = RATIO, eval_batch=None, seed: int = 0,
                eta: float = ETA, zeta: float = ZETA,
-               temperature: float = TEMPERATURE):
+               temperature: float = TEMPERATURE, topology: str = "full",
+               topology_cfg=None, num_nodes: int = K):
     fed = FedConfig(
-        num_nodes=K, local_steps=local_steps, eta=eta, zeta=zeta,
+        num_nodes=num_nodes, local_steps=local_steps, eta=eta, zeta=zeta,
         rounds=rounds, burn_in=int(rounds * BURN_IN / ROUNDS),
-        compressor=compressor, compress_ratio=ratio, topology="full",
+        compressor=compressor, compress_ratio=ratio, topology=topology,
+        topology_cfg=topology_cfg,
         temperature=temperature, algorithm=algorithm, seed=seed,
     )
     tr = FedTrainer(model, fed, shards, minibatch=MINIBATCH, seed=seed)

@@ -22,11 +22,12 @@ def main() -> None:
 
     from benchmarks import (bench_ablation, bench_comm_overhead,
                             bench_fig3_l_sweep, bench_fig4_reliability,
-                            bench_kernels, roofline)
+                            bench_kernels, bench_topology_sweep, roofline)
     suites = {
         "fig3_l_sweep": bench_fig3_l_sweep.run,
         "fig4_reliability": bench_fig4_reliability.run,
         "comm_overhead": bench_comm_overhead.run,
+        "topology_sweep": bench_topology_sweep.run,
         "kernels": bench_kernels.run,
         "roofline": roofline.run,
     }

@@ -91,9 +91,35 @@ class ModelConfig:
 # --------------------------------------------------------------------------
 
 @dataclass(frozen=True)
+class TopologyConfig:
+    """Device graph of the D2D deployment (DESIGN.md §4).
+
+    Generators live in ``repro.core.topology``; this is pure data so config
+    stays dependency-free. The static fields pick the graph family and its
+    parameters; the last two make Ω time-varying (per-round realizations are
+    drawn *inside* the jitted round from a PRNG key, so rounds stay pure).
+    """
+    graph: str = "full"             # full | ring | chain | star | grid |
+                                    # torus | k_regular | erdos_renyi | geometric
+    degree: int = 4                 # k_regular: even neighbor count
+    edge_prob: float = 0.3          # erdos_renyi: iid link probability
+    radius: float = 0.45            # geometric: radio range in the unit square
+    rule: str = "metropolis"        # metropolis | max_degree | uniform
+    seed: int = 0                   # graph-sampling seed (ER / geometric)
+    # time-varying schedule (0/0 = static graph)
+    link_failure_prob: float = 0.0  # per-round, per-link Bernoulli dropout
+    gossip_pairs: int = 0           # >0: activate only this many matchings/round
+
+    def replace(self, **kw) -> "TopologyConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
 class FedConfig:
     num_nodes: int = 10             # K
-    topology: str = "full"          # full | ring | grid | star
+    topology: str = "full"          # legacy string: full | ring | grid | star
+    # full graph spec; when set it overrides the ``topology`` string
+    topology_cfg: Optional[TopologyConfig] = None
     mixing: str = "metropolis"      # metropolis | max_degree | uniform
     local_steps: int = 8            # L (paper sweet spot)
     zeta: float = 0.03              # consensus mixing weight

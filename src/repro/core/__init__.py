@@ -1,6 +1,10 @@
 """Core: the paper's contribution — CD-BFL and its baselines."""
 from repro.core.compression import Compressor, make_compressor
 from repro.core.mixing import mixing_matrix, adjacency, spectral_gap
+from repro.core.topology import (Topology, MixSchedule, build_topology,
+                                 build_schedule, graph_adjacency,
+                                 mixing_weights, resolve_topology)
+from repro.core.gossip import dense_mix, schedule_mix, make_mixer
 from repro.core.fed_state import FedState, init_fed_state
 from repro.core.algorithms import (
     make_cdbfl_round,
@@ -15,7 +19,10 @@ from repro.core import calibration
 
 __all__ = [
     "Compressor", "make_compressor", "mixing_matrix", "adjacency",
-    "spectral_gap", "FedState", "init_fed_state", "make_cdbfl_round",
+    "spectral_gap", "Topology", "MixSchedule", "build_topology",
+    "build_schedule", "graph_adjacency", "mixing_weights",
+    "resolve_topology", "dense_mix", "schedule_mix", "make_mixer",
+    "FedState", "init_fed_state", "make_cdbfl_round",
     "make_dsgld_round", "make_cffl_round", "make_sgld_step", "make_round_fn",
     "RoundMetrics", "SampleBank", "bma_predict", "point_predict", "calibration",
 ]

@@ -13,8 +13,14 @@ All round functions share the signature
 
 where ``batches`` carries leading dims ``(K, L, ...)`` (local minibatch
 sequences per node). They are pure and jit/pjit-safe: under ``jax.jit`` with
-the node axis sharded over a mesh axis, the Ω-mixing einsum lowers to the
+the node axis sharded over a mesh axis, the Ω-mixing lowers to the
 collective schedule analyzed in EXPERIMENTS.md.
+
+Every round function is topology-generic: the mixer is built from the
+FedConfig's :class:`repro.config.TopologyConfig` (sparse schedule mixer for
+bounded-degree graphs, dense einsum oracle otherwise — DESIGN.md §4) and
+receives a per-round PRNG key, so time-varying graphs (link dropout,
+gossip-pair sampling) work unchanged under jit.
 """
 from __future__ import annotations
 
@@ -27,6 +33,13 @@ import jax.numpy as jnp
 from repro.core.compression import Compressor
 from repro.core.fed_state import FedState
 from repro.utils.tree import tree_random_normal, split_key_like
+
+
+def _default_mixer(omega, fed_cfg):
+    from repro.core.gossip import make_mixer
+    from repro.core.topology import resolve_topology
+    import numpy as _np
+    return make_mixer(_np.asarray(omega), config=resolve_topology(fed_cfg))
 
 
 LossFn = Callable[[Any, Any, jax.Array], Tuple[jax.Array, Any]]
@@ -67,21 +80,6 @@ def _local_sgd(params, batches_l, key, loss_fn: LossFn, eta: float,
     return params, losses
 
 
-def _mix(omega: jax.Array, delta):
-    """Ω-weighted neighbor aggregation along the node axis (paper Eq. 8).
-
-    Dense formulation: lowers to an all-gather + local contraction when the
-    node axis is mesh-sharded. The ring-optimized ppermute variant lives in
-    repro.launch.sharding (perf pass).
-    """
-    return jax.tree.map(
-        lambda d: jnp.einsum(
-            "kj,j...->k...", omega.astype(jnp.float32), d.astype(jnp.float32)
-        ).astype(d.dtype),
-        delta,
-    )
-
-
 def _langevin_noise(key, tree, eta: float, temperature: float):
     scale = jnp.sqrt(2.0 * eta * temperature)
     return tree_random_normal(key, tree, scale=scale, dtype=jnp.float32)
@@ -118,24 +116,26 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
     exchange, CHOCO control-variate bookkeeping, consensus correction and
     Langevin noise injection (paper Eqs. 5-9).
 
-    ``mixer``: optional mix(tree)->tree override (e.g. the circulant ring
-    mixer from repro.core.gossip — collective-permutes instead of the dense
-    einsum's all-gather when the node axis is mesh-sharded).
+    ``mixer``: optional mix(tree, key)->tree override (defaults to the
+    topology-aware schedule mixer from repro.core.gossip —
+    collective-permutes instead of the dense einsum's all-gather when the
+    node axis is mesh-sharded; legacy mix(tree) callables are adapted).
     """
     eta = fed_cfg.eta
     zeta = fed_cfg.zeta
     K = fed_cfg.num_nodes
     L = fed_cfg.local_steps
-    import numpy as _np
-    omega_np = _np.asarray(omega)
     omega = jnp.asarray(omega, jnp.float32)
     if mixer is None:
-        from repro.core.gossip import make_mixer
-        mixer = make_mixer(omega_np, fed_cfg.topology)
+        mixer = _default_mixer(omega, fed_cfg)
+    else:
+        from repro.core.gossip import as_keyed_mixer
+        mixer = as_keyed_mixer(mixer)
     prior_weight = 1.0 / K
 
     def round_fn(state: FedState, batches, key) -> Tuple[FedState, RoundMetrics]:
         kql, knoise = jax.random.split(key)
+        kmix = jax.random.fold_in(key, 2)   # keeps kql/knoise streams stable
         node_keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
             state.key, state.round
         )
@@ -155,7 +155,7 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
 
         # -- Eq. 7 / Eq. 8: control sequences (stored in control_dtype) ------
         v_new = jax.tree.map(lambda v, d: (v + d.astype(v.dtype)), state.v, delta)
-        mixed = mixer(delta)
+        mixed = mixer(delta, kmix)
         v_bar_new = jax.tree.map(lambda vb, m: (vb + m.astype(vb.dtype)),
                                  state.v_bar, mixed)
 
@@ -188,7 +188,8 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
 # DSGLD — uncompressed decentralized Bayesian baseline (Eq. 4)
 # --------------------------------------------------------------------------
 
-def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0):
+def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0,
+                     mixer=None):
     """One DSGLD iteration: θ_{k,t+1} = Σ_j ω_kj θ_j - η ∇f_k + √(2η) ξ.
 
     For fairness against CD-BFL with L local steps, ``batches`` still has the
@@ -199,10 +200,15 @@ def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0):
     eta = fed_cfg.eta
     K = fed_cfg.num_nodes
     omega = jnp.asarray(omega, jnp.float32)
+    if mixer is None:
+        mixer = _default_mixer(omega, fed_cfg)
+    else:
+        from repro.core.gossip import as_keyed_mixer
+        mixer = as_keyed_mixer(mixer)
     prior_weight = 1.0 / K
 
     def round_fn(state: FedState, batches, key) -> Tuple[FedState, RoundMetrics]:
-        knoise, kgrad = jax.random.split(key)
+        knoise, kmix = jax.random.split(key)
         batch0 = jax.tree.map(lambda b: b[:, 0], batches)  # (K, ...)
 
         def node_grad(p, b, k):
@@ -220,7 +226,7 @@ def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0):
         )
         losses, grads = jax.vmap(node_grad)(state.params, batch0, node_keys)
 
-        mixed = _mix(omega, state.params)       # full θ exchange (uncompressed)
+        mixed = mixer(state.params, kmix)       # full θ exchange (uncompressed)
         noise = _langevin_noise(knoise, state.params, eta, fed_cfg.temperature)
         params_new = jax.tree.map(
             lambda m, g, n: (
@@ -247,16 +253,23 @@ def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0):
 # --------------------------------------------------------------------------
 
 def make_cffl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
-                    data_scale: float = 1.0):
+                    data_scale: float = 1.0, mixer=None):
     """CD-BFL minus the Langevin noise and prior: a point-estimate learner."""
     eta = fed_cfg.eta
     zeta = fed_cfg.zeta
     K = fed_cfg.num_nodes
     L = fed_cfg.local_steps
     omega = jnp.asarray(omega, jnp.float32)
+    if mixer is None:
+        mixer = _default_mixer(omega, fed_cfg)
+    else:
+        from repro.core.gossip import as_keyed_mixer
+        mixer = as_keyed_mixer(mixer)
 
     def round_fn(state: FedState, batches, key) -> Tuple[FedState, RoundMetrics]:
+        # same key derivation as cdbfl so the compressor streams coincide
         kq, _ = jax.random.split(key)
+        kmix = jax.random.fold_in(key, 2)
         node_keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
             state.key, state.round
         )
@@ -270,7 +283,7 @@ def make_cffl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
                                 state.v)
         delta = compressor(residual, kq)
         v_new = jax.tree.map(lambda v, d: (v + d.astype(v.dtype)), state.v, delta)
-        mixed = _mix(omega, delta)
+        mixed = mixer(delta, kmix)
         v_bar_new = jax.tree.map(lambda vb, m: (vb + m.astype(vb.dtype)),
                                  state.v_bar, mixed)
         params_new = jax.tree.map(
@@ -332,11 +345,15 @@ ALGORITHMS = {
 
 
 def make_round_fn(algorithm: str, loss_fn: LossFn, fed_cfg, omega,
-                  compressor: Compressor = None, data_scale: float = 1.0):
+                  compressor: Compressor = None, data_scale: float = 1.0,
+                  mixer=None):
     if algorithm == "cdbfl":
-        return make_cdbfl_round(loss_fn, fed_cfg, omega, compressor, data_scale)
+        return make_cdbfl_round(loss_fn, fed_cfg, omega, compressor,
+                                data_scale, mixer=mixer)
     if algorithm == "dsgld":
-        return make_dsgld_round(loss_fn, fed_cfg, omega, data_scale)
+        return make_dsgld_round(loss_fn, fed_cfg, omega, data_scale,
+                                mixer=mixer)
     if algorithm == "cffl":
-        return make_cffl_round(loss_fn, fed_cfg, omega, compressor, data_scale)
+        return make_cffl_round(loss_fn, fed_cfg, omega, compressor,
+                               data_scale, mixer=mixer)
     raise ValueError(f"unknown algorithm {algorithm!r}")

@@ -1,24 +1,33 @@
 """Gossip communicators: how Ω-mixing executes on the machine.
 
-* ``dense_mix`` — einsum with the full Ω (general graphs; on a mesh it
-  lowers to an all-gather along the fed axis: O(K·p) wire bytes).
-* ``ring_mix``  — exploits the circulant structure of a ring Ω:
-  ``w_self·x + w_side·(roll(x,+1) + roll(x,-1))`` along the node axis.
-  When that axis is mesh-sharded, GSPMD lowers the rolls to
-  collective-permutes: O(2·p) wire bytes regardless of K, and per-leaf
-  body shardings are untouched. The beyond-paper collective optimization
-  for CD-BFL on the production mesh (EXPERIMENTS §Perf pair 5).
+* ``dense_mix`` — einsum with the full Ω (reference oracle for any graph; on
+  a mesh it lowers to an all-gather along the fed axis: O(K·p) wire bytes).
+* ``schedule_mix`` — executes a :class:`repro.core.topology.MixSchedule`:
+  Ω x = x + Σ_m w_m ⊙ (x[perm_m] - x) over the ≤ ~deg(G) edge matchings of
+  the graph. Each matching application is a static permutation of the node
+  axis; when that axis is mesh-sharded, GSPMD lowers it to a
+  collective-permute — O(deg·p) wire bytes regardless of K, and per-leaf
+  body shardings are untouched (EXPERIMENTS §Perf pair 5 measured the ring
+  case; DESIGN.md §4 covers the general lowering). Circulant Ω (ring,
+  k-regular) takes a ``jnp.roll`` fast path. With a PRNG key the schedule
+  becomes time-varying: per-round link dropout and gossip-pair sampling,
+  still symmetric doubly stochastic per realization.
+* ``ring_mix`` — the original circulant ring special case, kept as a
+  back-compat alias of the roll fast path.
 
-Both are numerically identical for ring topologies (Metropolis ring Ω is
-circulant with weights (w_self, w_side, w_side)).
+All mixers are numerically identical to ``dense_mix`` on the same Ω.
 """
 from __future__ import annotations
 
-from typing import Optional
+import inspect
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.config import TopologyConfig
+from repro.core.topology import MixSchedule, build_schedule
 
 
 def dense_mix(omega, tree):
@@ -48,9 +57,149 @@ def ring_mix(omega: np.ndarray, tree):
     return jax.tree.map(leaf, tree)
 
 
-def make_mixer(omega: np.ndarray, topology: str,
+def _roll_mix(schedule: MixSchedule, tree):
+    """Circulant fast path: Ω x = Σ_s c_s · roll(x, -s)."""
+    shifts, coeffs = schedule.shifts, schedule.coeffs
+
+    def leaf(d):
+        x = d.astype(jnp.float32)
+        out = sum((c * x if s == 0 else c * jnp.roll(x, -s, axis=0))
+                  for s, c in zip(shifts, coeffs))
+        return out.astype(d.dtype)
+
+    return jax.tree.map(leaf, tree)
+
+
+def _matching_masks(schedule: MixSchedule, key, link_failure_prob: float,
+                    gossip_pairs: int):
+    """Per-round (M, K) activation mask, symmetric per edge, from a key.
+
+    Link dropout: per matching, draw u ~ U(K) per node and give edge (i, j)
+    the symmetric uniform value (u_i + u_j) mod 1 — both endpoints see the
+    same coin, so the realized Ω_t stays symmetric. Gossip-pair sampling:
+    keep only ``gossip_pairs`` matchings, chosen uniformly per round.
+    Everything is shape-static, so the caller's round stays jit-pure.
+    """
+    m, k = schedule.perms.shape
+    perms = jnp.asarray(schedule.perms)
+    mask = jnp.ones((m, k), jnp.float32)
+    kdrop, kpair = jax.random.split(key)
+    if link_failure_prob > 0.0:
+        u = jax.random.uniform(kdrop, (m, k))
+        u_peer = jnp.take_along_axis(u, perms, axis=1)
+        edge_coin = jnp.mod(u + u_peer, 1.0)
+        mask = mask * (edge_coin >= link_failure_prob).astype(jnp.float32)
+    if gossip_pairs > 0 and gossip_pairs < m:
+        chosen = jax.random.choice(kpair, m, (gossip_pairs,), replace=False)
+        sel = jnp.zeros((m,), jnp.float32).at[chosen].set(1.0)
+        mask = mask * sel[:, None]
+    return mask
+
+
+def schedule_mix(schedule: MixSchedule, tree, key=None, *,
+                 link_failure_prob: float = 0.0, gossip_pairs: int = 0):
+    """Sparse Ω-mixing as a sum of matching permutations (Laplacian form).
+
+    ``x + Σ_m mask_m·w_m·(x[perm_m] - x)`` is symmetric doubly stochastic
+    for *any* symmetric edge mask, which is what makes per-round dropout
+    safe: a dead link simply leaves both endpoints holding their own value.
+    Without a key (or with both knobs at 0) this is exactly Ω x.
+    """
+    m = schedule.num_perms
+    if m == 0:
+        return tree
+    time_varying = key is not None and (link_failure_prob > 0.0
+                                        or 0 < gossip_pairs < m)
+    if not time_varying and schedule.shifts is not None:
+        return _roll_mix(schedule, tree)
+
+    perms = jnp.asarray(schedule.perms)
+    weights = jnp.asarray(schedule.weights)
+    if time_varying:
+        weights = weights * _matching_masks(schedule, key, link_failure_prob,
+                                            gossip_pairs)
+
+    def leaf(d):
+        x = d.astype(jnp.float32)
+        extra = (1,) * (x.ndim - 1)
+        out = x
+        for i in range(m):
+            w = weights[i].reshape((schedule.k,) + extra)
+            out = out + w * (jnp.take(x, perms[i], axis=0) - x)
+        return out.astype(d.dtype)
+
+    return jax.tree.map(leaf, tree)
+
+
+def plan_mixer(omega: np.ndarray, config: Optional[TopologyConfig] = None,
                use_ring: bool = True):
-    """Returns mix(tree) -> tree (leaves lead with the node axis K)."""
-    if topology == "ring" and use_ring:
-        return lambda tree: ring_mix(np.asarray(omega), tree)
-    return lambda tree: dense_mix(omega, tree)
+    """Decide the lowering for Ω: (mode, schedule).
+
+    ``mode`` is one of ``"identity"`` (K=1 / no edges), ``"dense"`` (the
+    all-gather oracle: deg ≥ K-1 or K ≤ 2 — no cheaper than K-1 permutes),
+    ``"schedule"`` (static sparse mixer), or ``"schedule_tv"`` (per-round
+    masks from ``config.link_failure_prob`` / ``config.gossip_pairs``).
+    Single source of truth: ``make_mixer`` executes this decision and
+    reporting code (launch/train, bench_topology_sweep) prints it, so the
+    wire numbers shown always describe the lowering that runs.
+    """
+    om = np.asarray(omega, np.float64)
+    k = om.shape[0]
+    p_drop = float(config.link_failure_prob) if config is not None else 0.0
+    pairs = int(config.gossip_pairs) if config is not None else 0
+    if k == 1:
+        return "identity", None
+    # dense graphs land on the all-gather anyway (unless a time-varying
+    # schedule is requested): skip the O(E·deg) matching decomposition
+    adj = (np.abs(om) > 1e-12) & ~np.eye(k, dtype=bool)
+    max_deg = int(adj.sum(axis=1).max())
+    if p_drop == 0.0 and pairs == 0 and (k <= 2 or max_deg >= k - 1):
+        return "dense", None
+    schedule = build_schedule(om)
+    if schedule.num_perms == 0:
+        return "dense", schedule
+    if p_drop > 0.0 or 0 < pairs < schedule.num_perms:
+        return "schedule_tv", schedule
+    if k <= 2 or schedule.num_perms >= k - 1 or not use_ring:
+        return "dense", schedule
+    return "schedule", schedule
+
+
+def make_mixer(omega: np.ndarray, topology: Optional[str] = None,
+               use_ring: bool = True, *,
+               config: Optional[TopologyConfig] = None) -> Callable:
+    """Build mix(tree, key=None) -> tree for any graph (leaves lead with K).
+
+    Executes the cheapest exact lowering per :func:`plan_mixer`: schedule
+    mixer (rolls when circulant) for sparse graphs, per-round masked
+    schedule for time-varying configs, dense all-gather oracle otherwise.
+    ``topology``/``use_ring`` are accepted for back compatibility; the
+    graph family is inferred from Ω's sparsity, so no string dispatch
+    remains.
+    """
+    om = np.asarray(omega, np.float64)
+    mode, schedule = plan_mixer(om, config, use_ring)
+    if mode == "identity":
+        return lambda tree, key=None: tree
+    if mode == "dense":
+        return lambda tree, key=None: dense_mix(om, tree)
+    if mode == "schedule_tv":
+        p_drop = float(config.link_failure_prob)
+        pairs = int(config.gossip_pairs)
+        return lambda tree, key=None: schedule_mix(
+            schedule, tree, key, link_failure_prob=p_drop, gossip_pairs=pairs)
+    return lambda tree, key=None: schedule_mix(schedule, tree)
+
+
+def as_keyed_mixer(mixer: Callable) -> Callable:
+    """Adapt a legacy mix(tree) callable to the mix(tree, key) convention."""
+    try:
+        params = inspect.signature(mixer).parameters
+        n = len([p for p in params.values()
+                 if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD,
+                               p.VAR_POSITIONAL)])
+    except (TypeError, ValueError):
+        n = 2
+    if n >= 2:
+        return mixer
+    return lambda tree, key=None: mixer(tree)

@@ -3,6 +3,12 @@
 Ω must be symmetric and doubly stochastic; entries follow the
 Metropolis-Hastings weights of Xiao & Boyd '04 [25] (the paper's choice via
 [35]) or simpler uniform/max-degree rules.
+
+This is the legacy string API; generation lives in ``repro.core.topology``
+(one implementation for every family, incl. torus, k-regular,
+Erdős–Rényi, random-geometric, with that module's default parameters).
+Note: ``grid`` with non-square k factorizes to the nearest r×c lattice
+(with a warning when it degenerates) instead of raising.
 """
 from __future__ import annotations
 
@@ -11,60 +17,19 @@ import numpy as np
 
 def adjacency(topology: str, k: int) -> np.ndarray:
     """0/1 adjacency (no self loops) for the supported graph families."""
-    a = np.zeros((k, k), dtype=np.float64)
-    if k == 1:
-        return a
-    if topology == "full":
-        a = np.ones((k, k)) - np.eye(k)
-    elif topology == "ring":
-        for i in range(k):
-            a[i, (i + 1) % k] = 1.0
-            a[i, (i - 1) % k] = 1.0
-        if k == 2:
-            a = np.array([[0.0, 1.0], [1.0, 0.0]])
-    elif topology == "star":
-        a[0, 1:] = 1.0
-        a[1:, 0] = 1.0
-    elif topology == "grid":
-        side = int(np.sqrt(k))
-        if side * side != k:
-            raise ValueError(f"grid topology needs square k, got {k}")
-        for i in range(k):
-            r, c = divmod(i, side)
-            for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
-                rr, cc = r + dr, c + dc
-                if 0 <= rr < side and 0 <= cc < side:
-                    a[i, rr * side + cc] = 1.0
-    else:
-        raise ValueError(f"unknown topology {topology!r}")
-    return a
+    from repro.core.topology import graph_adjacency
+    return graph_adjacency(topology, k)
 
 
 def mixing_matrix(topology: str, k: int, rule: str = "metropolis") -> np.ndarray:
     """Symmetric doubly-stochastic Ω for the given graph."""
+    from repro.core.topology import mixing_weights
     if k == 1:
         return np.ones((1, 1))
-    a = adjacency(topology, k)
-    deg = a.sum(axis=1)
-    w = np.zeros_like(a)
-    if rule == "metropolis":
-        for i in range(k):
-            for j in range(k):
-                if a[i, j]:
-                    w[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
-    elif rule == "max_degree":
-        dmax = deg.max()
-        w = a / (dmax + 1.0)
-    elif rule == "uniform":
-        # only doubly stochastic for regular graphs (full/ring/grid-torus)
-        w = a / (deg.max() + 1.0)
-    else:
-        raise ValueError(f"unknown mixing rule {rule!r}")
-    np.fill_diagonal(w, 1.0 - w.sum(axis=1))
-    return w
+    return mixing_weights(adjacency(topology, k), rule)
 
 
 def spectral_gap(omega: np.ndarray) -> float:
     """1 - |lambda_2|: governs consensus speed (used in tests/benchmarks)."""
-    ev = np.sort(np.abs(np.linalg.eigvals(omega)))[::-1]
-    return float(1.0 - ev[1]) if len(ev) > 1 else 1.0
+    from repro.core.topology import spectral_gap as _sg
+    return _sg(omega)

@@ -250,6 +250,8 @@ def dryrun_combo(arch_id: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time()
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per program
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_d = {

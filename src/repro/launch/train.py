@@ -21,9 +21,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import save_checkpoint
-from repro.config import FedConfig, get_arch
-from repro.core import (init_fed_state, make_compressor, make_round_fn,
-                        mixing_matrix)
+from repro.config import FedConfig, TopologyConfig, get_arch
+from repro.core import (build_topology, init_fed_state, make_compressor,
+                        make_round_fn)
+from repro.core.gossip import plan_mixer
+from repro.core.topology import GRAPHS, dense_wire_bytes
 from repro.data.synthetic_lm import fed_lm_round_batch
 from repro.models import get_model
 
@@ -41,7 +43,19 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--eta", type=float, default=1e-4)
     ap.add_argument("--zeta", type=float, default=0.3)
-    ap.add_argument("--topology", default="ring")
+    ap.add_argument("--topology", default="ring", choices=list(GRAPHS))
+    ap.add_argument("--degree", type=int, default=4,
+                    help="k_regular neighbor count")
+    ap.add_argument("--edge-prob", type=float, default=0.3,
+                    help="erdos_renyi link probability")
+    ap.add_argument("--radius", type=float, default=0.45,
+                    help="geometric radio range (unit square)")
+    ap.add_argument("--link-failure", type=float, default=0.0,
+                    help="per-round per-link dropout probability")
+    ap.add_argument("--gossip-pairs", type=int, default=0,
+                    help=">0: activate only this many matchings per round")
+    ap.add_argument("--topo-seed", type=int, default=0,
+                    help="graph-sampling seed (erdos_renyi/geometric)")
     ap.add_argument("--compressor", default="block_topk")
     ap.add_argument("--ratio", type=float, default=0.01)
     ap.add_argument("--ckpt-dir", default=None)
@@ -51,13 +65,20 @@ def main():
     spec = get_arch(args.arch)
     cfg = spec.reduced if args.trim else spec.config
     model = get_model(cfg)
+    topo_cfg = TopologyConfig(
+        graph=args.topology, degree=args.degree, edge_prob=args.edge_prob,
+        radius=args.radius, seed=args.topo_seed,
+        link_failure_prob=args.link_failure, gossip_pairs=args.gossip_pairs,
+    )
     fed = FedConfig(
         num_nodes=args.nodes, local_steps=args.local_steps,
         eta=args.eta, zeta=args.zeta, topology=args.topology,
+        topology_cfg=topo_cfg,
         compressor=args.compressor, compress_ratio=args.ratio,
         algorithm=args.algorithm,
     )
-    omega = mixing_matrix(fed.topology, fed.num_nodes, fed.mixing)
+    topo = build_topology(topo_cfg, fed.num_nodes)
+    omega = topo.omega
     comp = make_compressor(fed)
     round_fn = jax.jit(make_round_fn(args.algorithm, model.loss, fed, omega,
                                      comp, data_scale=1.0))
@@ -66,12 +87,32 @@ def main():
     params0 = model.init(key)
     n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params0))
     state = init_fed_state(params0, fed, key=key)
-    wire = comp.wire_bytes(params0)
+    # dsgld gossips uncompressed θ; the compressed algorithms ship Q(Δθ)
+    wire = (n_params * 4 if args.algorithm == "dsgld"
+            else comp.wire_bytes(params0))
+    # report exactly the lowering make_mixer will execute (same decision fn)
+    mode, sched = plan_mixer(omega, topo_cfg)
+    n_perms = sched.num_perms if sched else 0
+    if mode.startswith("schedule"):
+        # expected payloads/round: gossip-pair sampling activates only
+        # `pairs` matchings, and each surviving edge beats link dropout
+        active = (args.gossip_pairs if 0 < args.gossip_pairs < n_perms
+                  else n_perms)
+        gossip_wire = active * wire * (1.0 - args.link_failure)
+    else:
+        gossip_wire = dense_wire_bytes(fed.num_nodes, wire)
     print(f"arch={cfg.name} params={n_params/1e6:.2f}M nodes={fed.num_nodes} "
           f"L={fed.local_steps} Q={fed.compressor}@{fed.compress_ratio} "
           f"wire={wire/1e6:.3f}MB/node/round "
           f"(dense {n_params*4/1e6:.1f}MB, saving "
           f"{100*(1-wire/(n_params*4)):.1f}%)")
+    print(f"topology={topo.describe()} |λ2|={topo.lambda2:.4f} "
+          f"mixer={mode} matchings={n_perms} "
+          f"gossip_wire={gossip_wire/1e6:.3f}MB/node/round "
+          f"(dense all-gather "
+          f"{dense_wire_bytes(fed.num_nodes, wire)/1e6:.3f}MB)"
+          + (f" link_failure={args.link_failure}" if args.link_failure else "")
+          + (f" gossip_pairs={args.gossip_pairs}" if args.gossip_pairs else ""))
 
     t0 = time.time()
     for t in range(args.rounds):

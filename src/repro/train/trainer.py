@@ -18,9 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (FedState, SampleBank, bma_predict, calibration,
-                        init_fed_state, make_compressor, make_round_fn,
-                        mixing_matrix, point_predict)
+from repro.core import (FedState, SampleBank, bma_predict, build_topology,
+                        calibration, init_fed_state, make_compressor,
+                        make_round_fn, point_predict, resolve_topology)
 from repro.data.partition import minibatch_stack
 
 
@@ -49,8 +49,10 @@ class FedTrainer:
         self.shards = shards
         self.minibatch = minibatch
         self.rng = np.random.default_rng(seed)
-        self.omega = mixing_matrix(fed_cfg.topology, fed_cfg.num_nodes,
-                                   fed_cfg.mixing)
+        # any TopologyConfig graph (legacy string configs map onto one)
+        self.topology = build_topology(resolve_topology(fed_cfg),
+                                       fed_cfg.num_nodes)
+        self.omega = self.topology.omega
         self.compressor = make_compressor(fed_cfg)
         # E_k scaling of the minibatch-mean NLL (paper Eq. 3): mean local size
         if data_scale is None:
@@ -69,9 +71,8 @@ class FedTrainer:
 
         # wire cost per round (the paper's communication-overhead metric):
         # every node sends its compressed Δθ to each neighbor once per round
-        from repro.core.mixing import adjacency
         from repro.utils.tree import tree_count
-        n_edges = adjacency(fed_cfg.topology, fed_cfg.num_nodes).sum()
+        n_edges = self.topology.adjacency.sum()
         per_node = self.compressor.wire_bytes(params0)
         if fed_cfg.algorithm == "dsgld":
             per_node = tree_count(params0) * 4

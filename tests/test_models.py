@@ -231,5 +231,7 @@ def test_gshard_capacity_drop_error_decreases():
         b = get_model(cfg_g).logits(params, {"tokens": tokens})
         assert bool(jnp.all(jnp.isfinite(b)))
         rels.append(float(jnp.linalg.norm(a - b) / jnp.linalg.norm(a)))
-    assert rels[0] >= rels[1] >= rels[2]
+    # monotone up to float noise: with no drops all rels sit at ~1e-7
+    eps = 1e-6
+    assert rels[0] >= rels[1] - eps >= rels[2] - 2 * eps, rels
     assert rels[2] < 1e-4, rels

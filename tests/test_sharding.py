@@ -10,8 +10,17 @@ from repro.config import get_arch
 from repro.launch import sharding as shd
 from repro.models import get_model
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(sizes, names):
+    """AbstractMesh across jax versions: 0.4.x wants ((name, size), ...),
+    newer releases want (sizes, names)."""
+    try:
+        return AbstractMesh(tuple(zip(names, sizes)))
+    except TypeError:
+        return AbstractMesh(sizes, names)
+
+
+MESH = _abstract_mesh((16, 16), ("data", "model"))
+MESH3 = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_logical_axes_suffix_match():

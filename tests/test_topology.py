@@ -1,0 +1,249 @@
+"""Topology subsystem: graph generators, Ω properties, schedule mixer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FedConfig, TopologyConfig
+from repro.core.gossip import dense_mix, make_mixer, schedule_mix
+from repro.core.topology import (Topology, build_schedule, build_topology,
+                                 circulant_coefficients, dense_wire_bytes,
+                                 edge_matchings, graph_adjacency,
+                                 resolve_topology, spectral_gap)
+
+K = 12
+
+CONFIGS = [
+    ("full", TopologyConfig(graph="full")),
+    ("ring", TopologyConfig(graph="ring")),
+    ("chain", TopologyConfig(graph="chain")),
+    ("star", TopologyConfig(graph="star")),
+    ("grid", TopologyConfig(graph="grid")),
+    ("torus", TopologyConfig(graph="torus")),
+    ("k_regular", TopologyConfig(graph="k_regular", degree=4)),
+    ("erdos_renyi", TopologyConfig(graph="erdos_renyi", edge_prob=0.3,
+                                   seed=3)),
+    ("geometric", TopologyConfig(graph="geometric", radius=0.5, seed=7)),
+]
+
+
+def _tree(k, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(key, (k, 7, 3)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (k, 5))}
+
+
+# --------------------------------------------------------------------------
+# Ω properties
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,cfg", CONFIGS)
+@pytest.mark.parametrize("k", [5, 12])
+def test_omega_symmetric_doubly_stochastic(name, cfg, k):
+    topo = build_topology(cfg, k)
+    w = topo.omega
+    np.testing.assert_allclose(w, w.T, atol=1e-12)
+    np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-9)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-9)
+    assert (w >= -1e-12).all()
+
+
+@pytest.mark.parametrize("name,cfg", CONFIGS)
+def test_omega_sparsity_matches_declared_graph(name, cfg):
+    topo = build_topology(cfg, K)
+    off = topo.omega - np.diag(np.diag(topo.omega))
+    # every declared edge carries weight; no weight off the graph support
+    assert (np.abs(off)[topo.adjacency > 0] > 0).all()
+    assert np.abs(off)[topo.adjacency == 0].max() == 0.0
+    assert np.diag(topo.adjacency).sum() == 0
+
+
+@pytest.mark.parametrize("name,cfg", CONFIGS)
+def test_graphs_are_connected(name, cfg):
+    # ergodicity: repaired ER/geometric included, gap must be positive
+    topo = build_topology(cfg, K)
+    assert topo.spectral_gap > 1e-6
+
+
+def test_spectral_gap_ordering():
+    k = 16
+    gaps = {n: build_topology(c, k).spectral_gap
+            for n, c in CONFIGS if n in ("full", "torus", "ring", "chain")}
+    assert gaps["full"] >= gaps["torus"] >= gaps["ring"] >= gaps["chain"] > 0
+
+
+def test_k1_and_k2_degenerate():
+    for name, cfg in CONFIGS:
+        t1 = build_topology(cfg, 1)
+        assert t1.omega.shape == (1, 1) and t1.omega[0, 0] == 1.0
+    t2 = build_topology(TopologyConfig(graph="ring"), 2)
+    np.testing.assert_allclose(t2.omega.sum(1), 1.0)
+
+
+def test_geometric_and_er_deterministic_per_seed():
+    a1 = graph_adjacency("geometric", K, radius=0.5, seed=7)
+    a2 = graph_adjacency("geometric", K, radius=0.5, seed=7)
+    a3 = graph_adjacency("geometric", K, radius=0.5, seed=8)
+    np.testing.assert_array_equal(a1, a2)
+    assert not np.array_equal(a1, a3)
+
+
+# --------------------------------------------------------------------------
+# Schedule decomposition
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,cfg", CONFIGS)
+def test_matchings_are_vertex_disjoint_and_cover(name, cfg):
+    adj = build_topology(cfg, K).adjacency
+    ms = edge_matchings(adj)
+    seen = set()
+    for m in ms:
+        nodes = [n for e in m for n in e]
+        assert len(nodes) == len(set(nodes))   # vertex-disjoint
+        seen.update(frozenset(e) for e in m)
+    want = {frozenset((i, j)) for i in range(K) for j in range(i + 1, K)
+            if adj[i, j]}
+    assert seen == want                         # covers E exactly once
+
+
+@pytest.mark.parametrize("name,cfg", CONFIGS)
+def test_schedule_mix_equals_dense(name, cfg):
+    # the acceptance bar: sparse schedule ≡ dense oracle on the same Ω,
+    # for every topology (not just ring), to ≤1e-5 in float32
+    topo = build_topology(cfg, K)
+    sched = build_schedule(topo.omega)
+    a = schedule_mix(sched, _tree(K))
+    b = dense_mix(topo.omega, _tree(K))
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+@pytest.mark.parametrize("name,cfg", CONFIGS)
+def test_make_mixer_matches_dense(name, cfg):
+    topo = build_topology(cfg, K)
+    out = make_mixer(topo.omega, config=cfg)(_tree(K))
+    want = dense_mix(topo.omega, _tree(K))
+    for x, y in zip(jax.tree.leaves(out), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+def test_circulant_fast_path():
+    for graph, deg in (("ring", 2), ("k_regular", 4)):
+        topo = build_topology(TopologyConfig(graph=graph, degree=deg), K)
+        sched = build_schedule(topo.omega)
+        assert sched.shifts is not None
+        assert circulant_coefficients(topo.omega) is not None
+    assert build_schedule(
+        build_topology(TopologyConfig(graph="chain"), K).omega).shifts is None
+
+
+def test_schedule_wire_bytes_scale_with_degree_not_k():
+    payload = 1000.0
+    for k in (8, 16, 32):
+        sched = build_schedule(
+            build_topology(TopologyConfig(graph="ring"), k).omega)
+        assert sched.wire_bytes(payload) == 2 * payload     # O(deg·p)
+        assert dense_wire_bytes(k, payload) == (k - 1) * payload
+
+
+# --------------------------------------------------------------------------
+# Time-varying schedules
+# --------------------------------------------------------------------------
+
+def test_time_varying_deterministic_under_fixed_key():
+    topo = build_topology(TopologyConfig(graph="torus"), K)
+    sched = build_schedule(topo.omega)
+    key = jax.random.PRNGKey(11)
+    a = schedule_mix(sched, _tree(K), key, link_failure_prob=0.4)
+    b = schedule_mix(sched, _tree(K), key, link_failure_prob=0.4)
+    c = schedule_mix(sched, _tree(K), jax.random.PRNGKey(12),
+                     link_failure_prob=0.4)
+    np.testing.assert_array_equal(np.asarray(a["a"]), np.asarray(b["a"]))
+    assert not np.array_equal(np.asarray(a["a"]), np.asarray(c["a"]))
+
+
+@pytest.mark.parametrize("kwargs", [
+    {"link_failure_prob": 0.5}, {"gossip_pairs": 1},
+    {"link_failure_prob": 0.3, "gossip_pairs": 2},
+])
+def test_time_varying_preserves_node_mean(kwargs):
+    """Every Ω_t realization stays doubly stochastic: dropping links must
+    not move the node average CD-BFL's consensus relies on."""
+    topo = build_topology(TopologyConfig(graph="k_regular", degree=4), K)
+    sched = build_schedule(topo.omega)
+    tree = _tree(K)
+    for seed in range(3):
+        out = schedule_mix(sched, tree, jax.random.PRNGKey(seed), **kwargs)
+        for x, y in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+            np.testing.assert_allclose(
+                np.asarray(x).mean(0), np.asarray(y).mean(0), atol=1e-5)
+
+
+def test_dropout_zero_is_exact_mix():
+    topo = build_topology(TopologyConfig(graph="grid"), 9)
+    sched = build_schedule(topo.omega)
+    out = schedule_mix(sched, _tree(9), jax.random.PRNGKey(0),
+                       link_failure_prob=0.0)
+    want = dense_mix(topo.omega, _tree(9))
+    for x, y in zip(jax.tree.leaves(out), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+def test_gossip_pair_sampling_activates_one_matching():
+    topo = build_topology(TopologyConfig(graph="ring"), 8)
+    sched = build_schedule(topo.omega)
+    tree = _tree(8)
+    out = schedule_mix(sched, tree, jax.random.PRNGKey(4), gossip_pairs=1)
+    # exactly one matching applied: half the ring weight moved, mean kept
+    moved = np.asarray(out["b"]) - np.asarray(tree["b"])
+    assert np.abs(moved).max() > 0
+    np.testing.assert_allclose(np.asarray(out["b"]).mean(0),
+                               np.asarray(tree["b"]).mean(0), atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# End-to-end wiring
+# --------------------------------------------------------------------------
+
+def test_resolve_topology_prefers_config():
+    fed = FedConfig(topology="ring",
+                    topology_cfg=TopologyConfig(graph="torus"))
+    assert resolve_topology(fed).graph == "torus"
+    assert resolve_topology(FedConfig(topology="ring")).graph == "ring"
+
+
+def test_round_fn_runs_on_time_varying_graph():
+    from repro.core import init_fed_state, make_compressor, make_round_fn
+
+    def quad_loss(params, batch, key):
+        x, y = batch
+        return jnp.mean((x @ params["w"] - y) ** 2), ()
+
+    k, L, dim = 6, 2, 5
+    tc = TopologyConfig(graph="geometric", radius=0.6, seed=1,
+                        link_failure_prob=0.25)
+    fed = FedConfig(num_nodes=k, local_steps=L, eta=1e-2, zeta=0.3,
+                    compressor="topk", compress_ratio=0.5,
+                    topology="geometric", topology_cfg=tc)
+    topo = build_topology(tc, k)
+    rf = jax.jit(make_round_fn("cdbfl", quad_loss, fed, topo.omega,
+                               make_compressor(fed)))
+    state = init_fed_state({"w": jnp.zeros((dim,))}, fed)
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (k, L, 8, dim))
+    Y = X @ jnp.ones((dim,))
+    s1, m1 = rf(state, (X, Y), key)
+    s2, m2 = rf(state, (X, Y), key)
+    # deterministic under a fixed key, finite, and round counter advances
+    np.testing.assert_array_equal(np.asarray(s1.params["w"]),
+                                  np.asarray(s2.params["w"]))
+    assert np.isfinite(np.asarray(s1.params["w"])).all()
+    assert np.isfinite(m1.loss).all()
+    assert int(s1.round) == 1
+
+
+def test_legacy_mixing_matrix_delegates_new_graphs():
+    from repro.core.mixing import mixing_matrix
+    w = mixing_matrix("torus", 12)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-9)
+    assert spectral_gap(w) > 0
