@@ -1,0 +1,217 @@
+"""Round-engine throughput: seed-style host loop vs scan-fused engine.
+
+Measures rounds/sec of the two execution engines (DESIGN.md §8) across
+model sizes and chunk lengths, and reports the *host-overhead fraction*
+``1 - scan_s/host_s`` — the share of the per-round wall time the seed
+harness spent on host-side work (numpy minibatch sampling + H2D, one jit
+dispatch per round, blocking metric syncs, D2H posterior-bank pulls) that
+the scan engine eliminates.
+
+Model sizes span the two regimes:
+
+* ``linear32`` — a CD-BFL round over a 32-dim linear model: dispatch-bound
+  (round compute ≪ host overhead). This is where scan fusion shines.
+* ``lenet16`` / ``lenet32x16`` — the paper's radar LeNet at CI scale:
+  compute-bound on CPU (conv fwd+bwd dominates), so the engines converge.
+
+Every invocation also *proves* engine equivalence: HostRoundEngine and
+ScanRoundEngine consume identical PRNG streams, and the final params are
+asserted allclose before any timing is reported.
+
+    PYTHONPATH=src python benchmarks/bench_round_engine.py [--tiny|--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FedConfig, get_arch
+from repro.core import (SampleBank, build_topology, init_fed_state,
+                        make_compressor, make_round_fn, resolve_topology)
+from repro.core.posterior import DeviceSampleBank
+from repro.data.partition import (DeviceShards, minibatch_stack,
+                                  partition_iid)
+from repro.models import get_model
+from repro.train.engine import make_engine
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results",
+                           "round_engine")
+
+
+# --------------------------------------------------------------------------
+# Model-size worlds
+# --------------------------------------------------------------------------
+
+def _linear_world(k: int, dim: int = 32, per_node: int = 50):
+    rng = np.random.default_rng(0)
+    shards = [{"x": rng.normal(size=(per_node, dim)).astype(np.float32),
+               "y": rng.normal(size=(per_node,)).astype(np.float32)}
+              for _ in range(k)]
+
+    def loss(params, batch, key):
+        pred = batch["x"] @ params["w"] + params["b"]
+        return jnp.mean((pred - batch["y"]) ** 2), ()
+
+    params0 = {"w": jnp.zeros((dim,)), "b": jnp.zeros(())}
+    return loss, params0, shards
+
+
+def _lenet_world(k: int, hw, per_node: int = 50):
+    cfg = get_arch("lenet-radar").reduced.replace(input_hw=hw)
+    model = get_model(cfg)
+    from repro.data.radar import make_dataset
+    ds = make_dataset(k * per_node, hw=hw, day=1, seed=0)
+    shards = partition_iid(ds, k)
+    params0 = model.init(jax.random.PRNGKey(0))
+    return model.loss, params0, shards
+
+
+SIZES = {
+    "linear32": lambda k: _linear_world(k),
+    "lenet16": lambda k: _lenet_world(k, (16, 16)),
+    "lenet32x16": lambda k: _lenet_world(k, (32, 16)),
+}
+
+
+# --------------------------------------------------------------------------
+# Measurement
+# --------------------------------------------------------------------------
+
+def measure(size: str, chunk: int, rounds: int, k: int = 5, local_steps: int = 2,
+            minibatch: int = 4, verify_rounds: int = 8) -> Dict:
+    """Time host loop vs scan engine; assert engine equivalence first."""
+    loss_fn, params0, shards = SIZES[size](k)
+    fed = FedConfig(
+        num_nodes=k, local_steps=local_steps, eta=1e-3, zeta=0.3, burn_in=0,
+        compressor="topk", compress_ratio=0.1, topology="ring",
+        algorithm="cdbfl",
+    )
+    topo = build_topology(resolve_topology(fed), k)
+    comp = make_compressor(fed)
+    round_fn = make_round_fn("cdbfl", loss_fn, fed, topo.omega, comp,
+                             data_scale=50.0)
+    dshards = DeviceShards.from_shards(shards)
+    bank_cfg = DeviceSampleBank(burn_in=0, capacity=40, thin=1)
+    key = jax.random.PRNGKey(0)
+
+    # -- equivalence proof: same streams, allclose final params ------------
+    def run_engine(name, n):
+        eng = make_engine(name, round_fn, dshards, local_steps, minibatch,
+                          bank=bank_cfg, chunk=chunk)
+        state = init_fed_state(params0, fed, key=key)
+        bs = (bank_cfg.init(state.params) if name == "scan"
+              else eng.make_bank())
+        return eng.run(state, jax.random.PRNGKey(1), bs, n)
+
+    s_h, _, _, loss_h, _ = run_engine("host", verify_rounds)
+    s_s, _, _, loss_s, _ = run_engine("scan", verify_rounds)
+    diffs = [float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+             for a, b in zip(jax.tree.leaves(s_h.params),
+                             jax.tree.leaves(s_s.params))]
+    equiv_diff = max(diffs)
+    assert equiv_diff < 1e-4, f"engine mismatch on {size}: {equiv_diff}"
+    assert np.allclose(loss_h, loss_s, atol=1e-5), "loss history mismatch"
+
+    # -- seed-style host loop (numpy sampling + H2D + per-round sync) -----
+    rfj = jax.jit(round_fn)
+    state = init_fed_state(params0, fed, key=key)
+    keyh = jax.random.PRNGKey(1)
+    bank = SampleBank(burn_in=0, max_samples=40, thin=1)
+    rng = np.random.default_rng(0)
+
+    def host_round(state, keyh, t):
+        batches = minibatch_stack(shards, local_steps, minibatch, rng)
+        batches = jax.tree.map(jnp.asarray, batches)
+        keyh, kround = jax.random.split(keyh)
+        state, m = rfj(state, batches, kround)
+        _ = float(jnp.mean(m.loss))
+        _ = float(m.consensus_error)
+        bank.maybe_add(t, state.params)
+        return state, keyh
+
+    for t in range(3):                                   # warmup / compile
+        state, keyh = host_round(state, keyh, t)
+    t0 = time.perf_counter()
+    for t in range(rounds):
+        state, keyh = host_round(state, keyh, t + 3)
+    jax.block_until_ready(state.params)
+    host_s = time.perf_counter() - t0
+
+    # -- scan engine, chunked ---------------------------------------------
+    eng = make_engine("scan", round_fn, dshards, local_steps, minibatch,
+                      bank=bank_cfg, chunk=chunk)
+    state = init_fed_state(params0, fed, key=key)
+    bs = bank_cfg.init(state.params)
+    state, k2, bs, _, _ = eng.run(state, jax.random.PRNGKey(1), bs,
+                                  chunk)                 # warmup / compile
+    t0 = time.perf_counter()
+    state, k2, bs, _, _ = eng.run(state, k2, bs, rounds, t0=chunk)
+    jax.block_until_ready(state.params)
+    scan_s = time.perf_counter() - t0
+
+    return {
+        "size": size, "chunk": chunk, "rounds": rounds, "nodes": k,
+        "local_steps": local_steps, "minibatch": minibatch,
+        "host_rounds_per_s": rounds / host_s,
+        "scan_rounds_per_s": rounds / scan_s,
+        "speedup": host_s / scan_s,
+        "host_overhead_frac": 1.0 - scan_s / host_s,
+        "equiv_max_abs_diff": equiv_diff,
+    }
+
+
+def _row(rec: Dict) -> str:
+    us = 1e6 / rec["scan_rounds_per_s"]
+    return (f"round_engine_{rec['size']}_c{rec['chunk']},{us:.0f},"
+            f"scan_rps={rec['scan_rounds_per_s']:.1f};"
+            f"host_rps={rec['host_rounds_per_s']:.1f};"
+            f"speedup={rec['speedup']:.2f};"
+            f"host_overhead_frac={rec['host_overhead_frac']:.3f}")
+
+
+def _save(rec: Dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR,
+                        f"{rec['size']}_c{rec['chunk']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def run(quick: bool = False, tiny: bool = False) -> List[str]:
+    """Benchmark-suite entry point (CSV rows for benchmarks.run)."""
+    if tiny:
+        plan = [("linear32", 16, 32)]
+    elif quick:
+        plan = [("linear32", 64, 64), ("lenet16", 64, 64)]
+    else:
+        plan = [(size, chunk, 64 if size != "linear32" else 256)
+                for size in SIZES
+                for chunk in (8, 64)]
+    rows = []
+    for size, chunk, rounds in plan:
+        rec = measure(size, chunk, rounds)
+        _save(rec)
+        rows.append(_row(rec))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: one dispatch-bound config, ~seconds")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(quick=args.quick, tiny=args.tiny):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

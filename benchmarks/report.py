@@ -62,11 +62,36 @@ def fed_table(results_dir: str = None) -> str:
     return "\n".join(lines)
 
 
+def engine_table(results_dir: str = None) -> str:
+    """§Round engine: rounds/sec and host-overhead fraction per config."""
+    results_dir = results_dir or os.path.join(
+        os.path.dirname(__file__), "results", "round_engine")
+    lines = [
+        "| size | chunk | rounds | host r/s | scan r/s | speedup | "
+        "host-overhead frac |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for fn in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        rec = json.load(open(fn))
+        lines.append(
+            f"| {rec['size']} | {rec['chunk']} | {rec['rounds']} "
+            f"| {rec['host_rounds_per_s']:.1f} "
+            f"| {rec['scan_rounds_per_s']:.1f} "
+            f"| {rec['speedup']:.2f}× "
+            f"| {rec['host_overhead_frac']:.3f} |")
+    if len(lines) == 2:
+        lines.append("| _no records — run bench_round_engine first_ "
+                     "| | | | | | |")
+    return "\n".join(lines)
+
+
 def main():
     print("### §Dry-run results\n")
     print(dryrun_table())
     print("\n### §Dry-run — CD-BFL fed step\n")
     print(fed_table())
+    print("\n### §Round engine — host loop vs scan fusion\n")
+    print(engine_table())
     print("\n### §Roofline — single-pod 16×16\n")
     print(markdown_table(mesh="16x16"))
     print("\n### §Roofline — multi-pod 2×16×16\n")

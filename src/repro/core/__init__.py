@@ -14,7 +14,9 @@ from repro.core.algorithms import (
     make_round_fn,
     RoundMetrics,
 )
-from repro.core.posterior import SampleBank, bma_predict, point_predict
+from repro.core.posterior import (SampleBank, DeviceSampleBank,
+                                  DeviceBankState, bma_predict,
+                                  bma_predict_stacked, point_predict)
 from repro.core import calibration
 
 __all__ = [
@@ -24,5 +26,6 @@ __all__ = [
     "resolve_topology", "dense_mix", "schedule_mix", "make_mixer",
     "FedState", "init_fed_state", "make_cdbfl_round",
     "make_dsgld_round", "make_cffl_round", "make_sgld_step", "make_round_fn",
-    "RoundMetrics", "SampleBank", "bma_predict", "point_predict", "calibration",
+    "RoundMetrics", "SampleBank", "DeviceSampleBank", "DeviceBankState",
+    "bma_predict", "bma_predict_stacked", "point_predict", "calibration",
 ]

@@ -38,17 +38,21 @@ def _identity_leaf(x, key, **_):
 
 
 def _topk_leaf(x, key, *, ratio: float, **_):
-    """Exact global top-|.| sparsification of a leaf (reference semantics)."""
+    """Exact global top-|.| sparsification of a leaf (reference semantics).
+
+    Selection goes through ``top_k`` *indices* (ties broken deterministically
+    toward the lower index) rather than a ``mag >= thresh`` mask, so exactly
+    ``k`` entries survive even with tied magnitudes — the sparsity budget the
+    wire accounting assumes is never exceeded.
+    """
     flat = x.reshape(-1)
     n = flat.shape[0]
     k = max(1, int(np.ceil(ratio * n)))
     if k >= n:
         return x
-    mag = jnp.abs(flat)
-    # threshold = k-th largest magnitude
-    thresh = jax.lax.top_k(mag, k)[0][-1]
-    mask = mag >= thresh
-    return (flat * mask).reshape(x.shape)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    return out.reshape(x.shape)
 
 
 def _block_topk_leaf(x, key, *, ratio: float, block_size: int, **_):
@@ -65,9 +69,10 @@ def _block_topk_leaf(x, key, *, ratio: float, block_size: int, **_):
     padded = jnp.pad(flat, (0, nb * block_size - n))
     blocks = padded.reshape(nb, block_size)
     k = max(1, int(np.ceil(ratio * block_size)))
-    mag = jnp.abs(blocks)
-    thresh = jax.lax.top_k(mag, k)[0][:, -1:]
-    out = jnp.where(mag >= thresh, blocks, 0.0)
+    # index-based selection: exactly k per block, ties -> lower index
+    _, idx = jax.lax.top_k(jnp.abs(blocks), k)
+    vals = jnp.take_along_axis(blocks, idx, axis=1)
+    out = jnp.zeros_like(blocks).at[jnp.arange(nb)[:, None], idx].set(vals)
     return out.reshape(-1)[:n].reshape(x.shape)
 
 
@@ -171,8 +176,9 @@ class Compressor:
         if name in ("topk", "block_topk", "randk"):
             k = int(np.ceil(self.ratio * n))
             # values + indices (block_topk indices are block-local -> 2 bytes
-            # suffice for block_size <= 65536, we count 2)
-            ib = 2 if self.name == "block_topk" else index_bytes
+            # suffice for block_size <= 65536, we count 2; the normalized
+            # ``name`` covers the Pallas variant too)
+            ib = 2 if name == "block_topk" else index_bytes
             return k * (elem_bytes + ib)
         if name == "sign":
             return n // 8 + 4 * len(jax.tree.leaves(tree))

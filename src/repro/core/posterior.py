@@ -7,7 +7,7 @@ predictive distribution that gives the calibration gains the paper measures.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +40,105 @@ class SampleBank:
 
     def __len__(self):
         return len(self.samples)
+
+
+class DeviceBankState(NamedTuple):
+    """Scan-carried ring buffer of posterior samples (DESIGN.md §8).
+
+    ``slots`` mirrors the params pytree with a leading capacity axis
+    ``(C, ...)``; ``count`` is the number of samples ever admitted (the
+    write pointer is ``count % C``, so eviction drops the oldest — exactly
+    the host :class:`SampleBank`'s pop-front behavior).
+    """
+    slots: Any           # leaves (C, ...) — params with capacity axis
+    count: jax.Array     # scalar int32, total samples admitted
+
+
+class DeviceSampleBank:
+    """On-device fixed-capacity posterior bank, pure and scan-safe.
+
+    Matches :class:`SampleBank` semantics bit-for-bit: a round ``t`` is
+    admitted iff ``t >= burn_in`` and ``(t - burn_in) % thin == 0``; once
+    full, the oldest sample is evicted. The admit decision is realized with
+    ``lax.select`` on the round counter, so update cost is one slot write
+    per round regardless of the branch taken (donation keeps it in place).
+    """
+
+    def __init__(self, burn_in: int, capacity: int = 40, thin: int = 1):
+        self.burn_in = int(burn_in)
+        self.capacity = int(capacity)
+        self.thin = max(1, int(thin))
+
+    def init(self, params) -> DeviceBankState:
+        slots = jax.tree.map(
+            lambda x: jnp.zeros((self.capacity,) + x.shape, jnp.float32),
+            params,
+        )
+        return DeviceBankState(slots=slots, count=jnp.zeros((), jnp.int32))
+
+    def admit_mask(self, round_idx) -> jax.Array:
+        """Whether round ``round_idx``'s params enter the bank (traceable)."""
+        since = round_idx - self.burn_in
+        return jnp.logical_and(since >= 0, since % self.thin == 0)
+
+    def update(self, bank: DeviceBankState, round_idx, params
+               ) -> DeviceBankState:
+        """Pure ring-buffer write, jit/scan-safe (round_idx may be traced)."""
+        add = self.admit_mask(round_idx)
+        ptr = jnp.mod(bank.count, self.capacity)
+
+        def write(slot_leaf, p_leaf):
+            cur = jax.lax.dynamic_index_in_dim(slot_leaf, ptr, 0,
+                                               keepdims=False)
+            new = jax.lax.select(
+                add, p_leaf.astype(slot_leaf.dtype), cur
+            )
+            return jax.lax.dynamic_update_index_in_dim(slot_leaf, new, ptr, 0)
+
+        slots = jax.tree.map(write, bank.slots, params)
+        return DeviceBankState(slots=slots,
+                               count=bank.count + add.astype(jnp.int32))
+
+    # -- host-side views -------------------------------------------------
+    def order(self, bank: DeviceBankState) -> np.ndarray:
+        """Slot indices oldest→newest (the host bank's list order)."""
+        count = int(bank.count)
+        if count <= self.capacity:
+            return np.arange(count)
+        ptr = count % self.capacity
+        return (ptr + np.arange(self.capacity)) % self.capacity
+
+    def stacked(self, bank: DeviceBankState):
+        """(S, ...) stacked samples in insertion order (S = len(bank))."""
+        order = jnp.asarray(self.order(bank))
+        return jax.tree.map(lambda s: s[order], bank.slots)
+
+    def samples_list(self, bank: DeviceBankState) -> List[Any]:
+        """Materialize as the host SampleBank's list-of-pytrees view."""
+        stacked = jax.tree.map(np.asarray, self.stacked(bank))
+        n = len(self.order(bank))
+        return [jax.tree.map(lambda s: s[i], stacked) for i in range(n)]
+
+    def length(self, bank: DeviceBankState) -> int:
+        return min(int(bank.count), self.capacity)
+
+
+def bma_predict_stacked(apply_fn: Callable, stacked, batch,
+                        node_axis: Optional[int] = None) -> jnp.ndarray:
+    """BMA over a stacked ``(S, ...)`` sample axis in one traced vmap.
+
+    Same predictive distribution as :func:`bma_predict` over the equivalent
+    list of samples, but the sample loop is a ``vmap`` instead of S traced
+    calls — one dispatch for the whole bank (and one XLA program to fuse).
+    """
+    if node_axis is not None:
+        per_sample = lambda p: jax.vmap(lambda q: apply_fn(q, batch))(p)
+    else:
+        per_sample = lambda p: apply_fn(p, batch)
+    logits = jax.vmap(per_sample)(stacked)      # (S, [K,] B, classes)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    axes = (0, 1) if node_axis is not None else (0,)
+    return jnp.mean(probs, axis=axes)
 
 
 def bma_predict(apply_fn: Callable, samples: List[Any], batch,

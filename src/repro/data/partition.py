@@ -2,11 +2,22 @@
 
 iid (the paper's §V setting: 50 iid maps per radar) or Dirichlet label-skew
 non-iid (standard FL stress test, used in our extended experiments).
+
+Two minibatch paths feed the round functions (DESIGN.md §8):
+
+* :func:`minibatch_stack` — host numpy sampling + per-round H2D transfer
+  (the original harness; kept for ad-hoc batch construction).
+* :class:`DeviceShards` — shards padded to a common length and resident on
+  device; ``(K, L, M)`` index tensors are drawn from a PRNG key *inside*
+  the jitted round, so multi-round scans never touch the host.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass, field
 from typing import Dict, List
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -52,3 +63,58 @@ def minibatch_stack(shards: List[Dict[str, np.ndarray]], l: int, m: int,
         for key in shard:
             out[key].append(shard[key][idx])
     return {key: np.stack(val) for key, val in out.items()}
+
+
+@dataclass(frozen=True)
+class DeviceShards:
+    """Device-resident federated dataset for in-jit minibatch sampling.
+
+    Each node's shard is zero-padded to the common max length and stacked,
+    so every field carries leading dims ``(K, N_max, ...)``. Sampling draws
+    per-node uniform indices in ``[0, n_k)`` — the padded tail is never
+    read — which makes the whole round data path a pure function of a PRNG
+    key: safe inside ``jax.lax.scan`` and free of per-round H2D transfers.
+    """
+
+    data: Dict[str, jnp.ndarray]          # (K, N_max, ...) per field
+    sizes: jnp.ndarray                    # (K,) int32 true shard lengths
+    example_field: str = field(default="y")
+
+    @classmethod
+    def from_shards(cls, shards: List[Dict[str, np.ndarray]]
+                    ) -> "DeviceShards":
+        fields = list(shards[0])
+        count_key = "y" if "y" in fields else fields[0]
+        sizes = np.array([len(s[count_key]) for s in shards], np.int32)
+        n_max = int(sizes.max())
+        data = {}
+        for f in fields:
+            padded = [
+                np.pad(np.asarray(s[f]),
+                       [(0, n_max - len(s[f]))] + [(0, 0)] * (s[f].ndim - 1))
+                for s in shards
+            ]
+            data[f] = jnp.asarray(np.stack(padded))
+        return cls(data=data, sizes=jnp.asarray(sizes),
+                   example_field=count_key)
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.data[self.example_field].shape[0])
+
+    def sample_indices(self, key, l: int, m: int) -> jnp.ndarray:
+        """(K, L, M) int32 uniform over each node's true shard length."""
+        k = self.num_nodes
+        return jax.random.randint(key, (k, l, m), 0,
+                                  self.sizes[:, None, None])
+
+    def gather(self, idx: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        """Gather (K, L, M, ...) round batches from (K, L, M) indices."""
+        return {
+            f: jax.vmap(lambda d, i: d[i])(v, idx)
+            for f, v in self.data.items()
+        }
+
+    def sample(self, key, l: int, m: int) -> Dict[str, jnp.ndarray]:
+        """One round's minibatch stack, entirely on device."""
+        return self.gather(self.sample_indices(key, l, m))

@@ -13,11 +13,9 @@ omit it on real hardware.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import save_checkpoint
@@ -26,8 +24,10 @@ from repro.core import (build_topology, init_fed_state, make_compressor,
                         make_round_fn)
 from repro.core.gossip import plan_mixer
 from repro.core.topology import GRAPHS, dense_wire_bytes
-from repro.data.synthetic_lm import fed_lm_round_batch
+from repro.data.partition import DeviceShards
+from repro.data.synthetic_lm import markov_tokens
 from repro.models import get_model
+from repro.train.engine import make_engine
 
 
 def main():
@@ -60,6 +60,12 @@ def main():
     ap.add_argument("--ratio", type=float, default=0.01)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--engine", default="scan", choices=["scan", "host"],
+                    help="scan: chunked lax.scan super-rounds (default); "
+                         "host: per-round dispatch reference loop")
+    ap.add_argument("--pool", type=int, default=64,
+                    help="per-node synthetic sequence pool size (rounds "
+                         "sample minibatches from it on device)")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -80,8 +86,8 @@ def main():
     topo = build_topology(topo_cfg, fed.num_nodes)
     omega = topo.omega
     comp = make_compressor(fed)
-    round_fn = jax.jit(make_round_fn(args.algorithm, model.loss, fed, omega,
-                                     comp, data_scale=1.0))
+    round_fn = make_round_fn(args.algorithm, model.loss, fed, omega,
+                             comp, data_scale=1.0)
 
     key = jax.random.PRNGKey(fed.seed)
     params0 = model.init(key)
@@ -114,16 +120,32 @@ def main():
           + (f" link_failure={args.link_failure}" if args.link_failure else "")
           + (f" gossip_pairs={args.gossip_pairs}" if args.gossip_pairs else ""))
 
+    # per-node synthetic pool, resident on device; rounds gather minibatch
+    # index tensors from the round key inside the engine (no per-round H2D)
+    if cfg.family == "lenet":
+        from repro.data.partition import partition_iid
+        from repro.data.radar import make_dataset
+        ds = make_dataset(fed.num_nodes * args.pool, hw=cfg.input_hw,
+                          day=1, seed=fed.seed)
+        pool = partition_iid(ds, fed.num_nodes, seed=fed.seed)
+    else:
+        pool = [
+            {"tokens": markov_tokens(args.pool, args.seq, cfg.vocab_size,
+                                     seed=fed.seed, node=k_node)}
+            for k_node in range(fed.num_nodes)
+        ]
+    dshards = DeviceShards.from_shards(pool)
+    engine = make_engine(args.engine, round_fn, dshards, fed.local_steps,
+                         args.batch, bank=None,
+                         chunk=args.log_every or 64)
+
     t0 = time.time()
-    for t in range(args.rounds):
-        batch = fed_lm_round_batch(fed.num_nodes, fed.local_steps, args.batch,
-                                   args.seq, cfg.vocab_size, seed=t)
-        batch = jax.tree.map(jnp.asarray, batch)
-        state, metrics = round_fn(state, batch, jax.random.fold_in(key, t))
-        if (t + 1) % args.log_every == 0:
-            print(f"round {t+1:4d} loss={float(jnp.mean(metrics.loss)):.4f} "
-                  f"consensus={float(metrics.consensus_error):.3e} "
-                  f"({(time.time()-t0)/(t+1):.2f}s/round)")
+    log_cb = lambda t, loss, cons: print(
+        f"round {t:4d} loss={loss:.4f} consensus={cons:.3e} "
+        f"({(time.time()-t0)/max(t, 1):.2f}s/round)")
+    state, key, _, losses, _ = engine.run(
+        state, jax.random.fold_in(key, 1), None, args.rounds,
+        log_every=args.log_every, log_cb=log_cb)
     if args.ckpt_dir:
         path = save_checkpoint(args.ckpt_dir, args.rounds, state.params,
                                metadata={"arch": cfg.name, "fed": vars(args)})

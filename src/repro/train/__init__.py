@@ -1,1 +1,3 @@
 from repro.train.trainer import FedTrainer, TrainResult  # noqa: F401
+from repro.train.engine import (  # noqa: F401
+    HostRoundEngine, ScanRoundEngine, make_engine, round_data_key)

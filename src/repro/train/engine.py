@@ -1,0 +1,190 @@
+"""Device-resident multi-round execution engines (DESIGN.md §8).
+
+The paper amortizes communication by running many cheap local rounds
+(L steps × T rounds), but a per-round host loop pays host-side overhead
+*every round*: minibatch sampling + H2D transfer, one jit dispatch, a
+blocking metrics sync, and a D2H parameter pull for the posterior bank.
+This module provides two interchangeable engines:
+
+* :class:`HostRoundEngine` — the per-round dispatch loop, kept as the
+  reference oracle (host :class:`~repro.core.posterior.SampleBank`,
+  blocking ``float()`` metrics per round).
+* :class:`ScanRoundEngine` — fuses ``chunk`` rounds into one jitted
+  ``jax.lax.scan`` super-round with donated carry buffers (params/v/v̄ are
+  3× model size — no per-chunk copies), on-device minibatch sampling from
+  :class:`~repro.data.partition.DeviceShards`, and an on-device
+  :class:`~repro.core.posterior.DeviceSampleBank` ring buffer. The host
+  sees one dispatch and one small metrics transfer per chunk.
+
+Both engines consume the *same* PRNG streams: per round,
+``key, kround = jax.random.split(key)`` and the data key is
+``fold_in(kround, DATA_STREAM_SALT)``, so their trajectories (params,
+metrics, posterior banks) coincide to float tolerance — the equivalence
+tests in ``tests/test_engine.py`` pin this down.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.posterior import DeviceSampleBank, SampleBank
+from repro.data.partition import DeviceShards
+
+# Salt folding the round key into the data-sampling stream. Kept separate
+# from the kql/knoise/kmix derivations inside the round functions so adding
+# on-device sampling does not perturb the algorithm streams.
+DATA_STREAM_SALT = 7
+
+
+def round_data_key(kround: jax.Array) -> jax.Array:
+    """Data-sampling key for one round, derived from the round key."""
+    return jax.random.fold_in(kround, DATA_STREAM_SALT)
+
+
+class EngineCarry(NamedTuple):
+    state: Any                    # FedState
+    key: jax.Array                # trainer-level PRNG stream
+    bank: Any                     # DeviceBankState or None
+
+
+class ChunkMetrics(NamedTuple):
+    """Per-round scalars, reduced on device (one small D2H per chunk)."""
+    loss: jax.Array               # (chunk,) mean over (K, L)
+    consensus: jax.Array          # (chunk,)
+    delta_norm: jax.Array         # (chunk,)
+
+
+LogCb = Callable[[int, float, float], None]
+
+
+class ScanRoundEngine:
+    """R federated rounds as chunked, donated ``lax.scan`` super-rounds."""
+
+    name = "scan"
+
+    def __init__(self, round_fn, shards: DeviceShards, local_steps: int,
+                 minibatch: int, bank: Optional[DeviceSampleBank] = None,
+                 default_chunk: int = 64):
+        self.round_fn = round_fn          # un-jitted: traced into the scan
+        self.shards = shards
+        self.local_steps = int(local_steps)
+        self.minibatch = int(minibatch)
+        self.bank = bank
+        self.default_chunk = int(default_chunk)
+        self._chunk_fns = {}              # static chunk length -> compiled fn
+
+    # -- one round, traced inside the scan --------------------------------
+    def _body(self, carry: EngineCarry, t) -> Tuple[EngineCarry, ChunkMetrics]:
+        state, key, bank = carry
+        key, kround = jax.random.split(key)
+        batches = self.shards.sample(round_data_key(kround),
+                                     self.local_steps, self.minibatch)
+        state, metrics = self.round_fn(state, batches, kround)
+        if self.bank is not None:
+            bank = self.bank.update(bank, t, state.params)
+        ms = ChunkMetrics(
+            loss=jnp.mean(metrics.loss),
+            consensus=metrics.consensus_error,
+            delta_norm=metrics.delta_norm,
+        )
+        return EngineCarry(state, key, bank), ms
+
+    def _chunk_fn(self, length: int):
+        if length not in self._chunk_fns:
+            def chunk(carry, t0):
+                ts = t0 + jnp.arange(length, dtype=jnp.int32)
+                return jax.lax.scan(self._body, carry, ts)
+
+            # donate the carry: params/v/v_bar (+ bank slots) update in place
+            self._chunk_fns[length] = jax.jit(chunk, donate_argnums=(0,))
+        return self._chunk_fns[length]
+
+    def run(self, state, key, bank_state, rounds: int, t0: int = 0,
+            log_every: int = 0, log_cb: Optional[LogCb] = None):
+        """Run ``rounds`` rounds from global round index ``t0``.
+
+        Chunk sizes align with ``log_every`` so streaming logs keep their
+        cadence; without logging, ``default_chunk``-sized super-rounds.
+        Returns ``(state, key, bank_state, losses, consensus)`` with the
+        per-round scalar histories as host floats.
+        """
+        carry = EngineCarry(state, key, bank_state)
+        chunk = log_every if log_every > 0 else min(rounds, self.default_chunk)
+        losses: List[float] = []
+        cons: List[float] = []
+        done = 0
+        while done < rounds:
+            n = min(chunk, rounds - done)
+            carry, ms = self._chunk_fn(n)(carry, jnp.asarray(t0 + done,
+                                                             jnp.int32))
+            losses.extend(np.asarray(ms.loss, np.float64).tolist())
+            cons.extend(np.asarray(ms.consensus, np.float64).tolist())
+            done += n
+            # same cadence as the host loop: only exact log_every multiples
+            # (a non-aligned remainder chunk does not emit a log line)
+            if log_cb is not None and log_every and done % log_every == 0:
+                log_cb(t0 + done, losses[-1], cons[-1])
+        return carry.state, carry.key, carry.bank, losses, cons
+
+
+class HostRoundEngine:
+    """Per-round dispatch loop — the original harness, kept as the oracle.
+
+    Intentionally preserves the host-side costs the scan engine removes:
+    one jit dispatch per round, a blocking ``float()`` metrics sync, and a
+    D2H parameter pull into the host :class:`SampleBank` for every admitted
+    posterior sample. ``bank_state`` is a (mutable) :class:`SampleBank`.
+    """
+
+    name = "host"
+
+    def __init__(self, round_fn, shards: DeviceShards, local_steps: int,
+                 minibatch: int, bank: Optional[DeviceSampleBank] = None):
+        self.round_fn = jax.jit(round_fn)
+        self.shards = shards
+        self.local_steps = int(local_steps)
+        self.minibatch = int(minibatch)
+        self.bank = bank                  # config only: burn_in/thin/capacity
+
+    def make_bank(self) -> Optional[SampleBank]:
+        if self.bank is None:
+            return None
+        return SampleBank(burn_in=self.bank.burn_in,
+                          max_samples=self.bank.capacity,
+                          thin=self.bank.thin)
+
+    def run(self, state, key, bank_state, rounds: int, t0: int = 0,
+            log_every: int = 0, log_cb: Optional[LogCb] = None):
+        losses: List[float] = []
+        cons: List[float] = []
+        for i in range(rounds):
+            t = t0 + i
+            key, kround = jax.random.split(key)
+            batches = self.shards.sample(round_data_key(kround),
+                                         self.local_steps, self.minibatch)
+            state, metrics = self.round_fn(state, batches, kround)
+            losses.append(float(jnp.mean(metrics.loss)))
+            cons.append(float(metrics.consensus_error))
+            if self.bank is not None and bank_state is not None:
+                # same admit rule as DeviceSampleBank.admit_mask for rounds
+                # visited sequentially: t >= burn_in, (t - burn_in) % thin == 0
+                bank_state.maybe_add(t, state.params)
+            if log_cb is not None and log_every and (i + 1) % log_every == 0:
+                log_cb(t + 1, losses[-1], cons[-1])
+        return state, key, bank_state, losses, cons
+
+
+def make_engine(name: str, round_fn, shards: DeviceShards, local_steps: int,
+                minibatch: int, bank: Optional[DeviceSampleBank] = None,
+                chunk: int = 64):
+    """Engine factory: ``"scan"`` (default, fused) or ``"host"`` (oracle)."""
+    if name == "scan":
+        return ScanRoundEngine(round_fn, shards, local_steps, minibatch,
+                               bank=bank, default_chunk=chunk)
+    if name == "host":
+        return HostRoundEngine(round_fn, shards, local_steps, minibatch,
+                               bank=bank)
+    raise ValueError(f"unknown engine {name!r}; use 'scan' or 'host'")

@@ -1,4 +1,4 @@
-"""Host-side federated training loop (the paper's simulation harness, §V).
+"""Federated training harness (the paper's simulation protocol, §V).
 
 Drives any of {cdbfl, dsgld, cffl} over any model in the zoo, collects
 posterior samples post burn-in, and evaluates accuracy/ECE with Bayesian
@@ -7,12 +7,18 @@ model averaging — reproducing the paper's evaluation protocol:
     trainer = FedTrainer(model, fed_cfg, shards)
     result = trainer.run(rounds=T)
     result.accuracy, result.ece, result.bytes_sent
+
+Execution is delegated to a round engine (DESIGN.md §8): the default
+``engine="scan"`` fuses chunks of rounds into one donated ``lax.scan``
+super-round with on-device minibatch sampling and an on-device posterior
+ring buffer; ``engine="host"`` keeps the original per-round dispatch loop
+as the reference oracle. Both consume identical PRNG streams.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +27,9 @@ import numpy as np
 from repro.core import (FedState, SampleBank, bma_predict, build_topology,
                         calibration, init_fed_state, make_compressor,
                         make_round_fn, point_predict, resolve_topology)
-from repro.data.partition import minibatch_stack
+from repro.core.posterior import (DeviceSampleBank, bma_predict_stacked)
+from repro.data.partition import DeviceShards
+from repro.train.engine import make_engine
 
 
 @dataclass
@@ -39,16 +47,34 @@ class TrainResult:
     wall_s: float = 0.0
 
 
+class _BankView:
+    """len()/.samples view over a DeviceBankState (lazy D2H on access)."""
+
+    def __init__(self, cfg: DeviceSampleBank, state):
+        self._cfg = cfg
+        self._state = state
+
+    def __len__(self):
+        return 0 if self._state is None else self._cfg.length(self._state)
+
+    @property
+    def samples(self):
+        return ([] if self._state is None
+                else self._cfg.samples_list(self._state))
+
+
 class FedTrainer:
     def __init__(self, model, fed_cfg, shards: List[Dict[str, np.ndarray]],
                  minibatch: int = 10, data_scale: Optional[float] = None,
-                 seed: int = 0):
+                 seed: int = 0, engine: str = "scan",
+                 chunk: Optional[int] = None, bank_capacity: int = 40,
+                 bank_thin: int = 2):
         assert len(shards) == fed_cfg.num_nodes, "one shard per node"
         self.model = model
         self.fed_cfg = fed_cfg
         self.shards = shards
         self.minibatch = minibatch
-        self.rng = np.random.default_rng(seed)
+        self.engine = engine
         # any TopologyConfig graph (legacy string configs map onto one)
         self.topology = build_topology(resolve_topology(fed_cfg),
                                        fed_cfg.num_nodes)
@@ -62,12 +88,29 @@ class FedTrainer:
         key = jax.random.PRNGKey(seed)
         params0 = model.init(key)
         self.state: FedState = init_fed_state(params0, fed_cfg, key=key)
-        self.round_fn = jax.jit(make_round_fn(
+        round_fn = make_round_fn(
             fed_cfg.algorithm, model.loss, fed_cfg, self.omega,
             self.compressor, data_scale=self.data_scale,
-        ))
-        self.bank = SampleBank(burn_in=fed_cfg.burn_in, max_samples=40, thin=2)
+        )
+        self.round_fn = jax.jit(round_fn)   # kept for ad-hoc single rounds
         self.key = jax.random.PRNGKey(seed + 1)
+
+        # posterior bank: Bayesian algorithms only (cffl is a point learner)
+        self.bank_cfg = DeviceSampleBank(burn_in=fed_cfg.burn_in,
+                                         capacity=bank_capacity,
+                                         thin=bank_thin)
+        bank_enabled = fed_cfg.algorithm in ("cdbfl", "dsgld")
+        self.device_shards = DeviceShards.from_shards(shards)
+        self._engine = make_engine(
+            engine, round_fn, self.device_shards, fed_cfg.local_steps,
+            minibatch, bank=self.bank_cfg if bank_enabled else None,
+            chunk=chunk or 64,
+        )
+        if engine == "host":
+            self._bank_state: Any = self._engine.make_bank()
+        else:
+            self._bank_state = (self.bank_cfg.init(self.state.params)
+                                if bank_enabled else None)
 
         # wire cost per round (the paper's communication-overhead metric):
         # every node sends its compressed Δθ to each neighbor once per round
@@ -79,25 +122,27 @@ class FedTrainer:
         self.bytes_per_round = float(per_node * n_edges)
 
     # ------------------------------------------------------------------
+    @property
+    def bank(self):
+        """SampleBank-compatible view of the posterior bank."""
+        if isinstance(self._bank_state, SampleBank):
+            return self._bank_state
+        return _BankView(self.bank_cfg, self._bank_state)
+
+    # ------------------------------------------------------------------
     def run(self, rounds: Optional[int] = None, log_every: int = 0,
             eval_batch: Optional[Dict[str, np.ndarray]] = None) -> TrainResult:
         fed = self.fed_cfg
         rounds = rounds if rounds is not None else fed.rounds
-        losses, cons = [], []
         t0 = time.time()
-        for t in range(rounds):
-            batches = minibatch_stack(self.shards, fed.local_steps,
-                                      self.minibatch, self.rng)
-            batches = jax.tree.map(jnp.asarray, batches)
-            self.key, kround = jax.random.split(self.key)
-            self.state, metrics = self.round_fn(self.state, batches, kround)
-            losses.append(float(jnp.mean(metrics.loss)))
-            cons.append(float(metrics.consensus_error))
-            if fed.algorithm in ("cdbfl", "dsgld"):
-                self.bank.maybe_add(t, self.state.params)
-            if log_every and (t + 1) % log_every == 0:
-                print(f"  round {t+1:4d}  loss={losses[-1]:.4f} "
-                      f"consensus={cons[-1]:.3e}")
+        log_cb = None
+        if log_every:
+            log_cb = lambda t, l, c: print(
+                f"  round {t:4d}  loss={l:.4f} consensus={c:.3e}")
+        t_start = int(self.state.round)
+        (self.state, self.key, self._bank_state, losses, cons
+         ) = self._engine.run(self.state, self.key, self._bank_state, rounds,
+                              t0=t_start, log_every=log_every, log_cb=log_cb)
         wall = time.time() - t0
 
         res = TrainResult(
@@ -118,7 +163,14 @@ class FedTrainer:
         labels = batch["y"] if "y" in batch else batch["tokens"][:, 1:]
         apply = lambda p, b: self.model.logits(p, b)
         if self.fed_cfg.algorithm in ("cdbfl", "dsgld") and len(self.bank):
-            probs = bma_predict(apply, self.bank.samples, batch, node_axis=0)
+            if isinstance(self._bank_state, SampleBank):
+                probs = bma_predict(apply, self._bank_state.samples, batch,
+                                    node_axis=0)
+            else:
+                # one vmapped dispatch over the whole (S, K, ...) bank
+                stacked = self.bank_cfg.stacked(self._bank_state)
+                probs = bma_predict_stacked(apply, stacked, batch,
+                                            node_axis=0)
         else:
             probs = point_predict(apply, self.state.params, batch, node_axis=0)
         probs = np.asarray(probs, np.float32)

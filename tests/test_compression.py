@@ -110,3 +110,37 @@ def test_min_dense_size_passthrough():
     out = comp(tree, KEY)
     np.testing.assert_array_equal(np.asarray(out["small"]), np.ones(10))
     assert int(jnp.sum(out["big"] != 0)) < 4096
+
+
+def test_topk_exact_k_under_ties():
+    """Tied magnitudes must not exceed the sparsity budget: exactly k kept,
+    ties broken deterministically toward the lower index."""
+    x = jnp.concatenate([jnp.ones((16,)), 0.25 * jnp.ones((16,))])
+    comp = Compressor(name="topk", ratio=0.25)       # k = 8 of 32
+    out = comp({"w": x}, KEY)["w"]
+    assert int(jnp.sum(out != 0)) == 8
+    # deterministic: the 8 lowest-index entries of the tied top group
+    np.testing.assert_array_equal(np.flatnonzero(np.asarray(out)),
+                                  np.arange(8))
+
+
+def test_block_topk_exact_k_under_ties():
+    x = jnp.ones((4 * 128,))                         # all tied, 4 blocks
+    comp = Compressor(name="block_topk", ratio=0.1, block_size=128)
+    out = comp({"w": x}, KEY)["w"].reshape(4, 128)
+    k = int(np.ceil(0.1 * 128))
+    for b in range(4):
+        row = np.asarray(out[b])
+        assert int((row != 0).sum()) == k
+        np.testing.assert_array_equal(np.flatnonzero(row), np.arange(k))
+
+
+def test_wire_bytes_pallas_matches_reference():
+    """block_topk_pallas must report block-local 2-byte indices, like the
+    reference block_topk (it was over-reporting 4-byte indices)."""
+    tree = {"w": jnp.zeros((100_000,))}
+    ref = Compressor(name="block_topk", ratio=0.01).wire_bytes(tree)
+    pal = Compressor(name="block_topk_pallas", ratio=0.01).wire_bytes(tree)
+    assert pal == ref
+    k = int(np.ceil(0.01 * 100_000))
+    assert ref == k * (4 + 2)

@@ -1,0 +1,232 @@
+"""Scan-engine vs host-loop equivalence (DESIGN.md §8).
+
+Both engines consume identical PRNG streams, so under matching seeds their
+trajectories must coincide: params, per-round metrics, and the posterior
+banks (burn-in, thinning, eviction order). Covers cdbfl/dsgld/cffl, the
+DeviceShards sampling path, the DeviceSampleBank ring buffer against the
+host SampleBank, and chunking invariance of the scan engine.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FedConfig, get_arch
+from repro.core import (SampleBank, build_topology, init_fed_state,
+                        make_compressor, make_round_fn, resolve_topology)
+from repro.core.posterior import (DeviceSampleBank, bma_predict,
+                                  bma_predict_stacked)
+from repro.data.partition import DeviceShards, partition_iid
+from repro.models import get_model
+from repro.train import FedTrainer
+from repro.train.engine import make_engine
+
+KEY = jax.random.PRNGKey(0)
+K, L, M, DIM = 4, 3, 5, 6
+
+
+def linear_loss(params, batch, key):
+    pred = batch["x"] @ params["w"]
+    return jnp.mean((pred - batch["y"]) ** 2), ()
+
+
+def _shards(seed=0, sizes=(17, 20, 20, 13)):
+    """Deliberately unequal shard lengths (exercises padding + sizes)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for n in sizes:
+        x = rng.normal(size=(n, DIM)).astype(np.float32)
+        w = np.arange(1.0, DIM + 1.0, dtype=np.float32) / DIM
+        out.append({"x": x, "y": (x @ w).astype(np.float32)})
+    return out
+
+
+def _world(algorithm, burn_in=4, thin=2, capacity=5):
+    fed = FedConfig(num_nodes=K, local_steps=L, eta=5e-3, zeta=0.3,
+                    burn_in=burn_in, compressor="topk", compress_ratio=0.5,
+                    topology="ring", algorithm=algorithm)
+    topo = build_topology(resolve_topology(fed), K)
+    comp = make_compressor(fed)
+    round_fn = make_round_fn(algorithm, linear_loss, fed, topo.omega, comp,
+                             data_scale=10.0)
+    dshards = DeviceShards.from_shards(_shards())
+    bank_cfg = DeviceSampleBank(burn_in=burn_in, capacity=capacity, thin=thin)
+    params0 = {"w": jnp.zeros((DIM,))}
+    return fed, round_fn, dshards, bank_cfg, params0
+
+
+def _run(engine_name, algorithm, rounds, chunk=4, capacity=5):
+    fed, round_fn, dshards, bank_cfg, params0 = _world(algorithm,
+                                                       capacity=capacity)
+    bayes = algorithm in ("cdbfl", "dsgld")
+    eng = make_engine(engine_name, round_fn, dshards, L, M,
+                      bank=bank_cfg if bayes else None, chunk=chunk)
+    state = init_fed_state(params0, fed, key=KEY)
+    if not bayes:
+        bank0 = None
+    elif engine_name == "scan":
+        bank0 = bank_cfg.init(state.params)
+    else:
+        bank0 = eng.make_bank()
+    state, key, bank, losses, cons = eng.run(state, jax.random.PRNGKey(1),
+                                             bank0, rounds)
+    return state, bank, losses, cons, bank_cfg
+
+
+def _tree_allclose(a, b, atol=1e-5):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol,
+                                   rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Engine equivalence: cdbfl / dsgld / cffl
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", ["cdbfl", "dsgld", "cffl"])
+def test_scan_matches_host_engine(algorithm):
+    rounds = 12
+    s_h, b_h, loss_h, cons_h, cfg = _run("host", algorithm, rounds)
+    s_s, b_s, loss_s, cons_s, _ = _run("scan", algorithm, rounds)
+    _tree_allclose(s_h.params, s_s.params)
+    assert int(s_h.round) == int(s_s.round) == rounds
+    np.testing.assert_allclose(loss_h, loss_s, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(cons_h, cons_s, atol=1e-5, rtol=1e-5)
+    if algorithm in ("cdbfl", "dsgld"):
+        # bank equivalence: same admits, same eviction order
+        host_samples = b_h.samples                  # SampleBank list
+        scan_samples = cfg.samples_list(b_s)        # DeviceBankState view
+        assert len(host_samples) == len(scan_samples) > 0
+        for hs, ss in zip(host_samples, scan_samples):
+            _tree_allclose(hs, ss)
+    else:
+        assert b_h is None and b_s is None
+
+
+def test_scan_chunking_invariance():
+    """Chunk size is an execution detail: results must not depend on it."""
+    base = _run("scan", "cdbfl", 12, chunk=12)
+    for chunk in (1, 5):
+        got = _run("scan", "cdbfl", 12, chunk=chunk)
+        _tree_allclose(base[0].params, got[0].params)
+        np.testing.assert_allclose(base[2], got[2], atol=1e-6)
+
+
+def test_bank_eviction_order_matches_host():
+    """More admits than capacity: ring buffer drops oldest, like pop(0)."""
+    rounds, capacity = 16, 3
+    _, b_h, _, _, cfg = _run("host", "cdbfl", rounds, capacity=capacity)
+    _, b_s, _, _, _ = _run("scan", "cdbfl", rounds, capacity=capacity)
+    host_samples = b_h.samples
+    scan_samples = cfg.samples_list(b_s)
+    assert len(host_samples) == len(scan_samples) == capacity
+    for hs, ss in zip(host_samples, scan_samples):
+        _tree_allclose(hs, ss)
+
+
+# --------------------------------------------------------------------------
+# DeviceSampleBank vs host SampleBank (unit level)
+# --------------------------------------------------------------------------
+
+def test_device_bank_burnin_thin_eviction():
+    burn_in, thin, capacity, rounds = 5, 3, 4, 30
+    cfg = DeviceSampleBank(burn_in=burn_in, capacity=capacity, thin=thin)
+    host = SampleBank(burn_in=burn_in, max_samples=capacity, thin=thin)
+    params = {"w": jnp.zeros((2, 3))}
+    bank = cfg.init(params)
+    update = jax.jit(cfg.update)
+    for t in range(rounds):
+        p_t = {"w": jnp.full((2, 3), float(t))}
+        bank = update(bank, jnp.asarray(t, jnp.int32), p_t)
+        host.maybe_add(t, p_t)
+    assert cfg.length(bank) == len(host) == capacity
+    for hs, ds in zip(host.samples, cfg.samples_list(bank)):
+        _tree_allclose(hs, ds)
+
+
+def test_device_bank_respects_burn_in():
+    cfg = DeviceSampleBank(burn_in=10, capacity=4, thin=1)
+    params = {"w": jnp.ones((2,))}
+    bank = cfg.init(params)
+    for t in range(10):
+        bank = cfg.update(bank, jnp.asarray(t, jnp.int32), params)
+    assert cfg.length(bank) == 0
+    bank = cfg.update(bank, jnp.asarray(10, jnp.int32), params)
+    assert cfg.length(bank) == 1
+
+
+def test_bma_predict_stacked_matches_list():
+    cfg_m = get_arch("lenet-radar").reduced
+    model = get_model(cfg_m)
+    samples = []
+    for i in range(3):
+        p = model.init(jax.random.fold_in(KEY, i))
+        samples.append(jax.tree.map(lambda x: jnp.stack([x, x]), p))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *samples)
+    batch = {"x": jnp.ones((4, *cfg_m.input_hw, 1))}
+    apply = lambda p, b: model.logits(p, b)
+    p_list = bma_predict(apply, samples, batch, node_axis=0)
+    p_stack = bma_predict_stacked(apply, stacked, batch, node_axis=0)
+    np.testing.assert_allclose(np.asarray(p_list), np.asarray(p_stack),
+                               atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# DeviceShards sampling
+# --------------------------------------------------------------------------
+
+def test_device_shards_sampling_bounds_and_determinism():
+    shards = _shards()
+    ds = DeviceShards.from_shards(shards)
+    sizes = np.array([len(s["y"]) for s in shards])
+    idx = np.asarray(ds.sample_indices(KEY, L, M))
+    assert idx.shape == (K, L, M)
+    assert (idx >= 0).all()
+    assert (idx < sizes[:, None, None]).all()      # padding never sampled
+    idx2 = np.asarray(ds.sample_indices(KEY, L, M))
+    np.testing.assert_array_equal(idx, idx2)        # key-deterministic
+
+
+def test_device_shards_gather_matches_numpy():
+    shards = _shards()
+    ds = DeviceShards.from_shards(shards)
+    idx = np.asarray(ds.sample_indices(KEY, L, M))
+    batch = ds.gather(jnp.asarray(idx))
+    assert batch["x"].shape == (K, L, M, DIM)
+    assert batch["y"].shape == (K, L, M)
+    for k in range(K):
+        np.testing.assert_allclose(np.asarray(batch["x"][k]),
+                                   shards[k]["x"][idx[k]], atol=0)
+
+
+# --------------------------------------------------------------------------
+# Full-trainer equivalence on the radar case study
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def radar_world():
+    cfg = get_arch("lenet-radar").reduced
+    model = get_model(cfg)
+    from repro.data.radar import make_dataset
+    train = make_dataset(3 * 20, hw=cfg.input_hw, day=1, seed=0)
+    test = make_dataset(40, hw=cfg.input_hw, day=1, seed=9)
+    return model, partition_iid(train, 3), test
+
+
+def test_fed_trainer_scan_matches_host_radar(radar_world):
+    model, shards, test = radar_world
+    fed = FedConfig(num_nodes=3, local_steps=2, eta=3e-3, zeta=0.3,
+                    rounds=14, burn_in=6, compressor="block_topk",
+                    compress_ratio=0.05, topology="full", algorithm="cdbfl")
+    tr_s = FedTrainer(model, fed, shards, minibatch=6, engine="scan", chunk=5)
+    tr_h = FedTrainer(model, fed, shards, minibatch=6, engine="host")
+    rs = tr_s.run(rounds=14, eval_batch=test)
+    rh = tr_h.run(rounds=14, eval_batch=test)
+    _tree_allclose(tr_s.state.params, tr_h.state.params)
+    np.testing.assert_allclose(rs.loss_history, rh.loss_history, atol=1e-5)
+    assert len(tr_s.bank) == len(tr_h.bank) > 0
+    for ss, hs in zip(tr_s.bank.samples, tr_h.bank.samples):
+        _tree_allclose(ss, hs)
+    # identical banks + params => identical BMA evaluation
+    assert abs(rs.accuracy - rh.accuracy) < 1e-6
+    assert abs(rs.ece - rh.ece) < 1e-5
