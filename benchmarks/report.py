@@ -85,6 +85,28 @@ def engine_table(results_dir: str = None) -> str:
     return "\n".join(lines)
 
 
+def wire_table(results_dir: str = None) -> str:
+    """§Wire accounting: measured packed-payload bytes vs the formula."""
+    results_dir = results_dir or os.path.join(
+        os.path.dirname(__file__), "results", "wire")
+    lines = [
+        "| pipeline | measured B | formula B | measured/formula | "
+        "saving vs dense | delta |",
+        "|---|---|---|---|---|---|",
+    ]
+    for fn in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        rec = json.load(open(fn))
+        lines.append(
+            f"| `{rec['pipeline']}` | {rec['measured_bytes']} "
+            f"| {rec['formula_bytes']} "
+            f"| {rec['measured_over_formula']:.3f} "
+            f"| {rec['saving_pct']:.2f}% "
+            f"| {rec['delta']:.4g} |")
+    if len(lines) == 2:
+        lines.append("| _no records — run bench_wire first_ | | | | | |")
+    return "\n".join(lines)
+
+
 def main():
     print("### §Dry-run results\n")
     print(dryrun_table())
@@ -92,6 +114,8 @@ def main():
     print(fed_table())
     print("\n### §Round engine — host loop vs scan fusion\n")
     print(engine_table())
+    print("\n### §Wire accounting — measured payload vs formula\n")
+    print(wire_table())
     print("\n### §Roofline — single-pod 16×16\n")
     print(markdown_table(mesh="16x16"))
     print("\n### §Roofline — multi-pod 2×16×16\n")

@@ -129,6 +129,10 @@ class FedConfig:
     rounds: int = 800               # T
     # compression
     compressor: str = "block_topk"  # identity | topk | block_topk | qsgd | sign | randk
+    # codec pipeline DSL, e.g. "block_topk|qsgd" (sparsify then quantize the
+    # survivors). Takes precedence over the legacy ``compressor`` enum; empty
+    # string keeps the enum (back-compat). See core/compression.py.
+    pipeline: str = ""
     compress_ratio: float = 0.01    # paper: 1% of parameters
     qsgd_levels: int = 16
     block_size: int = 1024          # block-local top-k granularity

@@ -1,5 +1,7 @@
 """Core: the paper's contribution — CD-BFL and its baselines."""
-from repro.core.compression import Compressor, make_compressor
+from repro.core.compression import (Compressor, CompressionPipeline,
+                                    WirePayload, make_compressor,
+                                    parse_pipeline)
 from repro.core.mixing import mixing_matrix, adjacency, spectral_gap
 from repro.core.topology import (Topology, MixSchedule, build_topology,
                                  build_schedule, graph_adjacency,
@@ -20,7 +22,8 @@ from repro.core.posterior import (SampleBank, DeviceSampleBank,
 from repro.core import calibration
 
 __all__ = [
-    "Compressor", "make_compressor", "mixing_matrix", "adjacency",
+    "Compressor", "CompressionPipeline", "WirePayload", "make_compressor",
+    "parse_pipeline", "mixing_matrix", "adjacency",
     "spectral_gap", "Topology", "MixSchedule", "build_topology",
     "build_schedule", "graph_adjacency", "mixing_weights",
     "resolve_topology", "dense_mix", "schedule_mix", "make_mixer",

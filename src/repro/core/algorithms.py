@@ -32,7 +32,7 @@ import jax.numpy as jnp
 
 from repro.core.compression import Compressor
 from repro.core.fed_state import FedState
-from repro.utils.tree import tree_random_normal, split_key_like
+from repro.utils.tree import tree_count, tree_random_normal, split_key_like
 
 
 def _default_mixer(omega, fed_cfg):
@@ -89,6 +89,28 @@ class RoundMetrics(NamedTuple):
     loss: jax.Array            # (K, L) local losses
     consensus_error: jax.Array  # scalar: mean ||θ_k - θ̄||²
     delta_norm: jax.Array      # scalar: mean ||Δθ_k||²
+    wire_bytes: jax.Array      # scalar: bytes/node/round on the wire
+                               # (measured from the packed payload when the
+                               # compressor is a CompressionPipeline)
+
+
+def _compress_exchange(compressor, residual, key, K: int):
+    """Run Q over the residual tree; return (delta, bytes/node).
+
+    Pipelines (anything with ``encode``) go through the materialized wire
+    format: ``encode -> measured_bytes -> decode``; legacy Compressors keep
+    the dense-masked call with the closed-form byte table. Residual leaves
+    carry the leading node axis K, so the payload covers all K nodes —
+    divide for the per-node figure the paper reports.
+    """
+    if hasattr(compressor, "encode"):
+        payload = compressor.encode(residual, key)
+        delta = compressor.decode(payload)
+        wire = payload.measured_bytes() / K
+    else:
+        delta = compressor(residual, key)
+        wire = compressor.wire_bytes(residual) / K
+    return delta, jnp.float32(wire)
 
 
 def _consensus_error(params):
@@ -149,9 +171,12 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
         theta_L, losses = jax.vmap(local)(state.params, batches, node_keys)
 
         # -- Eq. 6: compressed residual vs control sequence ------------------
+        # encode -> wire payload -> decode: the packed (values, indices)
+        # representation is what a real transport would ship; the mixer
+        # consumes the decoded dense delta (DESIGN.md §2).
         residual = jax.tree.map(lambda t, v: t - v.astype(t.dtype), theta_L,
                                 state.v)
-        delta = compressor(residual, kql)
+        delta, wire = _compress_exchange(compressor, residual, kql, K)
 
         # -- Eq. 7 / Eq. 8: control sequences (stored in control_dtype) ------
         v_new = jax.tree.map(lambda v, d: (v + d.astype(v.dtype)), state.v, delta)
@@ -174,6 +199,7 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
             loss=losses,
             consensus_error=_consensus_error(params_new) / K,
             delta_norm=_sq_norm(delta) / K,
+            wire_bytes=wire,
         )
         new_state = FedState(
             params=params_new, v=v_new, v_bar=v_bar_new,
@@ -238,6 +264,8 @@ def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0,
             loss=losses[:, None],
             consensus_error=_consensus_error(params_new) / K,
             delta_norm=_sq_norm(state.params) / K,
+            # uncompressed θ exchange: dense fp32 payload per node
+            wire_bytes=jnp.float32(tree_count(state.params) * 4 / K),
         )
         return (
             FedState(params_new, state.v, state.v_bar, state.opt_state,
@@ -281,7 +309,7 @@ def make_cffl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
 
         residual = jax.tree.map(lambda t, v: t - v.astype(t.dtype), theta_L,
                                 state.v)
-        delta = compressor(residual, kq)
+        delta, wire = _compress_exchange(compressor, residual, kq, K)
         v_new = jax.tree.map(lambda v, d: (v + d.astype(v.dtype)), state.v, delta)
         mixed = mixer(delta, kmix)
         v_bar_new = jax.tree.map(lambda vb, m: (vb + m.astype(vb.dtype)),
@@ -297,6 +325,7 @@ def make_cffl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
             loss=losses,
             consensus_error=_consensus_error(params_new) / K,
             delta_norm=_sq_norm(delta) / K,
+            wire_bytes=wire,
         )
         return (
             FedState(params_new, v_new, v_bar_new, state.opt_state,

@@ -1,26 +1,38 @@
-"""Compression operators Q(.) for CD-BFL (paper Eq. 6).
+"""Compression codecs Q(.) for CD-BFL (paper Eq. 6) and their wire format.
 
 All operators satisfy the standard delta-contraction contract used by the
 CHOCO/Koloskova analysis the paper builds on:
 
     E ||Q(x) - x||^2  <=  (1 - delta) ||x||^2,   0 < delta <= 1
 
-Operators act per-leaf on pytrees and are fully jittable (static shapes: the
-sparse operators return *dense masked* tensors; the wire-format byte count is
-reported separately by :func:`compressed_bytes`, since on TPU the ``(values,
-indices)`` pair is materialized only at the ICI/DCN boundary).
+Two layers live here (DESIGN.md §2):
 
-TPU adaptation (see DESIGN.md §2): exact *global* top-k needs a global sort —
-hostile to VMEM tiling. ``block_topk`` keeps the top ``k_b`` entries of every
-aligned block instead, which is computable tile-locally (Pallas kernel in
-``repro.kernels.topk``) and satisfies the same contraction bound with
-delta = ratio.
+* **Legacy one-shot operators** (:class:`Compressor`): act per-leaf on
+  pytrees, return *dense masked* tensors, estimate wire cost from the
+  closed-form byte table (:meth:`Compressor.wire_bytes`). Kept as the
+  reference semantics and as the cross-check for the codec layer.
+* **Composable codec pipelines** (:class:`CompressionPipeline`): chainable
+  :class:`Codec` stages (``sparsify ∘ quantize``, e.g. the DSL string
+  ``"block_topk|qsgd"``) with ``encode(tree, key) -> WirePayload`` and
+  ``decode(payload) -> tree``. The :class:`WirePayload` *materializes* the
+  packed representation that actually crosses the link — per-block value
+  buffers, uint16 block-local indices, quantization scales — and computes
+  ``measured_bytes()`` from the buffers themselves. ``decode(encode(x))``
+  is bitwise-identical to the legacy dense-masked operator for every
+  sparse codec, so pipelines are drop-in for :class:`Compressor` in the
+  round functions. Deltas compose multiplicatively.
+
+TPU adaptation: exact *global* top-k needs a global sort — hostile to VMEM
+tiling. ``block_topk`` keeps the top ``k_b`` entries of every aligned block
+instead, computable tile-locally (Pallas kernels in
+``repro.kernels.block_topk`` / ``repro.kernels.pack``) and satisfies the
+same contraction bound with delta = ratio.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Callable, Dict, Optional
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -76,11 +88,35 @@ def _block_topk_leaf(x, key, *, ratio: float, block_size: int, **_):
     return out.reshape(-1)[:n].reshape(x.shape)
 
 
+def _randk_indices(key, n: int, k: int) -> jax.Array:
+    """Exactly-k uniformly random coordinates, derived from ``key`` alone.
+
+    Both endpoints of a link can regenerate the index set from the shared
+    PRNG key, so rand-k payloads carry *values only* (plus the 8-byte key).
+    """
+    scores = jax.random.uniform(key, (n,))
+    _, idx = jax.lax.top_k(scores, k)
+    return idx
+
+
 def _randk_leaf(x, key, *, ratio: float, **_):
-    """Random-k sparsification with unbiased 1/ratio rescaling."""
+    """Biased (CHOCO-style) rand-k: keep exactly k = ceil(ratio·n) random
+    coordinates, NO 1/ratio rescale.
+
+    The unbiased ``mask/ratio`` variant violates the module's contraction
+    contract: E||Q(x)-x||² = (1/ratio − 1)||x||², which exceeds
+    (1 − ratio)||x||² for ratio < 0.618 — CHOCO error feedback requires the
+    biased form. With exactly k coordinates the contraction is deterministic:
+    ||Q(x)-x||² = (1 − k/n)||x||² in expectation over the uniform index set.
+    """
     flat = x.reshape(-1)
-    mask = jax.random.bernoulli(key, p=ratio, shape=flat.shape)
-    return (flat * mask / ratio).reshape(x.shape)
+    n = flat.shape[0]
+    k = max(1, int(np.ceil(ratio * n)))
+    if k >= n:
+        return x
+    idx = _randk_indices(key, n, k)
+    out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    return out.reshape(x.shape)
 
 
 def _sign_leaf(x, key, **_):
@@ -173,7 +209,12 @@ class Compressor:
         name = self.name.replace("_pallas", "")
         if name == "identity":
             return n * elem_bytes
-        if name in ("topk", "block_topk", "randk"):
+        if name == "randk":
+            # indices are derivable from the shared PRNG key: charge values
+            # only, plus the 8-byte key per leaf (keys split per leaf)
+            k = int(np.ceil(self.ratio * n))
+            return k * elem_bytes + 8 * len(jax.tree.leaves(tree))
+        if name in ("topk", "block_topk"):
             k = int(np.ceil(self.ratio * n))
             # values + indices (block_topk indices are block-local -> 2 bytes
             # suffice for block_size <= 65536, we count 2; the normalized
@@ -199,13 +240,599 @@ class Compressor:
         if name == "sign":
             return 1e-3  # depends on leaf kurtosis; loose bound
         if name == "qsgd":
-            return 1e-3  # true delta is per-leaf: 1/(1+omega(n, levels))
+            return 1e-3  # conservative fallback; see delta_for(tree)
         raise ValueError(self.name)
 
+    def delta_for(self, tree) -> float:
+        """Shape-aware contraction constant for a concrete pytree.
 
-def make_compressor(fed_cfg) -> Compressor:
-    return Compressor(
-        name=fed_cfg.compressor,
+        For qsgd the true per-leaf delta is 1/(1+ω(n, levels)) with ω from
+        Alistarh '17 Thm 3.2; the tree-level bound is the min over the leaves
+        actually compressed (min_dense_size passthrough leaves contract with
+        delta = 1). The :attr:`delta` property stays as the conservative
+        shape-free fallback.
+        """
+        name = self.name.replace("_pallas", "")
+        if name != "qsgd":
+            return self.delta
+        deltas = [1.0]
+        for x in jax.tree.leaves(tree):
+            n = int(np.prod(x.shape))
+            if self.min_dense_size and n <= self.min_dense_size:
+                continue
+            deltas.append(1.0 / (1.0 + _qsgd_omega(n, self.qsgd_levels)))
+        return float(min(deltas))
+
+
+# ==========================================================================
+# Codec pipeline layer: chainable stages with a materialized wire format
+# ==========================================================================
+#
+# A pipeline is a chain of Codec stages. Stage 0 consumes the dense leaf;
+# every later stage consumes the previous stage's *carrier* (the value
+# buffer that would cross the link). Sparsifiers emit a packed carrier plus
+# an index sidecar; quantizers re-encode the carrier at a narrower wire
+# dtype plus a scale sidecar. decode() walks the stages in reverse.
+#
+# All shape arithmetic is static (python ints from leaf avals), so encode/
+# decode trace cleanly under jit and WirePayload.measured_bytes() is a
+# compile-time constant.
+
+
+class _SparseMeta(NamedTuple):
+    """Static decode info for topk/block_topk/randk stages."""
+    shape: Tuple[int, ...]      # carrier shape consumed by the stage
+    n: int                      # element count of that carrier
+    k: int                      # survivors (per block for mode="block")
+    mode: str                   # dense | global | block | pallas
+    nb: int = 0                 # blocks (block/pallas modes)
+    bs: int = 0                 # block size
+
+
+class _QuantMeta(NamedTuple):
+    """Static decode info for qsgd/sign stages."""
+    shape: Tuple[int, ...]
+    n: int
+    in_dtype: str               # dtype of the carrier consumed
+    levels: int = 0             # qsgd
+    omega: float = 0.0          # qsgd contraction scaling
+
+
+@dataclass(frozen=True)
+class Codec:
+    """One stage of a CompressionPipeline.
+
+    ``encode(carrier, key) -> (carrier', aux, meta)`` where ``aux`` is the
+    dict of sidecar buffers (indices / keys / scales) that ride along on the
+    wire and ``meta`` is the static info ``decode(carrier', aux, meta)``
+    needs to invert the stage. ``delta_for_n(n)`` is the stage contraction
+    on a carrier of ``n`` elements; ``out_size(n)`` the carrier size it
+    emits; ``sidecar_formula_bytes`` / ``carrier_formula_bytes`` the
+    closed-form byte table kept as the cross-check for measured bytes.
+    """
+
+    name: str = "identity"
+    kind: str = "identity"      # identity | sparsify | quantize
+
+    def encode(self, x, key):
+        raise NotImplementedError
+
+    def decode(self, carrier, aux, meta):
+        raise NotImplementedError
+
+    def delta_for_n(self, n: int) -> float:
+        return 1.0
+
+    def out_size(self, n: int) -> int:
+        return n
+
+    def sidecar_formula_bytes(self, n: int) -> int:
+        return 0
+
+    def carrier_formula_bytes(self, n: int, elem_bytes: int = 4) -> int:
+        return self.out_size(n) * elem_bytes
+
+
+@dataclass(frozen=True)
+class IdentityCodec(Codec):
+    name: str = "identity"
+    kind: str = "identity"
+
+    def encode(self, x, key):
+        return x, {}, _SparseMeta(tuple(x.shape), int(np.prod(x.shape)),
+                                  0, "dense")
+
+    def decode(self, carrier, aux, meta):
+        return carrier
+
+
+def _scatter_flat(carrier, idx, meta):
+    out = jnp.zeros((meta.n,), carrier.dtype).at[idx].set(carrier)
+    return out.reshape(meta.shape)
+
+
+@dataclass(frozen=True)
+class TopKCodec(Codec):
+    """Exact global top-|.|; packed carrier (k,) + 4-byte index sidecar."""
+
+    name: str = "topk"
+    kind: str = "sparsify"
+    ratio: float = 0.01
+
+    def encode(self, x, key):
+        flat = x.reshape(-1)
+        n = flat.shape[0]
+        k = max(1, int(np.ceil(self.ratio * n)))
+        if k >= n:
+            return x, {}, _SparseMeta(tuple(x.shape), n, n, "dense")
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        vals = flat[idx]
+        iw = jnp.uint16 if n <= np.iinfo(np.uint16).max else jnp.uint32
+        return vals, {"idx": idx.astype(iw)}, _SparseMeta(
+            tuple(x.shape), n, k, "global")
+
+    def decode(self, carrier, aux, meta):
+        if meta.mode == "dense":
+            return carrier
+        return _scatter_flat(carrier, aux["idx"].astype(jnp.int32), meta)
+
+    def delta_for_n(self, n):
+        return self.ratio
+
+    def out_size(self, n):
+        k = max(1, int(np.ceil(self.ratio * n)))
+        return min(k, n)
+
+    def sidecar_formula_bytes(self, n):
+        if self.out_size(n) >= n:
+            return 0
+        iw = 2 if n <= np.iinfo(np.uint16).max else 4
+        return self.out_size(n) * iw
+
+
+@dataclass(frozen=True)
+class BlockTopKCodec(Codec):
+    """Block-local top-k; uint16 block-local indices, (nb, k) value buffer.
+
+    ``use_pallas=True`` routes pack/unpack through the tile-local Pallas
+    kernels (``repro.kernels.pack``, interpret=True on CPU); the jnp path
+    is bitwise-identical to the legacy dense-masked ``_block_topk_leaf``.
+    """
+
+    name: str = "block_topk"
+    kind: str = "sparsify"
+    ratio: float = 0.01
+    block_size: int = 1024
+    use_pallas: bool = False
+
+    def encode(self, x, key):
+        flat = x.reshape(-1)
+        n = flat.shape[0]
+        if self.use_pallas:
+            from repro.kernels import ops as kops
+            vals, idx = kops.block_topk_pack(
+                x, ratio=self.ratio, block_size=self.block_size)
+            return vals, {"idx": idx}, _SparseMeta(
+                tuple(x.shape), n, vals.shape[1], "pallas",
+                nb=vals.shape[0], bs=self.block_size)
+        if n <= self.block_size:          # same fallback as the legacy op
+            return TopKCodec(ratio=self.ratio).encode(x, key)
+        bs = self.block_size
+        assert bs <= np.iinfo(np.uint16).max + 1, "uint16 block-local indices"
+        nb = -(-n // bs)
+        k = max(1, int(np.ceil(self.ratio * bs)))
+        padded = jnp.pad(flat, (0, nb * bs - n))
+        blocks = padded.reshape(nb, bs)
+        _, idx = jax.lax.top_k(jnp.abs(blocks), k)
+        vals = jnp.take_along_axis(blocks, idx, axis=1)
+        return vals, {"idx": idx.astype(jnp.uint16)}, _SparseMeta(
+            tuple(x.shape), n, k, "block", nb=nb, bs=bs)
+
+    def decode(self, carrier, aux, meta):
+        if meta.mode in ("dense", "global"):
+            return TopKCodec(ratio=self.ratio).decode(carrier, aux, meta)
+        if meta.mode == "pallas":
+            from repro.kernels import ops as kops
+            return kops.block_topk_unpack(carrier, aux["idx"], meta.n,
+                                          meta.shape,
+                                          block_size=self.block_size)
+        idx = aux["idx"].astype(jnp.int32)
+        blocks = jnp.zeros((meta.nb, meta.bs), carrier.dtype)
+        blocks = blocks.at[jnp.arange(meta.nb)[:, None], idx].set(carrier)
+        return blocks.reshape(-1)[:meta.n].reshape(meta.shape)
+
+    def delta_for_n(self, n):
+        return self.ratio
+
+    def out_size(self, n):
+        # the pallas path packs every leaf block-wise (no global fallback
+        # for small leaves, matching its encode)
+        if n <= self.block_size and not self.use_pallas:
+            return TopKCodec(ratio=self.ratio).out_size(n)
+        nb = max(1, -(-n // self.block_size))
+        k = max(1, int(np.ceil(self.ratio * self.block_size)))
+        return nb * k
+
+    def sidecar_formula_bytes(self, n):
+        if n <= self.block_size and not self.use_pallas:
+            return TopKCodec(ratio=self.ratio).sidecar_formula_bytes(n)
+        return self.out_size(n) * 2    # uint16 block-local indices
+
+
+@dataclass(frozen=True)
+class RandKCodec(Codec):
+    """Exactly-k random coordinates; the index set is regenerated from the
+    shared 8-byte PRNG key at decode, so the sidecar is the key alone."""
+
+    name: str = "randk"
+    kind: str = "sparsify"
+    ratio: float = 0.01
+
+    def encode(self, x, key):
+        flat = x.reshape(-1)
+        n = flat.shape[0]
+        k = max(1, int(np.ceil(self.ratio * n)))
+        if k >= n:
+            return x, {}, _SparseMeta(tuple(x.shape), n, n, "dense")
+        idx = _randk_indices(key, n, k)
+        vals = flat[idx]
+        return vals, {"key": key}, _SparseMeta(tuple(x.shape), n, k, "global")
+
+    def decode(self, carrier, aux, meta):
+        if meta.mode == "dense":
+            return carrier
+        idx = _randk_indices(aux["key"], meta.n, meta.k)
+        return _scatter_flat(carrier, idx, meta)
+
+    def delta_for_n(self, n):
+        return self.ratio
+
+    def out_size(self, n):
+        k = max(1, int(np.ceil(self.ratio * n)))
+        return min(k, n)
+
+    def sidecar_formula_bytes(self, n):
+        return 0 if self.out_size(n) >= n else 8   # the PRNG key
+
+
+@dataclass(frozen=True)
+class QSGDCodec(Codec):
+    """QSGD stochastic quantization; int8/int16 signed grid + f32 scale.
+
+    The carrier is ``sign(x)·q`` materialized at the narrowest integer
+    dtype that holds ±levels; decode reproduces the legacy `_qsgd_leaf`
+    arithmetic bitwise (same association order, same 1/(1+ω) scaling).
+    """
+
+    name: str = "qsgd"
+    kind: str = "quantize"
+    levels: int = 16
+
+    def _wire_dtype(self):
+        return jnp.int8 if self.levels <= np.iinfo(np.int8).max else jnp.int16
+
+    def encode(self, x, key):
+        n = int(np.prod(x.shape))
+        f = x.astype(jnp.float32)
+        norm = jnp.linalg.norm(f.reshape(-1)) + 1e-12
+        scaled = jnp.abs(f) / norm * self.levels
+        lower = jnp.floor(scaled)
+        prob = scaled - lower
+        rnd = jax.random.uniform(key, x.shape)
+        q = lower + (rnd < prob).astype(jnp.float32)
+        carrier = (jnp.sign(f) * q).astype(self._wire_dtype())
+        meta = _QuantMeta(tuple(x.shape), n, str(x.dtype),
+                          levels=self.levels,
+                          omega=_qsgd_omega(n, self.levels))
+        return carrier, {"scale": norm.reshape(1)}, meta
+
+    def decode(self, carrier, aux, meta):
+        norm = aux["scale"][0]
+        out = (carrier.astype(jnp.float32) * norm / meta.levels
+               / (1.0 + meta.omega))
+        return out.astype(meta.in_dtype)
+
+    def delta_for_n(self, n):
+        return 1.0 / (1.0 + _qsgd_omega(n, self.levels))
+
+    def sidecar_formula_bytes(self, n):
+        return 4                      # the f32 norm
+
+    def carrier_formula_bytes(self, n, elem_bytes: int = 4):
+        bits = max(1, int(np.ceil(np.log2(self.levels + 1))) + 1)
+        return -(-n * bits // 8)
+
+
+@dataclass(frozen=True)
+class SignCodec(Codec):
+    """Ternary sign code: bit-packed sign plane + nonzero-mask plane +
+    mean-magnitude scale (2 bits/entry on the wire).
+
+    The explicit zero symbol makes decode reproduce the legacy dense op
+    bitwise — ``sign(0)·scale = 0`` included. A sign-only 1-bit plane
+    would inject ±scale mass at exact-zero coordinates (common in packed
+    carriers: a block with fewer than k nonzeros pads with zeros), which
+    the contraction analysis never produced.
+    """
+
+    name: str = "sign"
+    kind: str = "quantize"
+
+    def encode(self, x, key):
+        n = int(np.prod(x.shape))
+        flat = x.reshape(-1)
+        scale = jnp.mean(jnp.abs(x))
+        bits = jnp.packbits((flat > 0).astype(jnp.uint8))
+        mask = jnp.packbits((flat != 0).astype(jnp.uint8))
+        meta = _QuantMeta(tuple(x.shape), n, str(x.dtype))
+        return bits, {"mask": mask,
+                      "scale": scale.reshape(1).astype(jnp.float32)}, meta
+
+    def decode(self, carrier, aux, meta):
+        pos = jnp.unpackbits(carrier, count=meta.n).astype(jnp.float32)
+        nz = jnp.unpackbits(aux["mask"], count=meta.n).astype(jnp.float32)
+        sgn = (2.0 * pos - 1.0) * nz           # {-1, 0, +1}, exact in f32
+        out = sgn.astype(meta.in_dtype) * aux["scale"][0].astype(
+            meta.in_dtype)
+        return out.reshape(meta.shape)
+
+    def delta_for_n(self, n):
+        return 1e-3                   # kurtosis-dependent; loose bound
+
+    def sidecar_formula_bytes(self, n):
+        return 4 + -(-n // 8)         # scale + nonzero-mask plane
+
+    def carrier_formula_bytes(self, n, elem_bytes: int = 4):
+        return -(-n // 8)             # sign plane
+
+
+class LeafPayload(NamedTuple):
+    """Wire buffers for one leaf: final carrier + per-stage sidecars."""
+    wire: Any                         # last stage's carrier buffer
+    aux: Tuple[Dict[str, Any], ...]   # sidecars, one dict per stage
+
+
+class LeafSpec(NamedTuple):
+    """Static per-leaf decode spec."""
+    shape: Tuple[int, ...]
+    dtype: str
+    passthrough: bool                 # min_dense_size leaves ride dense
+    metas: Tuple[Any, ...] = ()       # per-stage static metas
+
+
+def _buffer_bytes(buf) -> int:
+    return int(np.prod(buf.shape)) * np.dtype(buf.dtype).itemsize
+
+
+@jax.tree_util.register_pytree_node_class
+class WirePayload:
+    """The packed representation that crosses the link (DESIGN.md §2).
+
+    A registered pytree: the value/index/scale buffers are children (so
+    payloads pass through jit / scan / collectives), everything needed to
+    invert them — treedef, per-leaf specs, the codec stages — is static
+    aux data. ``measured_bytes()`` sums the actual buffer footprints
+    (uint16 indices, int8 quantized grids, packed sign bits, 8-byte rand-k
+    keys), replacing the closed-form estimate as the source of truth; the
+    formula table stays available as a cross-check via
+    :meth:`CompressionPipeline.formula_bytes`.
+    """
+
+    def __init__(self, entries, treedef, specs, stages):
+        self.entries = tuple(entries)     # one LeafPayload per leaf
+        self.treedef = treedef
+        self.specs = tuple(specs)
+        self.stages = tuple(stages)
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.entries,), (self.treedef, self.specs, self.stages)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        treedef, specs, stages = aux
+        return cls(children[0], treedef, specs, stages)
+
+    # -- accounting --------------------------------------------------------
+    def per_leaf_bytes(self):
+        """Measured wire bytes per leaf (list aligned with the treedef)."""
+        out = []
+        for entry in self.entries:
+            b = _buffer_bytes(entry.wire)
+            for aux in entry.aux:
+                b += sum(_buffer_bytes(v) for v in aux.values())
+            out.append(b)
+        return out
+
+    def measured_bytes(self) -> int:
+        """Total bytes on the wire, computed from the actual buffers."""
+        return int(sum(self.per_leaf_bytes()))
+
+
+def _stage_key(leaf_key, si: int):
+    """Stage 0 uses the leaf key directly (bitwise compat with the legacy
+    single-op Compressor); later stochastic stages fold in their index."""
+    return leaf_key if si == 0 else jax.random.fold_in(leaf_key, si)
+
+
+@dataclass(frozen=True)
+class CompressionPipeline:
+    """Chainable codec stages with a materialized wire format.
+
+    Drop-in for :class:`Compressor` in the round functions: ``__call__``
+    is ``decode(encode(x))``. Deltas compose multiplicatively
+    (Gong & Simeone '22: a δ₁-contraction followed by a δ₂-contraction of
+    its output is a δ₁·δ₂-contraction).
+    """
+
+    stages: Tuple[Codec, ...] = (BlockTopKCodec(),)
+    min_dense_size: int = 0   # leaves with fewer elements are passed through
+
+    @property
+    def spec(self) -> str:
+        return "|".join(s.name for s in self.stages)
+
+    # -- encode / decode ---------------------------------------------------
+    def encode(self, tree, key) -> WirePayload:
+        leaves, treedef = jax.tree.flatten(tree)
+        keys = jax.random.split(key, len(leaves))
+        entries, specs = [], []
+        for x, leaf_key in zip(leaves, keys):
+            if self.min_dense_size and x.size <= self.min_dense_size:
+                entries.append(LeafPayload(wire=x, aux=()))
+                specs.append(LeafSpec(tuple(x.shape), str(x.dtype), True))
+                continue
+            carrier, auxes, metas = x, [], []
+            for si, stage in enumerate(self.stages):
+                carrier, aux, meta = stage.encode(carrier,
+                                                  _stage_key(leaf_key, si))
+                auxes.append(aux)
+                metas.append(meta)
+            entries.append(LeafPayload(wire=carrier, aux=tuple(auxes)))
+            specs.append(LeafSpec(tuple(x.shape), str(x.dtype), False,
+                                  tuple(metas)))
+        return WirePayload(entries, treedef, specs, self.stages)
+
+    def decode(self, payload: WirePayload):
+        leaves = []
+        for entry, spec in zip(payload.entries, payload.specs):
+            if spec.passthrough:
+                leaves.append(entry.wire)
+                continue
+            carrier = entry.wire
+            for stage, aux, meta in reversed(list(zip(
+                    payload.stages, entry.aux, spec.metas))):
+                carrier = stage.decode(carrier, aux, meta)
+            leaves.append(carrier)
+        return jax.tree.unflatten(payload.treedef, leaves)
+
+    def __call__(self, tree, key):
+        return self.decode(self.encode(tree, key))
+
+    # -- contraction -------------------------------------------------------
+    @property
+    def delta(self) -> float:
+        """Conservative (shape-free) composed contraction constant."""
+        d = 1.0
+        for s in self.stages:
+            d *= (s.ratio if s.kind == "sparsify"
+                  else 1.0 if s.kind == "identity" else 1e-3)
+        return d
+
+    def delta_for(self, tree) -> float:
+        """Shape-aware composed delta: min over leaves of the product of
+        per-stage contractions on the carrier sizes actually seen."""
+        deltas = [1.0]
+        for x in jax.tree.leaves(tree):
+            n = int(np.prod(x.shape))
+            if self.min_dense_size and n <= self.min_dense_size:
+                continue
+            d = 1.0
+            for stage in self.stages:
+                d *= stage.delta_for_n(n)
+                n = stage.out_size(n)
+            deltas.append(d)
+        return float(min(deltas))
+
+    # -- wire accounting ---------------------------------------------------
+    def wire_bytes(self, tree, elem_bytes: int = 4,
+                   index_bytes: int = 4) -> int:
+        """Measured bytes for ``tree`` (static: traces encode shapes only).
+
+        Same name/signature as :meth:`Compressor.wire_bytes` so callers
+        (trainer, launch, examples) work with either object; for pipelines
+        the number comes from the materialized buffers, and
+        :meth:`formula_bytes` provides the legacy closed-form cross-check.
+        """
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        specs = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+        payload = jax.eval_shape(self.encode, specs, key)
+        return payload.measured_bytes()
+
+    def formula_bytes(self, tree, elem_bytes: int = 4) -> int:
+        """Closed-form byte table (the pre-codec estimate), kept as the
+        cross-check for :meth:`wire_bytes`: sidecars per stage plus the
+        final carrier at the last stage's encoding."""
+        total = 0
+        for x in jax.tree.leaves(tree):
+            n = int(np.prod(x.shape))
+            if self.min_dense_size and n <= self.min_dense_size:
+                total += n * elem_bytes
+                continue
+            carrier_bytes = n * elem_bytes      # stage-less: dense
+            for stage in self.stages:
+                total += stage.sidecar_formula_bytes(n)
+                carrier_bytes = stage.carrier_formula_bytes(n, elem_bytes)
+                n = stage.out_size(n)
+            total += carrier_bytes
+        return total
+
+
+_CODEC_FACTORIES: Dict[str, Callable[..., Codec]] = {
+    "identity": lambda ratio, block_size, levels: IdentityCodec(),
+    "topk": lambda ratio, block_size, levels: TopKCodec(ratio=ratio),
+    "block_topk": lambda ratio, block_size, levels: BlockTopKCodec(
+        ratio=ratio, block_size=block_size),
+    "block_topk_pallas": lambda ratio, block_size, levels: BlockTopKCodec(
+        name="block_topk_pallas", ratio=ratio, block_size=block_size,
+        use_pallas=True),
+    "randk": lambda ratio, block_size, levels: RandKCodec(ratio=ratio),
+    "qsgd": lambda ratio, block_size, levels: QSGDCodec(levels=levels),
+    "sign": lambda ratio, block_size, levels: SignCodec(),
+}
+
+
+def parse_pipeline(spec: str, *, ratio: float = 0.01, block_size: int = 1024,
+                   qsgd_levels: int = 16,
+                   min_dense_size: int = 0) -> CompressionPipeline:
+    """Build a pipeline from the ``"stage|stage"`` DSL, e.g.
+    ``"block_topk|qsgd"``. Validates composition order: at most one
+    sparsifier, and it must precede any quantizer (quantized carriers
+    cannot be re-sparsified by magnitude)."""
+    stages = []
+    for nm in (s.strip() for s in spec.split("|")):
+        if nm not in _CODEC_FACTORIES:
+            raise ValueError(
+                f"unknown codec {nm!r}; known: {sorted(_CODEC_FACTORIES)}")
+        stages.append(_CODEC_FACTORIES[nm](ratio, block_size, qsgd_levels))
+    n_sparse = sum(1 for s in stages if s.kind == "sparsify")
+    if n_sparse > 1:
+        raise ValueError(f"at most one sparsifier per pipeline: {spec!r}")
+    for i, s in enumerate(stages):
+        if s.kind == "quantize" and i != len(stages) - 1:
+            # a quantizer's carrier is a wire buffer (int8 grid / packed
+            # bits) — no later stage can meaningfully consume it
+            kind = ("sparsifier" if stages[i + 1].kind == "sparsify"
+                    else "quantizer" if stages[i + 1].kind == "quantize"
+                    else "stage")
+            raise ValueError(
+                f"quantizer must be the terminal stage ({kind} follows "
+                f"{s.name!r}): {spec!r}")
+    return CompressionPipeline(stages=tuple(stages),
+                               min_dense_size=min_dense_size)
+
+
+def make_compressor(fed_cfg):
+    """Build the compression object from a FedConfig.
+
+    ``fed_cfg.pipeline`` (the ``"a|b"`` DSL) takes precedence; otherwise
+    the legacy ``compressor`` enum maps onto a single-stage pipeline —
+    bitwise-identical output, but with a real wire format. The dense
+    Pallas variants keep the legacy :class:`Compressor` path (they
+    exercise the masked kernels end to end).
+    """
+    spec = getattr(fed_cfg, "pipeline", "") or ""
+    if not spec and fed_cfg.compressor.endswith("_pallas"):
+        return Compressor(
+            name=fed_cfg.compressor,
+            ratio=fed_cfg.compress_ratio,
+            block_size=fed_cfg.block_size,
+            qsgd_levels=fed_cfg.qsgd_levels,
+            min_dense_size=fed_cfg.min_dense_size,
+        )
+    return parse_pipeline(
+        spec or fed_cfg.compressor,
         ratio=fed_cfg.compress_ratio,
         block_size=fed_cfg.block_size,
         qsgd_levels=fed_cfg.qsgd_levels,

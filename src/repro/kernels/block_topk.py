@@ -39,7 +39,16 @@ def _block_topk_kernel(x_ref, o_ref, *, k: int):
         return jnp.where(pred, mid, lo), jnp.where(pred, hi, mid)
 
     lo, hi = jax.lax.fori_loop(0, BISECT_ITERS, body, (lo, hi))
-    mask = mag >= lo
+    # Exact-k under ties (invariants: count(>= lo) >= k, count(>= hi) < k):
+    # everything strictly above the threshold survives, then the
+    # tied-at-threshold group fills the remaining slots in index order —
+    # the jax.lax.top_k rule, and the sparsity budget the wire accounting
+    # assumes (kernels/pack.py packs exactly these k entries).
+    mask_def = mag >= hi
+    mask_tie = (mag >= lo) & ~mask_def
+    n_def = jnp.sum(mask_def.astype(jnp.int32), axis=1, keepdims=True)
+    pos_tie = n_def + jnp.cumsum(mask_tie.astype(jnp.int32), axis=1) - 1
+    mask = mask_def | (mask_tie & (pos_tie < k))
     o_ref[...] = jnp.where(mask, x, jnp.zeros_like(x))
 
 

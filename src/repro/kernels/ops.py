@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.kernels.block_topk import ROWS_PER_TILE, block_topk_pallas
 from repro.kernels.fused_update import TILE_C, TILE_R, fused_update_pallas
+from repro.kernels.pack import pack_topk_pallas, unpack_topk_pallas
 from repro.kernels.qsgd import qsgd_pallas
 
 
@@ -46,6 +47,47 @@ def block_topk(x: jnp.ndarray, ratio: float = 0.01, block_size: int = 1024,
     x2d, n = _pad_to_2d(x, block_size, ROWS_PER_TILE)
     out = block_topk_pallas(x2d, k, interpret=interpret)
     return _unpad(out, n, x.shape)
+
+
+# --------------------------------------------------------------------------
+# block top-k wire format: tile-local pack / unpack (DESIGN.md §2)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("ratio", "block_size",
+                                             "interpret"))
+def block_topk_pack(x: jnp.ndarray, ratio: float = 0.01,
+                    block_size: int = 1024, interpret: bool = True):
+    """Pack a leaf into the wire format: (vals (nb, k), idx uint16).
+
+    ``nb = ceil(x.size / block_size)`` — the all-zero rows the kernel adds
+    to reach the tile multiple are sliced off, so the payload (and its
+    measured bytes) covers only real blocks. ``idx`` is block-local so
+    uint16 suffices for block_size <= 65536. The original element count is
+    ``x.size`` (static at the call site).
+    """
+    assert block_size <= 65536, "uint16 block-local indices"
+    k = max(1, int(np.ceil(ratio * block_size)))
+    nb = max(1, -(-x.size // block_size))
+    x2d, _ = _pad_to_2d(x, block_size, ROWS_PER_TILE)
+    vals, idx = pack_topk_pallas(x2d, k, interpret=interpret)
+    return vals[:nb], idx[:nb].astype(jnp.uint16)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "shape", "block_size",
+                                             "interpret"))
+def block_topk_unpack(vals: jnp.ndarray, idx: jnp.ndarray, n: int, shape,
+                      block_size: int = 1024, interpret: bool = True):
+    """Scatter a packed (vals, idx) payload back to the dense masked leaf.
+
+    Re-pads the block rows to the kernel's tile multiple (zero vals at
+    index 0 — harmless: the pad rows are dropped by the final [:n] slice).
+    """
+    nb = vals.shape[0]
+    nb_pad = -(-nb // ROWS_PER_TILE) * ROWS_PER_TILE
+    vals = jnp.pad(vals, ((0, nb_pad - nb), (0, 0)))
+    idx = jnp.pad(idx.astype(jnp.int32), ((0, nb_pad - nb), (0, 0)))
+    dense2d = unpack_topk_pallas(vals, idx, block_size, interpret=interpret)
+    return _unpad(dense2d, n, shape)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,118 @@
+"""Pallas TPU kernels: tile-local pack/unpack of block-top-k survivors.
+
+The wire format of CD-BFL (DESIGN.md §2) ships, per block, a compacted
+``(nb, k)`` value buffer plus block-local indices — not the dense masked
+tensor the compute path keeps on device. These kernels materialize that
+format tile-locally, with no sort and no data-dependent shapes:
+
+* **pack**: per block, threshold bisection (as in ``block_topk.py``)
+  isolates the k-th magnitude; survivors are compacted by a prefix-sum
+  rank and a one-hot contraction
+  ``vals[r, s] = Σ_b x[r, b] · 1[pos[r, b] == s]`` — an (bs × k) matmul
+  per row, MXU-friendly, scatter-free. The ranking is two-tier: entries
+  strictly above the threshold pack first (they can never be evicted),
+  then ties at the threshold fill the remaining slots in index order —
+  the same selection as ``jax.lax.top_k``, so exactly ``k`` survivors
+  are packed per block.
+* **unpack**: the inverse scatter, again as a one-hot contraction
+  ``out[r, b] = Σ_s vals[r, s] · 1[idx[r, s] == b]``.
+
+Layout: input reshaped to ``(num_blocks, block_size)``; one grid row
+processes ``ROWS_PER_TILE`` blocks; ``block_size`` is a multiple of the
+128-lane width. ``k`` is left unpadded here (``interpret=True`` validation
+mode per the repo convention); the TPU path would round it up to a lane
+multiple. Indices are emitted as int32 and narrowed to uint16 by the
+``ops.py`` wrapper (block-local, so ``block_size <= 65536`` suffices).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS_PER_TILE = 8
+BISECT_ITERS = 40
+
+
+def _pack_kernel(x_ref, vals_ref, idx_ref, *, k: int):
+    x = x_ref[...]                                     # (rows, bs)
+    rows, bs = x.shape
+    mag = jnp.abs(x.astype(jnp.float32))
+    hi = jnp.max(mag, axis=1, keepdims=True) + 1.0     # P(hi) = False
+    lo = jnp.zeros_like(hi)                            # P(lo) = True
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((mag >= mid).astype(jnp.float32), axis=1, keepdims=True)
+        pred = cnt >= k
+        return jnp.where(pred, mid, lo), jnp.where(pred, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, BISECT_ITERS, body, (lo, hi))
+    # Bisection invariants: count(mag >= lo) >= k, count(mag >= hi) < k.
+    # Two-tier ranking so ties at the threshold cannot evict a definite
+    # survivor: the < k entries strictly above the threshold (mag >= hi)
+    # pack first, then the tied-at-threshold group fills the remaining
+    # slots in index order — the same selection as jax.lax.top_k.
+    mask_def = mag >= hi                               # definite: < k/row
+    mask_tie = (mag >= lo) & ~mask_def                 # tied at the k-th
+    n_def = jnp.sum(mask_def.astype(jnp.int32), axis=1, keepdims=True)
+    pos_def = jnp.cumsum(mask_def.astype(jnp.int32), axis=1) - 1
+    pos_tie = n_def + jnp.cumsum(mask_tie.astype(jnp.int32), axis=1) - 1
+    pos = jnp.where(mask_def, pos_def, jnp.where(mask_tie, pos_tie, bs))
+    mask = mask_def | mask_tie
+    slots = jnp.arange(k, dtype=jnp.int32)
+    # (rows, bs, k) one-hot: survivor b lands in slot pos[b]; tie entries
+    # ranked past the k-th have pos >= k and match no slot
+    onehot = ((pos[:, :, None] == slots[None, None, :]) & mask[:, :, None]
+              ).astype(jnp.float32)
+    cols = jax.lax.broadcasted_iota(jnp.float32, (rows, bs), 1)
+    vals_ref[...] = jnp.einsum(
+        "rb,rbk->rk", x.astype(jnp.float32), onehot).astype(vals_ref.dtype)
+    idx_ref[...] = jnp.einsum("rb,rbk->rk", cols, onehot).astype(jnp.int32)
+
+
+def _unpack_kernel(vals_ref, idx_ref, o_ref):
+    vals = vals_ref[...]                               # (rows, k)
+    idx = idx_ref[...]                                 # (rows, k) int32
+    rows, bs = o_ref.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
+    onehot = (idx[:, :, None] == cols).astype(jnp.float32)   # (rows, k, bs)
+    o_ref[...] = jnp.einsum(
+        "rk,rkb->rb", vals.astype(jnp.float32), onehot).astype(o_ref.dtype)
+
+
+def pack_topk_pallas(x2d: jnp.ndarray, k: int, *, interpret: bool = True):
+    """x2d (num_blocks, block_size) -> (vals (nb, k), idx int32 (nb, k))."""
+    nb, bs = x2d.shape
+    assert nb % ROWS_PER_TILE == 0, f"pad num_blocks to {ROWS_PER_TILE}"
+    grid = (nb // ROWS_PER_TILE,)
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS_PER_TILE, bs), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((ROWS_PER_TILE, k), lambda i: (i, 0)),
+                   pl.BlockSpec((ROWS_PER_TILE, k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, k), x2d.dtype),
+                   jax.ShapeDtypeStruct((nb, k), jnp.int32)],
+        interpret=interpret,
+    )(x2d)
+
+
+def unpack_topk_pallas(vals: jnp.ndarray, idx: jnp.ndarray, block_size: int,
+                       *, interpret: bool = True) -> jnp.ndarray:
+    """(vals (nb, k), idx int32 (nb, k)) -> dense (nb, block_size)."""
+    nb, k = vals.shape
+    assert nb % ROWS_PER_TILE == 0, f"pad num_blocks to {ROWS_PER_TILE}"
+    grid = (nb // ROWS_PER_TILE,)
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS_PER_TILE, k), lambda i: (i, 0)),
+                  pl.BlockSpec((ROWS_PER_TILE, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROWS_PER_TILE, block_size), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block_size), vals.dtype),
+        interpret=interpret,
+    )(vals, idx)

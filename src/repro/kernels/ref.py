@@ -6,10 +6,13 @@ import jax.numpy as jnp
 
 
 def block_topk_ref(x2d: jnp.ndarray, k: int) -> jnp.ndarray:
-    """Exact per-row top-k by magnitude (sort-based semantics)."""
+    """Exact per-row top-k by magnitude (index-based, exactly k survive
+    even under ties — the jax.lax.top_k rule)."""
     mag = jnp.abs(x2d.astype(jnp.float32))
-    thresh = jax.lax.top_k(mag, k)[0][:, -1:]
-    return jnp.where(mag >= thresh, x2d, jnp.zeros_like(x2d))
+    _, idx = jax.lax.top_k(mag, k)
+    vals = jnp.take_along_axis(x2d, idx, axis=1)
+    rows = jnp.arange(x2d.shape[0])[:, None]
+    return jnp.zeros_like(x2d).at[rows, idx].set(vals)
 
 
 def block_topk_bisect_ref(x2d: jnp.ndarray, k: int, iters: int = 40
@@ -27,7 +30,14 @@ def block_topk_bisect_ref(x2d: jnp.ndarray, k: int, iters: int = 40
         return jnp.where(pred, mid, lo), jnp.where(pred, hi, mid)
 
     lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
-    return jnp.where(mag >= lo, x2d, jnp.zeros_like(x2d))
+    # same exact-k tie rule as the kernel: definite survivors (> threshold)
+    # plus tied-at-threshold entries in index order up to k
+    mask_def = mag >= hi
+    mask_tie = (mag >= lo) & ~mask_def
+    n_def = jnp.sum(mask_def.astype(jnp.int32), axis=1, keepdims=True)
+    pos_tie = n_def + jnp.cumsum(mask_tie.astype(jnp.int32), axis=1) - 1
+    mask = mask_def | (mask_tie & (pos_tie < k))
+    return jnp.where(mask, x2d, jnp.zeros_like(x2d))
 
 
 def fused_update_ref(theta, vbar, v, noise, zeta: float, noise_scale: float):

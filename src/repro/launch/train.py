@@ -57,6 +57,10 @@ def main():
     ap.add_argument("--topo-seed", type=int, default=0,
                     help="graph-sampling seed (erdos_renyi/geometric)")
     ap.add_argument("--compressor", default="block_topk")
+    ap.add_argument("--pipeline", default="",
+                    help="codec pipeline DSL, e.g. 'block_topk|qsgd' "
+                         "(overrides --compressor; stages from "
+                         "core/compression.py)")
     ap.add_argument("--ratio", type=float, default=0.01)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=5)
@@ -80,7 +84,8 @@ def main():
         num_nodes=args.nodes, local_steps=args.local_steps,
         eta=args.eta, zeta=args.zeta, topology=args.topology,
         topology_cfg=topo_cfg,
-        compressor=args.compressor, compress_ratio=args.ratio,
+        compressor=args.compressor, pipeline=args.pipeline,
+        compress_ratio=args.ratio,
         algorithm=args.algorithm,
     )
     topo = build_topology(topo_cfg, fed.num_nodes)
@@ -107,11 +112,17 @@ def main():
         gossip_wire = active * wire * (1.0 - args.link_failure)
     else:
         gossip_wire = dense_wire_bytes(fed.num_nodes, wire)
+    q_name = fed.pipeline or fed.compressor
     print(f"arch={cfg.name} params={n_params/1e6:.2f}M nodes={fed.num_nodes} "
-          f"L={fed.local_steps} Q={fed.compressor}@{fed.compress_ratio} "
+          f"L={fed.local_steps} Q={q_name}@{fed.compress_ratio} "
           f"wire={wire/1e6:.3f}MB/node/round "
           f"(dense {n_params*4/1e6:.1f}MB, saving "
           f"{100*(1-wire/(n_params*4)):.1f}%)")
+    if hasattr(comp, "formula_bytes") and args.algorithm != "dsgld":
+        formula = comp.formula_bytes(params0)
+        print(f"wire accounting: measured={wire} B/node (packed payload) "
+              f"formula={formula} B/node "
+              f"(x{wire/max(formula, 1):.3f} byte-alignment)")
     print(f"topology={topo.describe()} |λ2|={topo.lambda2:.4f} "
           f"mixer={mode} matchings={n_perms} "
           f"gossip_wire={gossip_wire/1e6:.3f}MB/node/round "

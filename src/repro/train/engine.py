@@ -55,6 +55,7 @@ class ChunkMetrics(NamedTuple):
     loss: jax.Array               # (chunk,) mean over (K, L)
     consensus: jax.Array          # (chunk,)
     delta_norm: jax.Array         # (chunk,)
+    wire: jax.Array               # (chunk,) measured bytes/node/round
 
 
 LogCb = Callable[[int, float, float], None]
@@ -75,6 +76,7 @@ class ScanRoundEngine:
         self.bank = bank
         self.default_chunk = int(default_chunk)
         self._chunk_fns = {}              # static chunk length -> compiled fn
+        self.last_wire_history: List[float] = []   # bytes/node/round
 
     # -- one round, traced inside the scan --------------------------------
     def _body(self, carry: EngineCarry, t) -> Tuple[EngineCarry, ChunkMetrics]:
@@ -89,6 +91,7 @@ class ScanRoundEngine:
             loss=jnp.mean(metrics.loss),
             consensus=metrics.consensus_error,
             delta_norm=metrics.delta_norm,
+            wire=metrics.wire_bytes,
         )
         return EngineCarry(state, key, bank), ms
 
@@ -109,12 +112,15 @@ class ScanRoundEngine:
         Chunk sizes align with ``log_every`` so streaming logs keep their
         cadence; without logging, ``default_chunk``-sized super-rounds.
         Returns ``(state, key, bank_state, losses, consensus)`` with the
-        per-round scalar histories as host floats.
+        per-round scalar histories as host floats; the measured per-round
+        wire bytes land in :attr:`last_wire_history` (same length).
         """
         carry = EngineCarry(state, key, bank_state)
         chunk = log_every if log_every > 0 else min(rounds, self.default_chunk)
         losses: List[float] = []
         cons: List[float] = []
+        wires: List[float] = []
+        self.last_wire_history = wires
         done = 0
         while done < rounds:
             n = min(chunk, rounds - done)
@@ -122,6 +128,7 @@ class ScanRoundEngine:
                                                              jnp.int32))
             losses.extend(np.asarray(ms.loss, np.float64).tolist())
             cons.extend(np.asarray(ms.consensus, np.float64).tolist())
+            wires.extend(np.asarray(ms.wire, np.float64).tolist())
             done += n
             # same cadence as the host loop: only exact log_every multiples
             # (a non-aligned remainder chunk does not emit a log line)
@@ -148,6 +155,7 @@ class HostRoundEngine:
         self.local_steps = int(local_steps)
         self.minibatch = int(minibatch)
         self.bank = bank                  # config only: burn_in/thin/capacity
+        self.last_wire_history: List[float] = []   # bytes/node/round
 
     def make_bank(self) -> Optional[SampleBank]:
         if self.bank is None:
@@ -160,6 +168,8 @@ class HostRoundEngine:
             log_every: int = 0, log_cb: Optional[LogCb] = None):
         losses: List[float] = []
         cons: List[float] = []
+        wires: List[float] = []
+        self.last_wire_history = wires
         for i in range(rounds):
             t = t0 + i
             key, kround = jax.random.split(key)
@@ -168,6 +178,7 @@ class HostRoundEngine:
             state, metrics = self.round_fn(state, batches, kround)
             losses.append(float(jnp.mean(metrics.loss)))
             cons.append(float(metrics.consensus_error))
+            wires.append(float(metrics.wire_bytes))
             if self.bank is not None and bank_state is not None:
                 # same admit rule as DeviceSampleBank.admit_mask for rounds
                 # visited sequentially: t >= burn_in, (t - burn_in) % thin == 0

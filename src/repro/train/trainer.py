@@ -40,6 +40,10 @@ class TrainResult:
     brier: float
     bytes_sent_per_round: float
     total_bytes: float
+    # measured from the packed WirePayload buffers (DESIGN.md §2); equals
+    # the formula estimate up to index-width rounding for sparse codecs
+    measured_bytes_per_round: float = 0.0
+    wire_history: List[float] = field(default_factory=list)
     loss_history: List[float] = field(default_factory=list)
     consensus_history: List[float] = field(default_factory=list)
     probs: Optional[np.ndarray] = None
@@ -116,6 +120,7 @@ class FedTrainer:
         # every node sends its compressed Δθ to each neighbor once per round
         from repro.utils.tree import tree_count
         n_edges = self.topology.adjacency.sum()
+        self._n_edges = float(n_edges)
         per_node = self.compressor.wire_bytes(params0)
         if fed_cfg.algorithm == "dsgld":
             per_node = tree_count(params0) * 4
@@ -145,11 +150,18 @@ class FedTrainer:
                               t0=t_start, log_every=log_every, log_cb=log_cb)
         wall = time.time() - t0
 
+        # per-round measured bytes from the round functions (wire payload
+        # per node; scale by the directed edge count like bytes_per_round)
+        wire_hist = list(getattr(self._engine, "last_wire_history", []))
+        measured = (float(np.mean(wire_hist)) * self._n_edges if wire_hist
+                    else self.bytes_per_round)
         res = TrainResult(
             accuracy=float("nan"), ece=float("nan"), nll=float("nan"),
             brier=float("nan"),
             bytes_sent_per_round=self.bytes_per_round,
             total_bytes=self.bytes_per_round * rounds,
+            measured_bytes_per_round=measured,
+            wire_history=wire_hist,
             loss_history=losses, consensus_history=cons, wall_s=wall,
         )
         if eval_batch is not None:

@@ -50,6 +50,87 @@ def test_block_topk_keeps_exactly_k_per_block():
     np.testing.assert_array_equal(nnz, np.full(16, 10))
 
 
+def test_block_topk_kernel_exact_k_under_ties():
+    """Regression: tied magnitudes must not exceed the sparsity budget the
+    wire accounting charges — exactly k survive, lowest indices win, and
+    the packed payload round-trips to the same dense output."""
+    row = np.zeros(256, np.float32)
+    row[0], row[1], row[2] = 1.0, 1.0, 5.0
+    x2d = jnp.asarray(np.tile(row, (8, 1)))
+    for x in (jnp.ones((8, 256)), x2d):
+        out = np.asarray(block_topk_pallas(x, k=2, interpret=True))
+        np.testing.assert_array_equal((out != 0).sum(axis=1), np.full(8, 2))
+        np.testing.assert_array_equal(out, np.asarray(
+            ref.block_topk_bisect_ref(x, 2)))
+        np.testing.assert_array_equal(out, np.asarray(
+            ref.block_topk_ref(x, 2)))
+        from repro.kernels.pack import pack_topk_pallas, unpack_topk_pallas
+        vals, idx = pack_topk_pallas(x, 2, interpret=True)
+        back = unpack_topk_pallas(vals, idx, 256, interpret=True)
+        np.testing.assert_array_equal(np.asarray(back), out)
+
+
+# --------------------------------------------------------------------------
+# wire-format pack / unpack (kernels/pack.py)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("ratio", [0.01, 0.1])
+def test_pack_unpack_roundtrip_matches_dense_kernel(shape, ratio):
+    """unpack(pack(x)) == the dense masked block_topk kernel, exactly."""
+    x = jax.random.normal(KEY, shape)
+    dense = ops.block_topk(x, ratio=ratio, block_size=1024)
+    vals, idx = ops.block_topk_pack(x, ratio=ratio, block_size=1024)
+    back = ops.block_topk_unpack(vals, idx, int(np.prod(shape)), shape,
+                                 block_size=1024)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(dense))
+
+
+def test_pack_selects_topk_set():
+    """Packed (idx, vals) pairs are exactly the top-k set of each block
+    (slot order is two-tier — definite survivors then ties — so compare
+    as sets), with consistent values and block-local indices."""
+    from repro.kernels.pack import pack_topk_pallas
+    x2d = jax.random.normal(KEY, (8, 512))
+    k = 16
+    vals, idx = pack_topk_pallas(x2d, k, interpret=True)
+    assert idx.dtype == jnp.int32 and vals.shape == (8, k)
+    idx_np = np.asarray(idx)
+    assert (idx_np >= 0).all() and (idx_np < 512).all()  # block-local
+    np.testing.assert_allclose(np.asarray(vals),
+                               np.take_along_axis(np.asarray(x2d), idx_np,
+                                                  axis=1), atol=0)
+    _, want_idx = jax.lax.top_k(jnp.abs(x2d), k)
+    for r in range(8):
+        assert set(idx_np[r]) == set(np.asarray(want_idx)[r])
+
+
+def test_pack_exact_k_under_ties():
+    """All-tied block: exactly k packed, lowest indices win (same rule as
+    jax.lax.top_k)."""
+    from repro.kernels.pack import pack_topk_pallas
+    x2d = jnp.ones((8, 256))
+    vals, idx = pack_topk_pallas(x2d, 5, interpret=True)
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  np.tile(np.arange(5), (8, 1)))
+    np.testing.assert_array_equal(np.asarray(vals), np.ones((8, 5)))
+
+
+def test_pack_ties_cannot_evict_definite_survivors():
+    """Regression: a tied-at-threshold group before a strictly larger
+    entry must not push it out of the packed slots. Block [1, 1, 5, 0...]
+    with k=2 keeps {5.0, first 1.0}, like jax.lax.top_k."""
+    from repro.kernels.pack import pack_topk_pallas
+    row = np.zeros(256, np.float32)
+    row[0], row[1], row[2] = 1.0, 1.0, 5.0
+    x2d = jnp.asarray(np.tile(row, (8, 1)))
+    vals, idx = pack_topk_pallas(x2d, 2, interpret=True)
+    for r in range(8):
+        got = dict(zip(np.asarray(idx)[r].tolist(),
+                       np.asarray(vals)[r].tolist()))
+        assert got == {2: 5.0, 0: 1.0}
+
+
 # --------------------------------------------------------------------------
 # fused Eq. 9 update
 # --------------------------------------------------------------------------
