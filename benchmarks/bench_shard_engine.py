@@ -1,0 +1,231 @@
+"""Shard-engine throughput & byte accounting on forced CPU meshes.
+
+Measures rounds/sec of :class:`ShardRoundEngine` (shard_map + explicit
+``lax.ppermute`` gossip) against the scan and host engines on the same
+workload, across 2/4/8-shard ``--xla_force_host_platform_device_count``
+CPU meshes, and reports the wire split the SPMD path makes measurable:
+
+* ``wire_B``  — compressed payload bytes/node/round (what the protocol
+  ships; identical across engines),
+* ``cross_B`` — bytes/node/round the Ω-mixing physically moved *between*
+  shards (ppermute rows × row bytes — the traffic CD-BFL compresses on a
+  real multi-device deployment),
+* ``intra_B`` — partner rows resolved by shard-local gathers.
+
+Every invocation first proves trajectory equivalence: the shard engine's
+final params must match the scan engine's to ≤1e-6 (and the host loop to
+≤1e-5) under the shared PRNG streams (per-node streams key off global node
+ids), else no timing is reported; whether the match was *bitwise* is
+recorded per config (it is exact whenever XLA emits the same per-node
+kernels for the local and global batch shapes — always on the test
+worlds, shape-dependent for the 32-dim world at small shards/node).
+On this container's CPU the collectives are memcpys between logical
+devices, so shard rounds/sec is expected to trail scan — the benchmark
+pins the overhead and the byte model, not a speedup.
+
+    PYTHONPATH=src python benchmarks/bench_shard_engine.py [--tiny|--quick]
+"""
+if __name__ == "__main__":           # entry point only: never on import
+    import sys
+    import os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.launch.xla_flags import force_host_device_count
+    force_host_device_count(8)
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FedConfig
+from repro.core import (ShardContext, build_topology, init_fed_state,
+                        make_compressor, make_round_fn, resolve_topology)
+from repro.core.posterior import DeviceSampleBank
+from repro.data.partition import DeviceShards
+from repro.train.engine import make_engine
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results",
+                           "shard_engine")
+
+
+def _linear_world(k: int, dim: int = 32, per_node: int = 50):
+    rng = np.random.default_rng(0)
+    shards = [{"x": rng.normal(size=(per_node, dim)).astype(np.float32),
+               "y": rng.normal(size=(per_node,)).astype(np.float32)}
+              for _ in range(k)]
+
+    def loss(params, batch, key):
+        pred = batch["x"] @ params["w"] + params["b"]
+        return jnp.mean((pred - batch["y"]) ** 2), ()
+
+    params0 = {"w": jnp.zeros((dim,)), "b": jnp.zeros(())}
+    return loss, params0, shards
+
+
+def _lenet_world(k: int, per_node: int = 50):
+    from repro.config import get_arch
+    from repro.data.radar import make_dataset
+    from repro.data.partition import partition_iid
+    from repro.models import get_model
+    cfg = get_arch("lenet-radar").reduced.replace(input_hw=(16, 16))
+    model = get_model(cfg)
+    ds = make_dataset(k * per_node, hw=(16, 16), day=1, seed=0)
+    shards = partition_iid(ds, k)
+    params0 = model.init(jax.random.PRNGKey(0))
+    return model.loss, params0, shards
+
+
+SIZES = {"linear32": _linear_world, "lenet16": _lenet_world}
+
+
+def measure(size: str, num_shards: int, rounds: int, k: int = 8,
+            local_steps: int = 2, minibatch: int = 4,
+            verify_rounds: int = 8) -> Dict:
+    """Time host/scan/shard engines; prove shard≡scan bitwise first."""
+    loss_fn, params0, shards = SIZES[size](k)
+    fed = FedConfig(
+        num_nodes=k, local_steps=local_steps, eta=1e-3, zeta=0.3, burn_in=0,
+        compressor="topk", compress_ratio=0.1, topology="ring",
+        algorithm="cdbfl",
+    )
+    topo = build_topology(resolve_topology(fed), k)
+    comp = make_compressor(fed)
+    dshards = DeviceShards.from_shards(shards)
+    bank_cfg = DeviceSampleBank(burn_in=0, capacity=16, thin=1)
+    key = jax.random.PRNGKey(0)
+
+    from repro.launch.mesh import make_fed_mesh
+    mesh = make_fed_mesh(num_shards)
+
+    def build(name):
+        shard_ctx = (ShardContext("fed", num_shards) if name == "shard"
+                     else None)
+        rf = make_round_fn("cdbfl", loss_fn, fed, topo.omega, comp,
+                           data_scale=50.0, shard_ctx=shard_ctx)
+        return make_engine(name, rf, dshards, local_steps, minibatch,
+                           bank=bank_cfg, chunk=16,
+                           mesh=mesh if name == "shard" else None)
+
+    def run_engine(name, eng, n, t0=0, state_key=None):
+        state = init_fed_state(params0, fed, key=key)
+        bs = (eng.make_bank() if name == "host"
+              else bank_cfg.init(state.params))
+        out = eng.run(state, state_key or jax.random.PRNGKey(1), bs, n, t0=t0)
+        return out
+
+    engines = {name: build(name) for name in ("host", "scan", "shard")}
+
+    # -- equivalence proof: shard vs scan (same scan-fused streams) --------
+    s_sc = run_engine("scan", engines["scan"], verify_rounds)
+    s_sh = run_engine("shard", engines["shard"], verify_rounds)
+    bitwise = True
+    for a, b in zip(jax.tree.leaves(s_sc[0].params),
+                    jax.tree.leaves(s_sh[0].params)):
+        a, b = np.asarray(a), np.asarray(b)
+        bitwise = bitwise and np.array_equal(a, b)
+        if np.abs(a - b).max() > 1e-6:
+            raise AssertionError(
+                f"shard engine diverged from scan on {size} "
+                f"(maxdiff {np.abs(a - b).max()})")
+    s_h = run_engine("host", engines["host"], verify_rounds)
+    equiv = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+                for a, b in zip(jax.tree.leaves(s_h[0].params),
+                                jax.tree.leaves(s_sh[0].params)))
+    assert equiv < 1e-5, f"shard vs host mismatch on {size}: {equiv}"
+
+    # -- timing ------------------------------------------------------------
+    rps = {}
+    for name, eng in engines.items():
+        state = init_fed_state(params0, fed, key=key)
+        bs = (eng.make_bank() if name == "host"
+              else bank_cfg.init(state.params))
+        state, k2, bs, _, _ = eng.run(state, jax.random.PRNGKey(1), bs,
+                                      16)                 # warmup / compile
+        t0 = time.perf_counter()
+        state, k2, bs, _, _ = eng.run(state, k2, bs, rounds, t0=16)
+        jax.block_until_ready(state.params)
+        rps[name] = rounds / (time.perf_counter() - t0)
+
+    sh = engines["shard"]
+    wire = sh.last_wire_history[-1]
+    cross = sh.last_cross_history[-1]
+    n_params = sum(int(np.prod(x.shape))
+                   for x in jax.tree.leaves(params0))
+    # per-node f32 row footprint × intra rows (static, from the mix stats)
+    from repro.core.gossip import make_shard_mixer
+    _, stats = make_shard_mixer(topo.omega, ShardContext("fed", num_shards),
+                                config=resolve_topology(fed))
+    intra = stats.intra_rows * n_params * 4
+    return {
+        "size": size, "shards": num_shards, "nodes": k, "rounds": rounds,
+        "local_steps": local_steps, "minibatch": minibatch,
+        "host_rounds_per_s": rps["host"],
+        "scan_rounds_per_s": rps["scan"],
+        "shard_rounds_per_s": rps["shard"],
+        "shard_vs_scan": rps["shard"] / rps["scan"],
+        "wire_bytes_per_node": wire,
+        "cross_bytes_per_node": cross,
+        "intra_bytes_per_node": intra,
+        "equiv_max_abs_diff_vs_host": equiv,
+        "bitwise_vs_scan": bitwise,
+    }
+
+
+def _row(rec: Dict) -> str:
+    us = 1e6 / rec["shard_rounds_per_s"]
+    return (f"shard_engine_{rec['size']}_s{rec['shards']},{us:.0f},"
+            f"shard_rps={rec['shard_rounds_per_s']:.1f};"
+            f"scan_rps={rec['scan_rounds_per_s']:.1f};"
+            f"host_rps={rec['host_rounds_per_s']:.1f};"
+            f"wire_B={rec['wire_bytes_per_node']:.0f};"
+            f"cross_B={rec['cross_bytes_per_node']:.0f};"
+            f"intra_B={rec['intra_bytes_per_node']:.0f}")
+
+
+def _save(rec: Dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{rec['size']}_s{rec['shards']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def run(quick: bool = False, tiny: bool = False) -> List[str]:
+    """Benchmark-suite entry point (CSV rows for benchmarks.run)."""
+    ndev = len(jax.devices())
+    shard_counts = [s for s in (2, 4, 8) if s <= ndev]
+    if not shard_counts:
+        return ["shard_engine_SKIPPED,0,needs >=2 devices "
+                "(XLA_FLAGS=--xla_force_host_platform_device_count=8)"]
+    if tiny:
+        plan = [("linear32", s, 32) for s in shard_counts[-1:]]
+    elif quick:
+        plan = [("linear32", s, 64) for s in shard_counts]
+    else:
+        plan = [(size, s, 64 if size != "linear32" else 128)
+                for size in SIZES for s in shard_counts]
+    rows = []
+    for size, s, rounds in plan:
+        rec = measure(size, s, rounds)
+        _save(rec)
+        rows.append(_row(rec))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: one config on the largest mesh")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(quick=args.quick, tiny=args.tiny):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -55,7 +55,8 @@ def _param_tree(tiny: bool):
     return tree
 
 
-def _accounting_rows(tree, ratio: float, save: bool) -> List[str]:
+def _accounting_rows(tree, ratio: float, save: bool,
+                     results_dir: str = None) -> List[str]:
     dense = 4 * sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
     rows = []
     for spec in PIPELINES:
@@ -76,9 +77,10 @@ def _accounting_rows(tree, ratio: float, save: bool) -> List[str]:
             "delta": pipe.delta_for(tree),
         }
         if save:
-            os.makedirs(RESULTS_DIR, exist_ok=True)
+            results_dir = results_dir or RESULTS_DIR
+            os.makedirs(results_dir, exist_ok=True)
             fn = spec.replace("|", "_")
-            with open(os.path.join(RESULTS_DIR, f"{fn}.json"), "w") as f:
+            with open(os.path.join(results_dir, f"{fn}.json"), "w") as f:
                 json.dump(rec, f, indent=1)
         rows.append(
             f"wire_{spec.replace('|', '_')},0,"
@@ -117,9 +119,18 @@ def _throughput_rows(n: int) -> List[str]:
 
 
 def run(quick: bool = False, tiny: bool = False) -> List[str]:
-    """Benchmark-suite entry point (CSV rows for benchmarks.run)."""
+    """Benchmark-suite entry point (CSV rows for benchmarks.run).
+
+    ``--tiny`` saves its (machine-independent) accounting records under
+    ``results/wire_tiny/`` — the byte half of the CI regression gate
+    (``benchmarks/check_regression.py``) — keeping the full-tree records
+    under ``results/wire/`` untouched.
+    """
     tree = _param_tree(tiny)
-    rows = _accounting_rows(tree, ratio=0.01, save=not tiny)
+    tiny_dir = os.path.join(os.path.dirname(__file__), "results",
+                            "wire_tiny")
+    rows = _accounting_rows(tree, ratio=0.01, save=True,
+                            results_dir=tiny_dir if tiny else None)
     if tiny:
         rows += _throughput_rows(2 ** 14)
     else:

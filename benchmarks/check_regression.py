@@ -1,0 +1,232 @@
+"""CI benchmark-regression gate: compare smoke results against references.
+
+The smoke benches (``bench_round_engine --tiny``, ``bench_wire --tiny``,
+``bench_shard_engine --tiny``) write JSON records under
+``benchmarks/results/<bench>/``. Two kinds of reference exist, because
+the two kinds of metric have different portability:
+
+* **Measured bytes** (``*bytes*`` keys) are machine-independent and
+  exact: they are hard-gated against the *committed* baselines in
+  ``benchmarks/results/baselines/`` — any drift is a real wire-format or
+  gossip-plan change and fails, to be re-baselined deliberately with
+  ``--update``.
+* **Throughput** (``*rounds_per_s`` keys) is not portable across
+  machines (dispatch-bound smoke configs swing far beyond 30% between
+  runner generations and load). It is hard-gated — fail on a >``--tol``
+  (default 30%, env ``BENCH_REGRESSION_TOL``) slowdown — only against a
+  *same-runner* reference measured in the same CI job from the PR's
+  merge base (``--throughput-ref <dir>``; the tier1 job checks out the
+  base, runs the same smokes there, and points the gate at those
+  results). Against the committed baselines, throughput deltas are
+  reported as warnings only.
+
+A record present in the baselines but missing from the current results
+also fails (the smoke did not run). A markdown report is always written
+(default ``benchmarks/results/regression_report.md``) — CI uploads it as
+a workflow artifact.
+
+    PYTHONPATH=src python benchmarks/check_regression.py
+    PYTHONPATH=src python benchmarks/check_regression.py \
+        --throughput-ref ../base/benchmarks/results       # PR gate
+    PYTHONPATH=src python benchmarks/check_regression.py --update  # rebase
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import sys
+from typing import Dict, List, Tuple
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+RESULTS = os.path.join(HERE, "results")
+BASELINES = os.path.join(RESULTS, "baselines")
+
+# benches gated by default: <bench dir> -> description
+BENCHES = {
+    "round_engine": "host-loop vs scan-fused engine smoke",
+    "wire_tiny": "packed wire-format byte accounting (tiny tree)",
+    "shard_engine": "SPMD shard engine smoke (shard_map + ppermute)",
+}
+
+THROUGHPUT_SUFFIX = "rounds_per_s"
+BYTES_TOKENS = ("bytes",)
+# informational keys never compared (timing-derived or environment-bound)
+SKIP_TOKENS = ("speedup", "overhead", "equiv", "_over_", "saving",
+               "shard_vs_scan", "delta", "wall")
+
+
+def _classify(key: str) -> str:
+    k = key.lower()
+    if any(t in k for t in SKIP_TOKENS):
+        return "skip"
+    if k.endswith(THROUGHPUT_SUFFIX):
+        return "throughput"
+    if any(t in k for t in BYTES_TOKENS):
+        return "bytes"
+    return "skip"
+
+
+def _load_dir(path: str) -> Dict[str, Dict]:
+    out = {}
+    for fn in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(fn) as f:
+            out[os.path.basename(fn)] = json.load(f)
+    return out
+
+
+def _numeric(rec: Dict, key: str):
+    v = rec.get(key)
+    return v if isinstance(v, (int, float)) and not isinstance(v, bool) \
+        else None
+
+
+def compare(bench: str, tol: float, throughput_ref: str = None
+            ) -> Tuple[List[str], List[str], List[str]]:
+    """Returns (report_rows, failures, warnings) for one bench directory."""
+    base = _load_dir(os.path.join(BASELINES, bench))
+    cur = _load_dir(os.path.join(RESULTS, bench))
+    ref = (_load_dir(os.path.join(throughput_ref, bench))
+           if throughput_ref else {})
+    rows, failures, warnings = [], [], []
+    if not base:
+        failures.append(f"{bench}: no committed baselines under "
+                        f"results/baselines/{bench}/")
+        return rows, failures, warnings
+    for name, brec in base.items():
+        crec = cur.get(name)
+        if crec is None:
+            failures.append(f"{bench}/{name}: baseline has no current "
+                            f"result — did the smoke bench run?")
+            continue
+        for key, bval in brec.items():
+            kind = _classify(key)
+            if kind == "skip" or _numeric(brec, key) is None:
+                continue
+            cval = _numeric(crec, key)
+            if cval is None:
+                failures.append(f"{bench}/{name}:{key}: missing in current")
+                continue
+            if kind == "bytes":
+                ok = float(cval) == float(bval)
+                rows.append(f"| {bench}/{name} | {key} | {bval:g} "
+                            f"| {cval:g} | — | exact "
+                            f"| {'ok' if ok else 'FAIL (bytes mismatch)'} |")
+                if not ok:
+                    failures.append(
+                        f"{bench}/{name}:{key}: measured {cval:g} != "
+                        f"baseline {bval:g} (byte accounting is exact; "
+                        f"re-baseline with --update if intended)")
+                continue
+            # throughput: hard gate vs same-runner reference, warn vs
+            # the committed (cross-machine) baseline
+            rval = _numeric(ref.get(name, {}), key)
+            if rval is not None and rval > 0:
+                ratio = cval / rval
+                ok = cval >= rval * (1.0 - tol)
+                rows.append(f"| {bench}/{name} | {key} | {rval:.1f} "
+                            f"| {cval:.1f} | {ratio:.2f}× | same-runner "
+                            f"| {'ok' if ok else f'FAIL (>{tol:.0%} slower)'} |")
+                if not ok:
+                    failures.append(
+                        f"{bench}/{name}:{key}: {cval:.1f} vs same-runner "
+                        f"merge-base {rval:.1f} "
+                        f"({1 - ratio:.1%} slowdown > {tol:.0%})")
+            else:
+                ratio = cval / bval if bval else float("inf")
+                note = "ok" if cval >= bval * (1.0 - tol) else "WARN (slower)"
+                rows.append(f"| {bench}/{name} | {key} | {bval:.1f} "
+                            f"| {cval:.1f} | {ratio:.2f}× | cross-machine "
+                            f"| {note} |")
+                if note != "ok":
+                    warnings.append(
+                        f"{bench}/{name}:{key}: {cval:.1f} vs committed "
+                        f"baseline {bval:.1f} — informational only "
+                        f"(different machine); the PR gate compares "
+                        f"same-runner merge-base results")
+    return rows, failures, warnings
+
+
+def update_baselines(benches) -> None:
+    for bench in benches:
+        src = os.path.join(RESULTS, bench)
+        dst = os.path.join(BASELINES, bench)
+        if not os.path.isdir(src):
+            print(f"[skip] {bench}: no current results to promote")
+            continue
+        os.makedirs(dst, exist_ok=True)
+        for fn in glob.glob(os.path.join(src, "*.json")):
+            shutil.copy2(fn, dst)
+        print(f"[update] {bench}: baselines <- results/{bench}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default=",".join(BENCHES),
+                    help="comma-separated bench dirs to gate")
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("BENCH_REGRESSION_TOL",
+                                                 0.30)),
+                    help="max tolerated rounds/sec slowdown (fraction)")
+    ap.add_argument("--throughput-ref", default=None,
+                    help="results dir measured on THIS runner from the "
+                         "merge base; enables the hard throughput gate")
+    ap.add_argument("--out", default=os.path.join(RESULTS,
+                                                  "regression_report.md"))
+    ap.add_argument("--update", action="store_true",
+                    help="promote current results to baselines and exit")
+    args = ap.parse_args()
+    benches = [b.strip() for b in args.bench.split(",") if b.strip()]
+
+    if args.update:
+        update_baselines(benches)
+        return
+
+    all_rows: List[str] = []
+    all_failures: List[str] = []
+    all_warnings: List[str] = []
+    for bench in benches:
+        rows, failures, warnings = compare(bench, args.tol,
+                                           args.throughput_ref)
+        all_rows.extend(rows)
+        all_failures.extend(failures)
+        all_warnings.extend(warnings)
+
+    report = [
+        "# Benchmark regression report",
+        "",
+        f"Gate: any measured-bytes mismatch vs committed baselines fails; "
+        f">{args.tol:.0%} rounds/sec slowdown vs a same-runner merge-base "
+        f"reference fails"
+        + ("" if args.throughput_ref else
+           " (no --throughput-ref given: throughput is compared to the "
+           "committed cross-machine baselines as warnings only)") + ".",
+        "",
+        "| record | metric | reference | current | ratio | basis | verdict |",
+        "|---|---|---|---|---|---|---|",
+        *all_rows,
+        "",
+    ]
+    if all_failures:
+        report += ["## Failures", ""] + [f"* {f}" for f in all_failures] + [""]
+    if all_warnings:
+        report += ["## Warnings (non-fatal)", ""] + \
+            [f"* {w}" for w in all_warnings] + [""]
+    if not all_failures:
+        report += ["All gated metrics within tolerance."]
+    text = "\n".join(report) + "\n"
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(text)
+    if all_failures:
+        print(f"REGRESSION GATE FAILED ({len(all_failures)} issue(s)); "
+              f"report: {args.out}", file=sys.stderr)
+        sys.exit(1)
+    print(f"regression gate passed; report: {args.out}")
+
+
+if __name__ == "__main__":
+    main()

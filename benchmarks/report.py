@@ -85,6 +85,32 @@ def engine_table(results_dir: str = None) -> str:
     return "\n".join(lines)
 
 
+def shard_engine_table(results_dir: str = None) -> str:
+    """§Shard engine: SPMD rounds/sec and cross/intra byte split."""
+    results_dir = results_dir or os.path.join(
+        os.path.dirname(__file__), "results", "shard_engine")
+    lines = [
+        "| size | shards | host r/s | scan r/s | shard r/s | shard/scan | "
+        "wire B/node | cross B/node | intra B/node |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for fn in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        rec = json.load(open(fn))
+        lines.append(
+            f"| {rec['size']} | {rec['shards']} "
+            f"| {rec['host_rounds_per_s']:.1f} "
+            f"| {rec['scan_rounds_per_s']:.1f} "
+            f"| {rec['shard_rounds_per_s']:.1f} "
+            f"| {rec['shard_vs_scan']:.3f}× "
+            f"| {rec['wire_bytes_per_node']:.0f} "
+            f"| {rec['cross_bytes_per_node']:.0f} "
+            f"| {rec['intra_bytes_per_node']:.0f} |")
+    if len(lines) == 2:
+        lines.append("| _no records — run bench_shard_engine first_ "
+                     "| | | | | | | | |")
+    return "\n".join(lines)
+
+
 def wire_table(results_dir: str = None) -> str:
     """§Wire accounting: measured packed-payload bytes vs the formula."""
     results_dir = results_dir or os.path.join(
@@ -114,6 +140,8 @@ def main():
     print(fed_table())
     print("\n### §Round engine — host loop vs scan fusion\n")
     print(engine_table())
+    print("\n### §Shard engine — SPMD node sharding (shard_map+ppermute)\n")
+    print(shard_engine_table())
     print("\n### §Wire accounting — measured payload vs formula\n")
     print(wire_table())
     print("\n### §Roofline — single-pod 16×16\n")

@@ -23,13 +23,15 @@ def main() -> None:
     from benchmarks import (bench_ablation, bench_comm_overhead,
                             bench_fig3_l_sweep, bench_fig4_reliability,
                             bench_kernels, bench_round_engine,
-                            bench_topology_sweep, bench_wire, roofline)
+                            bench_shard_engine, bench_topology_sweep,
+                            bench_wire, roofline)
     suites = {
         "fig3_l_sweep": bench_fig3_l_sweep.run,
         "fig4_reliability": bench_fig4_reliability.run,
         "comm_overhead": bench_comm_overhead.run,
         "topology_sweep": bench_topology_sweep.run,
         "round_engine": bench_round_engine.run,
+        "shard_engine": bench_shard_engine.run,
         "wire": bench_wire.run,
         "kernels": bench_kernels.run,
         "roofline": roofline.run,

@@ -6,7 +6,9 @@ from repro.core.mixing import mixing_matrix, adjacency, spectral_gap
 from repro.core.topology import (Topology, MixSchedule, build_topology,
                                  build_schedule, graph_adjacency,
                                  mixing_weights, resolve_topology)
-from repro.core.gossip import dense_mix, schedule_mix, make_mixer
+from repro.core.gossip import (dense_mix, schedule_mix, make_mixer,
+                               ShardContext, ShardMixStats, make_shard_mixer,
+                               plan_shard_mix)
 from repro.core.fed_state import FedState, init_fed_state
 from repro.core.algorithms import (
     make_cdbfl_round,
@@ -27,6 +29,7 @@ __all__ = [
     "spectral_gap", "Topology", "MixSchedule", "build_topology",
     "build_schedule", "graph_adjacency", "mixing_weights",
     "resolve_topology", "dense_mix", "schedule_mix", "make_mixer",
+    "ShardContext", "ShardMixStats", "make_shard_mixer", "plan_shard_mix",
     "FedState", "init_fed_state", "make_cdbfl_round",
     "make_dsgld_round", "make_cffl_round", "make_sgld_step", "make_round_fn",
     "RoundMetrics", "SampleBank", "DeviceSampleBank", "DeviceBankState",

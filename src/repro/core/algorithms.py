@@ -21,18 +21,29 @@ FedConfig's :class:`repro.config.TopologyConfig` (sparse schedule mixer for
 bounded-degree graphs, dense einsum oracle otherwise — DESIGN.md §4) and
 receives a per-round PRNG key, so time-varying graphs (link dropout,
 gossip-pair sampling) work unchanged under jit.
+
+Node decomposability: every stochastic stream that touches the trajectory
+is derived *per node* from the round key and the node's global id
+(compression keys, Langevin noise, minibatch sampling) — node k's
+computation never reads another node's values outside the Ω-mixing. That
+is what the paper's protocol does on real radios, and it is what lets the
+same round function run with the node axis genuinely sharded: built with a
+``shard_ctx`` (:class:`repro.core.gossip.ShardContext`), the mixing lowers
+to explicit ``lax.ppermute`` exchange, metric reductions become ``psum``,
+and per-node results are bitwise identical to the single-device run.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.compression import Compressor
 from repro.core.fed_state import FedState
-from repro.utils.tree import tree_count, tree_random_normal, split_key_like
+from repro.core.gossip import ShardContext, ShardMixStats
+from repro.utils.tree import tree_count, tree_random_normal
 
 
 def _default_mixer(omega, fed_cfg):
@@ -40,6 +51,26 @@ def _default_mixer(omega, fed_cfg):
     from repro.core.topology import resolve_topology
     import numpy as _np
     return make_mixer(_np.asarray(omega), config=resolve_topology(fed_cfg))
+
+
+def _resolve_mixer(omega, fed_cfg, mixer, shard_ctx: Optional[ShardContext]):
+    """Pick the mixing lowering: shard (ppermute), explicit, or default.
+
+    Returns ``(mix_fn, ShardMixStats | None)`` — stats only exist on the
+    shard path, where cross/intra-shard rows are statically known.
+    """
+    if shard_ctx is not None:
+        if mixer is not None:
+            raise ValueError("pass either mixer= or shard_ctx=, not both")
+        from repro.core.gossip import make_shard_mixer
+        from repro.core.topology import resolve_topology
+        import numpy as _np
+        return make_shard_mixer(_np.asarray(omega), shard_ctx,
+                                config=resolve_topology(fed_cfg))
+    if mixer is None:
+        return _default_mixer(omega, fed_cfg), None
+    from repro.core.gossip import as_keyed_mixer
+    return as_keyed_mixer(mixer), None
 
 
 LossFn = Callable[[Any, Any, jax.Array], Tuple[jax.Array, Any]]
@@ -80,50 +111,106 @@ def _local_sgd(params, batches_l, key, loss_fn: LossFn, eta: float,
     return params, losses
 
 
-def _langevin_noise(key, tree, eta: float, temperature: float):
+def _langevin_noise(key, tree, eta: float, temperature: float, node_ids):
+    """Per-node Langevin noise: node k draws from ``fold_in(key, k)``.
+
+    Each node's draw depends only on its global id, so the same values come
+    out whether the node axis is one vmapped block or sharded over a mesh.
+    """
     scale = jnp.sqrt(2.0 * eta * temperature)
-    return tree_random_normal(key, tree, scale=scale, dtype=jnp.float32)
+    keys = _node_keys_for(key, node_ids)
+    return jax.vmap(
+        lambda k, t: tree_random_normal(k, t, scale=scale, dtype=jnp.float32)
+    )(keys, tree)
 
 
 class RoundMetrics(NamedTuple):
-    loss: jax.Array            # (K, L) local losses
+    loss: jax.Array            # (K, L) local losses (shard-local under SPMD)
     consensus_error: jax.Array  # scalar: mean ||θ_k - θ̄||²
     delta_norm: jax.Array      # scalar: mean ||Δθ_k||²
     wire_bytes: jax.Array      # scalar: bytes/node/round on the wire
                                # (measured from the packed payload when the
                                # compressor is a CompressionPipeline)
+    cross_bytes: Any = 0.0     # scalar: bytes/node/round the mixing moved
+                               # *between shards* (ppermute/all-gather rows
+                               # × row bytes); 0 off the shard path
 
 
-def _compress_exchange(compressor, residual, key, K: int):
-    """Run Q over the residual tree; return (delta, bytes/node).
+def _node_ids(local_k: int, shard_ctx: Optional[ShardContext]) -> jax.Array:
+    """Global node ids of the rows this program instance holds."""
+    if shard_ctx is None:
+        return jnp.arange(local_k, dtype=jnp.int32)
+    return shard_ctx.node_ids(local_k)
 
-    Pipelines (anything with ``encode``) go through the materialized wire
-    format: ``encode -> measured_bytes -> decode``; legacy Compressors keep
-    the dense-masked call with the closed-form byte table. Residual leaves
-    carry the leading node axis K, so the payload covers all K nodes —
-    divide for the per-node figure the paper reports.
+
+def _node_keys_for(key, node_ids) -> jax.Array:
+    """One PRNG key per node, from the round key and the global node id."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(node_ids)
+
+
+def _compress_exchange(compressor, residual, key, node_ids):
+    """Run Q per node over the residual tree; return (delta, bytes/node).
+
+    Node k's rows are encoded under ``fold_in(key, k)`` — its compression
+    (top-k selection, QSGD norm, rand-k index set) depends only on its own
+    residual, as on a real radio. Pipelines (anything with ``encode``) go
+    through the materialized wire format: ``encode -> measured_bytes ->
+    decode``; legacy Compressors keep the dense-masked call with the
+    closed-form byte table. The payload buffers carry the local node axis,
+    so dividing by the local node count gives the per-node figure the
+    paper reports (identical on every shard).
     """
+    keys = _node_keys_for(key, node_ids)
+    local_k = node_ids.shape[0]
     if hasattr(compressor, "encode"):
-        payload = compressor.encode(residual, key)
-        delta = compressor.decode(payload)
-        wire = payload.measured_bytes() / K
+        payload = jax.vmap(compressor.encode)(residual, keys)
+        delta = jax.vmap(compressor.decode)(payload)
+        wire = payload.measured_bytes() / local_k
     else:
-        delta = compressor(residual, key)
-        wire = compressor.wire_bytes(residual) / K
+        delta = jax.vmap(compressor)(residual, keys)
+        wire = compressor.wire_bytes(jax.tree.map(lambda x: x[0], residual))
     return delta, jnp.float32(wire)
 
 
-def _consensus_error(params):
+def _allsum(x, shard_ctx: Optional[ShardContext]):
+    """Sum over all shards (identity off the shard path)."""
+    if shard_ctx is None:
+        return x
+    return jax.lax.psum(x, shard_ctx.axis_name)
+
+
+def _consensus_error(params, shard_ctx: Optional[ShardContext] = None,
+                     num_nodes: int = 0):
+    if shard_ctx is None:
+        def leaf(x):
+            mean = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
+            return jnp.sum(jnp.square(x.astype(jnp.float32) - mean))
+        return sum(jax.tree.leaves(jax.tree.map(leaf, params)))
+
     def leaf(x):
-        mean = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
-        return jnp.sum(jnp.square(x.astype(jnp.float32) - mean))
+        xf = x.astype(jnp.float32)
+        mean = _allsum(jnp.sum(xf, axis=0, keepdims=True), shard_ctx) / num_nodes
+        return _allsum(jnp.sum(jnp.square(xf - mean)), shard_ctx)
     return sum(jax.tree.leaves(jax.tree.map(leaf, params)))
 
 
-def _sq_norm(tree):
-    return sum(
-        jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)
+def _sq_norm(tree, shard_ctx: Optional[ShardContext] = None):
+    return _allsum(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree)),
+        shard_ctx,
     )
+
+
+def _cross_bytes(mix_stats: Optional[ShardMixStats], mixed_tree,
+                 local_k: int) -> jax.Array:
+    """Bytes/node/round the mixing physically moved between shards: the
+    static cross-shard row count × the f32 row footprint of the mixed
+    tree (the mixer exchanges f32-cast rows)."""
+    if mix_stats is None:
+        return jnp.float32(0.0)
+    per_node = tree_count(mixed_tree) // local_k
+    return jnp.float32(mix_stats.cross_rows * per_node * 4)
 
 
 # --------------------------------------------------------------------------
@@ -131,7 +218,8 @@ def _sq_norm(tree):
 # --------------------------------------------------------------------------
 
 def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
-                     data_scale: float = 1.0, mixer=None):
+                     data_scale: float = 1.0, mixer=None,
+                     shard_ctx: Optional[ShardContext] = None):
     """Build the jit-able CD-BFL round function.
 
     One round = L local SGLD-style SGD steps per node, compressed residual
@@ -139,25 +227,26 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
     Langevin noise injection (paper Eqs. 5-9).
 
     ``mixer``: optional mix(tree, key)->tree override (defaults to the
-    topology-aware schedule mixer from repro.core.gossip —
-    collective-permutes instead of the dense einsum's all-gather when the
-    node axis is mesh-sharded; legacy mix(tree) callables are adapted).
+    topology-aware schedule mixer from repro.core.gossip; legacy mix(tree)
+    callables are adapted).
+
+    ``shard_ctx``: when set, the round is built for execution inside a
+    ``shard_map`` whose ``axis_name`` carries the node axis: the mixing is
+    explicit ppermute exchange, metric reductions psum over shards, and
+    per-node arithmetic is bitwise identical to the unsharded round.
     """
     eta = fed_cfg.eta
     zeta = fed_cfg.zeta
     K = fed_cfg.num_nodes
     L = fed_cfg.local_steps
     omega = jnp.asarray(omega, jnp.float32)
-    if mixer is None:
-        mixer = _default_mixer(omega, fed_cfg)
-    else:
-        from repro.core.gossip import as_keyed_mixer
-        mixer = as_keyed_mixer(mixer)
+    mixer, mix_stats = _resolve_mixer(omega, fed_cfg, mixer, shard_ctx)
     prior_weight = 1.0 / K
 
     def round_fn(state: FedState, batches, key) -> Tuple[FedState, RoundMetrics]:
         kql, knoise = jax.random.split(key)
         kmix = jax.random.fold_in(key, 2)   # keeps kql/knoise streams stable
+        ids = _node_ids(state.key.shape[0], shard_ctx)
         node_keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
             state.key, state.round
         )
@@ -176,7 +265,7 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
         # consumes the decoded dense delta (DESIGN.md §2).
         residual = jax.tree.map(lambda t, v: t - v.astype(t.dtype), theta_L,
                                 state.v)
-        delta, wire = _compress_exchange(compressor, residual, kql, K)
+        delta, wire = _compress_exchange(compressor, residual, kql, ids)
 
         # -- Eq. 7 / Eq. 8: control sequences (stored in control_dtype) ------
         v_new = jax.tree.map(lambda v, d: (v + d.astype(v.dtype)), state.v, delta)
@@ -185,7 +274,7 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
                                  state.v_bar, mixed)
 
         # -- Eq. 9: consensus correction + Langevin noise --------------------
-        noise = _langevin_noise(knoise, theta_L, eta, fed_cfg.temperature)
+        noise = _langevin_noise(knoise, theta_L, eta, fed_cfg.temperature, ids)
         params_new = jax.tree.map(
             lambda t, vb, v, n: (
                 t.astype(jnp.float32)
@@ -197,9 +286,10 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
 
         metrics = RoundMetrics(
             loss=losses,
-            consensus_error=_consensus_error(params_new) / K,
-            delta_norm=_sq_norm(delta) / K,
+            consensus_error=_consensus_error(params_new, shard_ctx, K) / K,
+            delta_norm=_sq_norm(delta, shard_ctx) / K,
             wire_bytes=wire,
+            cross_bytes=_cross_bytes(mix_stats, delta, ids.shape[0]),
         )
         new_state = FedState(
             params=params_new, v=v_new, v_bar=v_bar_new,
@@ -215,7 +305,7 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
 # --------------------------------------------------------------------------
 
 def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0,
-                     mixer=None):
+                     mixer=None, shard_ctx: Optional[ShardContext] = None):
     """One DSGLD iteration: θ_{k,t+1} = Σ_j ω_kj θ_j - η ∇f_k + √(2η) ξ.
 
     For fairness against CD-BFL with L local steps, ``batches`` still has the
@@ -226,15 +316,12 @@ def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0,
     eta = fed_cfg.eta
     K = fed_cfg.num_nodes
     omega = jnp.asarray(omega, jnp.float32)
-    if mixer is None:
-        mixer = _default_mixer(omega, fed_cfg)
-    else:
-        from repro.core.gossip import as_keyed_mixer
-        mixer = as_keyed_mixer(mixer)
+    mixer, mix_stats = _resolve_mixer(omega, fed_cfg, mixer, shard_ctx)
     prior_weight = 1.0 / K
 
     def round_fn(state: FedState, batches, key) -> Tuple[FedState, RoundMetrics]:
         knoise, kmix = jax.random.split(key)
+        ids = _node_ids(state.key.shape[0], shard_ctx)
         batch0 = jax.tree.map(lambda b: b[:, 0], batches)  # (K, ...)
 
         def node_grad(p, b, k):
@@ -253,7 +340,8 @@ def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0,
         losses, grads = jax.vmap(node_grad)(state.params, batch0, node_keys)
 
         mixed = mixer(state.params, kmix)       # full θ exchange (uncompressed)
-        noise = _langevin_noise(knoise, state.params, eta, fed_cfg.temperature)
+        noise = _langevin_noise(knoise, state.params, eta, fed_cfg.temperature,
+                                ids)
         params_new = jax.tree.map(
             lambda m, g, n: (
                 m.astype(jnp.float32) - eta * g.astype(jnp.float32) + n
@@ -262,10 +350,12 @@ def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0,
         )
         metrics = RoundMetrics(
             loss=losses[:, None],
-            consensus_error=_consensus_error(params_new) / K,
-            delta_norm=_sq_norm(state.params) / K,
+            consensus_error=_consensus_error(params_new, shard_ctx, K) / K,
+            delta_norm=_sq_norm(state.params, shard_ctx) / K,
             # uncompressed θ exchange: dense fp32 payload per node
-            wire_bytes=jnp.float32(tree_count(state.params) * 4 / K),
+            wire_bytes=jnp.float32(
+                tree_count(state.params) // ids.shape[0] * 4),
+            cross_bytes=_cross_bytes(mix_stats, state.params, ids.shape[0]),
         )
         return (
             FedState(params_new, state.v, state.v_bar, state.opt_state,
@@ -281,23 +371,21 @@ def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0,
 # --------------------------------------------------------------------------
 
 def make_cffl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
-                    data_scale: float = 1.0, mixer=None):
+                    data_scale: float = 1.0, mixer=None,
+                    shard_ctx: Optional[ShardContext] = None):
     """CD-BFL minus the Langevin noise and prior: a point-estimate learner."""
     eta = fed_cfg.eta
     zeta = fed_cfg.zeta
     K = fed_cfg.num_nodes
     L = fed_cfg.local_steps
     omega = jnp.asarray(omega, jnp.float32)
-    if mixer is None:
-        mixer = _default_mixer(omega, fed_cfg)
-    else:
-        from repro.core.gossip import as_keyed_mixer
-        mixer = as_keyed_mixer(mixer)
+    mixer, mix_stats = _resolve_mixer(omega, fed_cfg, mixer, shard_ctx)
 
     def round_fn(state: FedState, batches, key) -> Tuple[FedState, RoundMetrics]:
         # same key derivation as cdbfl so the compressor streams coincide
         kq, _ = jax.random.split(key)
         kmix = jax.random.fold_in(key, 2)
+        ids = _node_ids(state.key.shape[0], shard_ctx)
         node_keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
             state.key, state.round
         )
@@ -309,7 +397,7 @@ def make_cffl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
 
         residual = jax.tree.map(lambda t, v: t - v.astype(t.dtype), theta_L,
                                 state.v)
-        delta, wire = _compress_exchange(compressor, residual, kq, K)
+        delta, wire = _compress_exchange(compressor, residual, kq, ids)
         v_new = jax.tree.map(lambda v, d: (v + d.astype(v.dtype)), state.v, delta)
         mixed = mixer(delta, kmix)
         v_bar_new = jax.tree.map(lambda vb, m: (vb + m.astype(vb.dtype)),
@@ -323,9 +411,10 @@ def make_cffl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
         )
         metrics = RoundMetrics(
             loss=losses,
-            consensus_error=_consensus_error(params_new) / K,
-            delta_norm=_sq_norm(delta) / K,
+            consensus_error=_consensus_error(params_new, shard_ctx, K) / K,
+            delta_norm=_sq_norm(delta, shard_ctx) / K,
             wire_bytes=wire,
+            cross_bytes=_cross_bytes(mix_stats, delta, ids.shape[0]),
         )
         return (
             FedState(params_new, v_new, v_bar_new, state.opt_state,
@@ -354,7 +443,10 @@ def make_sgld_step(loss_fn: LossFn, eta: float, temperature: float = 1.0,
             return data_scale * nll + 0.5 * prior
 
         loss, grads = jax.value_and_grad(f)(params)
-        noise = _langevin_noise(knoise, params, eta, temperature)
+        # centralized oracle: no node axis, one global noise draw
+        noise = tree_random_normal(knoise, params,
+                                   scale=jnp.sqrt(2.0 * eta * temperature),
+                                   dtype=jnp.float32)
         params = jax.tree.map(
             lambda x, g, n: (
                 x.astype(jnp.float32) - eta * g.astype(jnp.float32) + n
@@ -375,14 +467,14 @@ ALGORITHMS = {
 
 def make_round_fn(algorithm: str, loss_fn: LossFn, fed_cfg, omega,
                   compressor: Compressor = None, data_scale: float = 1.0,
-                  mixer=None):
+                  mixer=None, shard_ctx: Optional[ShardContext] = None):
     if algorithm == "cdbfl":
         return make_cdbfl_round(loss_fn, fed_cfg, omega, compressor,
-                                data_scale, mixer=mixer)
+                                data_scale, mixer=mixer, shard_ctx=shard_ctx)
     if algorithm == "dsgld":
         return make_dsgld_round(loss_fn, fed_cfg, omega, data_scale,
-                                mixer=mixer)
+                                mixer=mixer, shard_ctx=shard_ctx)
     if algorithm == "cffl":
         return make_cffl_round(loss_fn, fed_cfg, omega, compressor,
-                               data_scale, mixer=mixer)
+                               data_scale, mixer=mixer, shard_ctx=shard_ctx)
     raise ValueError(f"unknown algorithm {algorithm!r}")

@@ -14,13 +14,27 @@
   still symmetric doubly stochastic per realization.
 * ``ring_mix`` — the original circulant ring special case, kept as a
   back-compat alias of the roll fast path.
+* ``make_shard_mixer`` — the SPMD lowering (DESIGN.md §4): the node axis is
+  *actually* sharded over a mesh axis, the code runs inside ``shard_map``,
+  and every schedule application becomes explicit ``lax.ppermute`` neighbor
+  exchange. The matching/circulant schedule is decomposed once, on the
+  host, into static per-shard permutation lists (:func:`plan_shard_mix`);
+  PRNG-keyed link dropout stays a *local* weight mask, so the collective
+  pattern is round-invariant and compiles once. Cross-shard bytes (what
+  ppermute moves) and intra-shard bytes are accounted separately
+  (:class:`ShardMixStats`).
 
-All mixers are numerically identical to ``dense_mix`` on the same Ω.
+All mixers are numerically identical to ``dense_mix`` on the same Ω; the
+shard mixers are additionally *bitwise* identical to their single-device
+counterparts (same elementwise operations in the same order — only the
+data movement differs), which is what makes engine trajectory equivalence
+testable exactly.
 """
 from __future__ import annotations
 
 import inspect
-from typing import Callable, Optional
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -189,6 +203,294 @@ def make_mixer(omega: np.ndarray, topology: Optional[str] = None,
         return lambda tree, key=None: schedule_mix(
             schedule, tree, key, link_failure_prob=p_drop, gossip_pairs=pairs)
     return lambda tree, key=None: schedule_mix(schedule, tree)
+
+
+# --------------------------------------------------------------------------
+# SPMD shard execution: the node axis lives on a mesh axis, Ω-mixing is
+# explicit lax.ppermute neighbor exchange (DESIGN.md §4, ppermute lowering)
+# --------------------------------------------------------------------------
+
+
+class ShardContext(NamedTuple):
+    """Where the federated node axis lives: a named mesh axis of S shards.
+
+    Built by the caller that owns the mesh (ShardRoundEngine, launch.train);
+    consumed by code that runs *inside* ``shard_map`` — mixers, round
+    functions — to derive shard-local node ids and global reductions.
+    """
+    axis_name: str
+    num_shards: int
+
+    def node_ids(self, local_k: int) -> jax.Array:
+        """Global node ids of this shard's ``local_k`` rows (traced)."""
+        r = jax.lax.axis_index(self.axis_name)
+        return r * local_k + jnp.arange(local_k, dtype=jnp.int32)
+
+
+class ShardMixStats(NamedTuple):
+    """Per-node per-round row accounting for a shard mixer.
+
+    ``cross_rows`` counts rows that a ppermute/all-gather physically moves
+    between shards (× payload row bytes = the traffic CD-BFL compresses);
+    ``intra_rows`` counts partner rows resolved by a local gather. Padded
+    ppermute slots count as moved — that is what crosses the interconnect.
+    Link dropout / gossip-pair masks do NOT reduce cross rows: the
+    collective pattern is static, dead links are zero-weighted locally.
+    """
+    mode: str
+    cross_rows: float
+    intra_rows: float
+
+
+class _MatchingExchange(NamedTuple):
+    """One matching's data movement, decomposed per shard-offset delta.
+
+    ``local_src``: (S, lk) partner *local* row for intra-shard edges
+    (identity on fixed points and cross-shard rows — those get overwritten).
+    ``deltas``: per shard-offset d, the ppermute permutation list plus
+    (send_idx (S, c), recv_slot (S, lk), recv_mask (S, lk)): shard s packs
+    rows ``send_idx[s]``, ppermutes them d shards backwards, and the
+    receiver scatters buffer slot ``recv_slot[r, i]`` into local row i
+    wherever ``recv_mask[r, i]``.
+    """
+    local_src: np.ndarray
+    deltas: Tuple[Tuple[int, np.ndarray, np.ndarray, np.ndarray], ...]
+
+
+@dataclass(frozen=True)
+class ShardMixPlan:
+    """Static per-shard permutation lists for a :class:`MixSchedule`.
+
+    Decomposed once on the host: every matching permutation (a global
+    involution of the K node rows) splits into a shard-local gather plus,
+    per shard-offset delta, one ``lax.ppermute`` of a packed row buffer.
+    Shapes are static per schedule, so the collective pattern — and the
+    compiled program — is identical for every round.
+    """
+    num_shards: int
+    local_k: int
+    matchings: Tuple[_MatchingExchange, ...]
+    cross_rows_per_shard: int      # padded ppermute rows, Σ over matchings
+    intra_rows_per_shard: float    # local partner gathers (avg per shard)
+
+
+def plan_shard_mix(schedule: MixSchedule, num_shards: int) -> ShardMixPlan:
+    """Decompose each matching into per-delta ppermute permutation lists."""
+    k, s_n = schedule.k, int(num_shards)
+    if k % s_n:
+        raise ValueError(f"node count {k} not divisible by {s_n} shards")
+    lk = k // s_n
+    matchings = []
+    cross = 0
+    intra = 0
+    for m in range(schedule.num_perms):
+        perm = schedule.perms[m]
+        local_src = np.tile(np.arange(lk, dtype=np.int32), (s_n, 1))
+        needed: dict = {}           # delta -> per-receiver (i, src_local)
+        for r in range(s_n):
+            for i in range(lk):
+                g = r * lk + i
+                sg = int(perm[g])
+                if sg == g:
+                    continue
+                sr, sl = divmod(sg, lk)
+                d = (sr - r) % s_n
+                if d == 0:
+                    local_src[r, i] = sl
+                    intra += 1
+                else:
+                    needed.setdefault(d, [[] for _ in range(s_n)])
+                    needed[d][r].append((i, sl))
+        deltas = []
+        for d in sorted(needed):
+            per_r = needed[d]
+            c = max(len(lst) for lst in per_r)
+            send_idx = np.zeros((s_n, c), np.int32)
+            recv_slot = np.zeros((s_n, lk), np.int32)
+            recv_mask = np.zeros((s_n, lk), bool)
+            for r in range(s_n):
+                for pos, (i, _sl) in enumerate(per_r[r]):
+                    recv_slot[r, i] = pos
+                    recv_mask[r, i] = True
+            for s in range(s_n):        # sender s feeds receiver (s-d) % S
+                for pos, (_i, sl) in enumerate(per_r[(s - d) % s_n]):
+                    send_idx[s, pos] = sl
+            deltas.append((d, send_idx, recv_slot, recv_mask))
+            cross += c
+        matchings.append(_MatchingExchange(local_src, tuple(deltas)))
+    return ShardMixPlan(num_shards=s_n, local_k=lk,
+                        matchings=tuple(matchings),
+                        cross_rows_per_shard=cross,
+                        intra_rows_per_shard=intra / s_n)
+
+
+def _shift_block(x, delta: int, ctx: ShardContext):
+    """Move a packed row buffer ``delta`` shards backwards on the ring,
+    i.e. shard r receives shard (r+delta)'s buffer. delta ≡ 0 is local."""
+    d = delta % ctx.num_shards
+    if d == 0:
+        return x
+    perm = [(j, (j - d) % ctx.num_shards) for j in range(ctx.num_shards)]
+    return jax.lax.ppermute(x, ctx.axis_name, perm)
+
+
+def _shard_roll_leaf(x, shift: int, lk: int, ctx: ShardContext):
+    """Global ``jnp.roll(x, -shift, axis=0)`` of a shard-sharded node axis.
+
+    Row (r·lk+i) needs global row (r·lk+i+shift) mod K: a contiguous block
+    spanning at most two source shards, so two boundary ppermutes suffice
+    (one when shift is block-aligned, none when the source is local).
+    """
+    d0, s0 = divmod(shift, lk)
+    if s0 == 0:
+        return _shift_block(x, d0, ctx)
+    top = _shift_block(x[s0:], d0, ctx)
+    bot = _shift_block(x[:s0], d0 + 1, ctx)
+    return jnp.concatenate([top, bot], axis=0)
+
+
+def _shard_roll_mix(schedule: MixSchedule, tree, ctx: ShardContext):
+    """Circulant fast path, bitwise mirror of :func:`_roll_mix`."""
+    shifts, coeffs = schedule.shifts, schedule.coeffs
+    lk = schedule.k // ctx.num_shards
+
+    def leaf(d):
+        x = d.astype(jnp.float32)
+        out = sum((c * x if s == 0 else c * _shard_roll_leaf(x, s, lk, ctx))
+                  for s, c in zip(shifts, coeffs))
+        return out.astype(d.dtype)
+
+    return jax.tree.map(leaf, tree)
+
+
+def _roll_stats(schedule: MixSchedule, num_shards: int) -> ShardMixStats:
+    lk = schedule.k // num_shards
+    cross = intra = 0
+    for s in schedule.shifts:
+        if s == 0:
+            continue
+        d0, s0 = divmod(s, lk)
+        for rows, d in ((lk - s0, d0), (s0, d0 + 1)):
+            if rows == 0:
+                continue
+            if d % num_shards:
+                cross += rows
+            else:
+                intra += rows
+    return ShardMixStats("roll", cross / lk, intra / lk)
+
+
+def _shard_partner(x, ex: _MatchingExchange, r, ctx: ShardContext):
+    """Local block of ``x[perm_m]``: intra gather + per-delta ppermutes."""
+    partner = jnp.take(x, jnp.asarray(ex.local_src)[r], axis=0)
+    for (d, send_idx, recv_slot, recv_mask) in ex.deltas:
+        buf = jnp.take(x, jnp.asarray(send_idx)[r], axis=0)
+        got = _shift_block(buf, d, ctx)
+        recv = jnp.take(got, jnp.asarray(recv_slot)[r], axis=0)
+        mask = jnp.asarray(recv_mask)[r]
+        partner = jnp.where(mask.reshape((-1,) + (1,) * (x.ndim - 1)),
+                            recv, partner)
+    return partner
+
+
+def _shard_schedule_mix(schedule: MixSchedule, plan: ShardMixPlan, tree,
+                        ctx: ShardContext, key=None, *,
+                        link_failure_prob: float = 0.0, gossip_pairs: int = 0):
+    """Sharded :func:`schedule_mix`, bitwise identical per node.
+
+    The per-round dropout/pair masks are realized exactly as on the host —
+    the full (M, K) mask from the replicated key — then sliced to this
+    shard's columns, so masked weights match the host path bit for bit.
+    The ppermute pattern itself never changes: a dead link still has its
+    row moved, but weighted zero at both endpoints.
+    """
+    m = schedule.num_perms
+    if m == 0:
+        return tree
+    time_varying = key is not None and (link_failure_prob > 0.0
+                                        or 0 < gossip_pairs < m)
+    if not time_varying and schedule.shifts is not None:
+        return _shard_roll_mix(schedule, tree, ctx)
+
+    weights = jnp.asarray(schedule.weights)
+    if time_varying:
+        weights = weights * _matching_masks(schedule, key, link_failure_prob,
+                                            gossip_pairs)
+    r = jax.lax.axis_index(ctx.axis_name)
+    lk = plan.local_k
+    w_local = jax.lax.dynamic_slice(weights, (0, r * lk), (m, lk))
+
+    def leaf(d):
+        x = d.astype(jnp.float32)
+        extra = (1,) * (x.ndim - 1)
+        out = x
+        for i in range(m):
+            partner = _shard_partner(x, plan.matchings[i], r, ctx)
+            w = w_local[i].reshape((lk,) + extra)
+            out = out + w * (partner - x)
+        return out.astype(d.dtype)
+
+    return jax.tree.map(leaf, tree)
+
+
+def _shard_dense_mix(omega, tree, ctx: ShardContext):
+    """Sharded dense oracle: all-gather the node axis, einsum local Ω rows."""
+    om = jnp.asarray(omega).astype(jnp.float32)
+    k = om.shape[0]
+    lk = k // ctx.num_shards
+    r = jax.lax.axis_index(ctx.axis_name)
+    om_local = jax.lax.dynamic_slice(om, (r * lk, 0), (lk, k))
+
+    def leaf(d):
+        full = jax.lax.all_gather(d, ctx.axis_name, axis=0, tiled=True)
+        out = jnp.einsum("kj,j...->k...", om_local, full.astype(jnp.float32))
+        return out.astype(d.dtype)
+
+    return jax.tree.map(leaf, tree)
+
+
+def make_shard_mixer(omega: np.ndarray, ctx: ShardContext, *,
+                     config: Optional[TopologyConfig] = None
+                     ) -> Tuple[Callable, ShardMixStats]:
+    """Build the SPMD mixer: mix(tree, key) to be called *inside* shard_map.
+
+    Executes the same lowering decision as :func:`plan_mixer` — identity /
+    dense all-gather / static schedule (roll fast path when circulant) /
+    per-round masked schedule — with the node axis sharded over
+    ``ctx.axis_name``. Per-node outputs are bitwise identical to the
+    single-device mixer on the gathered axis. Returns the mixer and its
+    :class:`ShardMixStats` row accounting.
+    """
+    om = np.asarray(omega, np.float64)
+    k = om.shape[0]
+    if k % ctx.num_shards:
+        raise ValueError(f"K={k} not divisible by {ctx.num_shards} shards")
+    lk = k // ctx.num_shards
+    mode, schedule = plan_mixer(om, config)
+    if mode == "identity":
+        return (lambda tree, key=None: tree), ShardMixStats("identity", 0, 0)
+    if mode == "dense":
+        stats = ShardMixStats("dense", float(ctx.num_shards - 1),
+                              float(lk - 1))
+        return (lambda tree, key=None: _shard_dense_mix(om, tree, ctx)), stats
+    plan = plan_shard_mix(schedule, ctx.num_shards)
+    if mode == "schedule_tv":
+        p_drop = float(config.link_failure_prob)
+        pairs = int(config.gossip_pairs)
+        stats = ShardMixStats("schedule_tv",
+                              plan.cross_rows_per_shard / lk,
+                              plan.intra_rows_per_shard / lk)
+        return (lambda tree, key=None: _shard_schedule_mix(
+            schedule, plan, tree, ctx, key, link_failure_prob=p_drop,
+            gossip_pairs=pairs)), stats
+    if schedule.shifts is not None:
+        stats = _roll_stats(schedule, ctx.num_shards)
+    else:
+        stats = ShardMixStats("schedule",
+                              plan.cross_rows_per_shard / lk,
+                              plan.intra_rows_per_shard / lk)
+    return (lambda tree, key=None: _shard_schedule_mix(
+        schedule, plan, tree, ctx)), stats
 
 
 def as_keyed_mixer(mixer: Callable) -> Callable:

@@ -99,6 +99,19 @@ class DeviceSampleBank:
         return DeviceBankState(slots=slots,
                                count=bank.count + add.astype(jnp.int32))
 
+    # -- mesh placement ---------------------------------------------------
+    def pspecs(self, bank: DeviceBankState, fed_axis: str) -> DeviceBankState:
+        """PartitionSpec tree: the node axis of every slot leaf (dim 1,
+        after capacity) shards over ``fed_axis``, the admit counter stays
+        replicated. Under the shard engine each mesh slice then holds only
+        its own nodes' posterior chains; the engine consumes these specs
+        for its ``shard_map`` boundary and initial placement."""
+        from jax.sharding import PartitionSpec as P
+        return DeviceBankState(
+            slots=jax.tree.map(lambda _: P(None, fed_axis), bank.slots),
+            count=P(),
+        )
+
     # -- host-side views -------------------------------------------------
     def order(self, bank: DeviceBankState) -> np.ndarray:
         """Slot indices oldest→newest (the host bank's list order)."""

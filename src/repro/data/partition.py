@@ -102,11 +102,21 @@ class DeviceShards:
     def num_nodes(self) -> int:
         return int(self.data[self.example_field].shape[0])
 
-    def sample_indices(self, key, l: int, m: int) -> jnp.ndarray:
-        """(K, L, M) int32 uniform over each node's true shard length."""
+    def sample_indices(self, key, l: int, m: int,
+                       node_ids=None) -> jnp.ndarray:
+        """(K, L, M) int32 uniform over each node's true shard length.
+
+        Node k draws from ``fold_in(key, k)`` — its index stream depends
+        only on its *global* id, so a mesh shard holding rows
+        ``node_ids`` (default ``arange(K)``) reproduces exactly the rows
+        the single-device run would draw for those nodes.
+        """
         k = self.num_nodes
-        return jax.random.randint(key, (k, l, m), 0,
-                                  self.sizes[:, None, None])
+        ids = jnp.arange(k, dtype=jnp.int32) if node_ids is None else node_ids
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(ids)
+        return jax.vmap(
+            lambda kk, n: jax.random.randint(kk, (l, m), 0, n)
+        )(keys, self.sizes)
 
     def gather(self, idx: jnp.ndarray) -> Dict[str, jnp.ndarray]:
         """Gather (K, L, M, ...) round batches from (K, L, M) indices."""
@@ -115,6 +125,22 @@ class DeviceShards:
             for f, v in self.data.items()
         }
 
-    def sample(self, key, l: int, m: int) -> Dict[str, jnp.ndarray]:
+    def sample(self, key, l: int, m: int,
+               node_ids=None) -> Dict[str, jnp.ndarray]:
         """One round's minibatch stack, entirely on device."""
-        return self.gather(self.sample_indices(key, l, m))
+        return self.gather(self.sample_indices(key, l, m, node_ids))
+
+    # -- mesh placement ----------------------------------------------------
+    def with_sharding(self, mesh, fed_axis: str) -> "DeviceShards":
+        """Place every field with the node axis sharded over ``fed_axis``.
+
+        The node count must divide the mesh axis size evenly; padded
+        sample rows move with their node, so in-jit sampling under
+        ``shard_map`` touches only shard-local rows.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        s = NamedSharding(mesh, P(fed_axis))
+        data = {f: jax.device_put(v, s) for f, v in self.data.items()}
+        return DeviceShards(data=data,
+                            sizes=jax.device_put(self.sizes, s),
+                            example_field=self.example_field)

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
 
 Proves the distribution config is coherent without hardware:
@@ -13,12 +10,20 @@ memory_analysis() when the backend provides it, an analytic per-device
 params/state footprint, and the collective-operand bytes parsed from the
 post-optimization HLO — the §Roofline inputs.
 
-NOTE the XLA_FLAGS line above MUST precede any jax import (device count
-locks at first init). Only this entry point sets it; tests/benches see the
-real host devices.
+NOTE the forced device count MUST precede any jax import (it locks at
+first backend init), and only *script execution* may set it: importing
+dryrun helpers from tests or the shard engine must not clobber an
+already-initialized backend, so the mutation sits under the ``__main__``
+guard and goes through ``repro.launch.xla_flags`` (which refuses to touch
+XLA_FLAGS once a backend exists).
 """
+if __name__ == "__main__":
+    from repro.launch.xla_flags import force_host_device_count
+    force_host_device_count(512)
+
 import argparse
 import json
+import os
 import re
 import time
 from functools import partial

@@ -25,6 +25,23 @@ def make_host_mesh(model_axis: int = 1):
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
 
 
+def make_fed_mesh(num_shards: int = 0, fed_axis: str = "fed"):
+    """1-D mesh whose single axis carries the federated node axis K.
+
+    ``num_shards=0`` uses every visible device. This is the mesh the shard
+    round engine (``train/engine.py: ShardRoundEngine``) and the
+    GSPMD-auto path of ``launch/train.py --mesh N`` run on; on CPU, force
+    devices first (``repro.launch.xla_flags.force_host_device_count``).
+    """
+    n = num_shards or len(jax.devices())
+    if n > len(jax.devices()):
+        raise ValueError(
+            f"requested {n} shards but only {len(jax.devices())} devices "
+            f"are visible; set XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={n} before JAX initializes (see repro.launch.xla_flags)")
+    return jax.make_mesh((n,), (fed_axis,))
+
+
 def data_axes(mesh) -> tuple:
     """Axes that carry the batch dimension."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

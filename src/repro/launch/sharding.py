@@ -218,3 +218,46 @@ def cache_shardings(cache_specs, mesh: Mesh):
 
 def replicated(tree, mesh: Mesh):
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+# --------------------------------------------------------------------------
+# Federated-state shardings (node axis on a mesh axis)
+# --------------------------------------------------------------------------
+
+def fed_state_pspecs(state, fed_axis: str = "fed"):
+    """PartitionSpec tree for a FedState with the node axis on ``fed_axis``.
+
+    Single source of truth for which FedState leaves are node-sharded:
+    every per-node leaf (params / v / v̄ / per-node PRNG keys) leads with K
+    and shards it over ``fed_axis``; the round counter is replicated.
+    Consumed as ``shard_map`` in/out specs by the shard engine and wrapped
+    into NamedShardings by :func:`fed_state_shardings`.
+    """
+    node = P(fed_axis)
+
+    def per_node(tree):
+        return jax.tree.map(lambda _: node, tree)
+
+    return type(state)(
+        params=per_node(state.params),
+        v=per_node(state.v),
+        v_bar=per_node(state.v_bar),
+        opt_state=per_node(state.opt_state),
+        key=node,
+        round=P(),
+    )
+
+
+def fed_state_shardings(state, mesh: Mesh, fed_axis: str = "fed"):
+    """NamedSharding tree for a FedState (see :func:`fed_state_pspecs`).
+
+    Used by the GSPMD-auto path: ``device_put`` the state, then let jit
+    insert the gossip collectives.
+    """
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        fed_state_pspecs(state, fed_axis))
+
+
+def place_fed_state(state, mesh: Mesh, fed_axis: str = "fed"):
+    """``device_put`` a FedState onto the fed mesh (node axis sharded)."""
+    return jax.device_put(state, fed_state_shardings(state, mesh, fed_axis))

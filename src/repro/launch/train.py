@@ -2,35 +2,42 @@
 
 On the production mesh the federated nodes live on a mesh axis; on this CPU
 container it degrades to a 1-device mesh and the node axis is vmapped — the
-same jitted round function either way (DESIGN.md §3).
+same jitted round function either way (DESIGN.md §3). The same FedConfig
+runs in three execution modes:
+
+* ``--mesh 1`` (default): single-device, node axis vmapped.
+* ``--mesh N --engine scan``: GSPMD-auto — state is placed with the node
+  axis sharded over the ``--fed-axis`` mesh axis and the compiler inserts
+  the gossip collectives.
+* ``--mesh N --engine shard``: explicit collectives — the scan-fused
+  super-round runs inside ``shard_map`` and the Ω-mixing is hand-lowered
+  to ``lax.ppermute`` neighbor exchange (DESIGN.md §4), with cross-shard
+  bytes reported separately from intra-shard bytes.
 
     PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
         --trim --nodes 4 --rounds 20 --local-steps 4 --seq 128 --batch 4
 
+    # 8 federated nodes on 4 forced CPU shards, explicit ppermute gossip
+    PYTHONPATH=src python -m repro.launch.train --arch lenet-radar --trim \
+        --nodes 8 --mesh 4 --engine shard --rounds 20
+
 ``--trim`` shrinks the model to the reduced config (CPU-budget runs);
-omit it on real hardware.
+omit it on real hardware. On CPU, ``--mesh N`` forces N host devices via
+XLA_FLAGS — it must therefore run before anything initializes the JAX
+backend (this driver handles that; see ``repro.launch.xla_flags``).
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import numpy as np
-
-from repro.checkpoint import save_checkpoint
-from repro.config import FedConfig, TopologyConfig, get_arch
-from repro.core import (build_topology, init_fed_state, make_compressor,
-                        make_round_fn)
-from repro.core.gossip import plan_mixer
-from repro.core.topology import GRAPHS, dense_wire_bytes
-from repro.data.partition import DeviceShards
-from repro.data.synthetic_lm import markov_tokens
-from repro.models import get_model
-from repro.train.engine import make_engine
+from repro.launch.xla_flags import force_host_device_count
 
 
-def main():
+def _parse_args():
+    # jax-free import: topology pulls in numpy + repro.config only
+    from repro.core.topology import GRAPHS
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--trim", action="store_true", help="use reduced config")
@@ -64,13 +71,47 @@ def main():
     ap.add_argument("--ratio", type=float, default=0.01)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=5)
-    ap.add_argument("--engine", default="scan", choices=["scan", "host"],
-                    help="scan: chunked lax.scan super-rounds (default); "
-                         "host: per-round dispatch reference loop")
+    ap.add_argument("--engine", default="scan",
+                    choices=["scan", "host", "shard"],
+                    help="scan: chunked lax.scan super-rounds (default; "
+                         "GSPMD-auto when --mesh > 1); host: per-round "
+                         "dispatch reference loop; shard: shard_map + "
+                         "explicit ppermute gossip (needs --mesh > 1)")
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="shards on the federated mesh axis (must divide "
+                         "--nodes); >1 forces that many host devices on CPU")
+    ap.add_argument("--fed-axis", default="fed",
+                    help="mesh axis name carrying the federated node axis")
     ap.add_argument("--pool", type=int, default=64,
                     help="per-node synthetic sequence pool size (rounds "
                          "sample minibatches from it on device)")
-    args = ap.parse_args()
+    return ap.parse_args()
+
+
+def main():
+    # flags first: --mesh N needs N host devices before JAX initializes
+    args = _parse_args()
+    if args.mesh > 1:
+        force_host_device_count(args.mesh)
+    if args.engine == "shard" and args.mesh < 2:
+        raise SystemExit("--engine shard needs --mesh >= 2")
+    if args.nodes % max(args.mesh, 1):
+        raise SystemExit(f"--nodes {args.nodes} must divide evenly over "
+                         f"--mesh {args.mesh}")
+
+    import jax
+    import numpy as np
+
+    from repro.checkpoint import save_checkpoint
+    from repro.config import FedConfig, TopologyConfig, get_arch
+    from repro.core import (ShardContext, build_topology, init_fed_state,
+                            make_compressor, make_round_fn)
+    from repro.core.gossip import plan_mixer
+    from repro.core.topology import dense_wire_bytes
+    from repro.data.partition import DeviceShards
+    from repro.data.synthetic_lm import markov_tokens
+    from repro.models import get_model
+    from repro.train.engine import make_engine
 
     spec = get_arch(args.arch)
     cfg = spec.reduced if args.trim else spec.config
@@ -91,8 +132,16 @@ def main():
     topo = build_topology(topo_cfg, fed.num_nodes)
     omega = topo.omega
     comp = make_compressor(fed)
+    # execution substrate: single device, GSPMD-auto, or explicit collectives
+    mesh = None
+    shard_ctx = None
+    if args.mesh > 1:
+        from repro.launch.mesh import make_fed_mesh
+        mesh = make_fed_mesh(args.mesh, fed_axis=args.fed_axis)
+        if args.engine == "shard":
+            shard_ctx = ShardContext(args.fed_axis, args.mesh)
     round_fn = make_round_fn(args.algorithm, model.loss, fed, omega,
-                             comp, data_scale=1.0)
+                             comp, data_scale=1.0, shard_ctx=shard_ctx)
 
     key = jax.random.PRNGKey(fed.seed)
     params0 = model.init(key)
@@ -146,9 +195,21 @@ def main():
             for k_node in range(fed.num_nodes)
         ]
     dshards = DeviceShards.from_shards(pool)
+    if mesh is not None and args.engine != "shard":
+        # GSPMD-auto: same scan engine, node axis sharded by placement —
+        # the compiler inserts the gossip collectives (DESIGN.md §3)
+        from repro.launch.sharding import place_fed_state
+        state = place_fed_state(state, mesh, args.fed_axis)
+        dshards = dshards.with_sharding(mesh, args.fed_axis)
     engine = make_engine(args.engine, round_fn, dshards, fed.local_steps,
                          args.batch, bank=None,
-                         chunk=args.log_every or 64)
+                         chunk=args.log_every or 64,
+                         mesh=mesh, fed_axis=args.fed_axis)
+    if args.mesh > 1:
+        sub = ("shard_map + ppermute collectives" if args.engine == "shard"
+               else "GSPMD-auto (sharded placement)")
+        print(f"mesh={args.mesh}x{args.fed_axis!r} "
+              f"({fed.num_nodes // args.mesh} nodes/shard) substrate={sub}")
 
     t0 = time.time()
     log_cb = lambda t, loss, cons: print(
@@ -157,6 +218,12 @@ def main():
     state, key, _, losses, _ = engine.run(
         state, jax.random.fold_in(key, 1), None, args.rounds,
         log_every=args.log_every, log_cb=log_cb)
+    cross = getattr(engine, "last_cross_history", [])
+    if cross and cross[-1] > 0:
+        # only the explicit-collective path accounts its ppermute traffic;
+        # GSPMD-auto moves bytes too but the compiler owns the schedule
+        print(f"cross-shard gossip traffic: {cross[-1]/1e6:.3f}MB/node/round "
+              f"(intra-shard exchange + compute stay on-shard)")
     if args.ckpt_dir:
         path = save_checkpoint(args.ckpt_dir, args.rounds, state.params,
                                metadata={"arch": cfg.name, "fed": vars(args)})

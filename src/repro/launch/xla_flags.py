@@ -1,0 +1,56 @@
+"""Safe manipulation of XLA_FLAGS for forced host device counts.
+
+The CPU backend fixes its device count the moment JAX initializes, so
+``--xla_force_host_platform_device_count`` must land in the environment
+before that — and must *never* be mutated by a mere import: the dry-run
+entry point used to set it at module level, which meant importing a dryrun
+helper from a test (or from the shard engine) could silently reconfigure —
+or fail to reconfigure — the process's backend. Entry points call
+:func:`force_host_device_count` under their ``__main__`` guard instead.
+
+This module must stay importable without importing JAX.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import warnings
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def backend_initialized() -> bool:
+    """True once JAX has instantiated a backend (device count is locked)."""
+    if "jax" not in sys.modules:
+        return False
+    try:
+        from jax._src import xla_bridge
+        return bool(xla_bridge._backends)
+    except Exception:
+        # private API moved: be conservative and assume initialized
+        return True
+
+
+def force_host_device_count(n: int) -> bool:
+    """Merge ``--xla_force_host_platform_device_count=n`` into XLA_FLAGS.
+
+    Returns True when the flag was (re)set. No-ops with a warning when the
+    backend is already initialized — the count cannot change anymore, and
+    clobbering XLA_FLAGS at that point would only confuse later readers.
+    Other flags already present in XLA_FLAGS are preserved.
+    """
+    if backend_initialized():
+        import jax
+        have = len(jax.devices())
+        if have != n:
+            warnings.warn(
+                f"JAX backend already initialized with {have} device(s); "
+                f"cannot force {n} host devices now. Set "
+                f"XLA_FLAGS={_FLAG}={n} before the first jax call.",
+                stacklevel=2)
+        return False
+    keep = [f for f in os.environ.get("XLA_FLAGS", "").split()
+            if not f.startswith(_FLAG)]
+    keep.append(f"{_FLAG}={n}")
+    os.environ["XLA_FLAGS"] = " ".join(keep)
+    return True

@@ -15,20 +15,31 @@ This module provides two interchangeable engines:
   :class:`~repro.data.partition.DeviceShards`, and an on-device
   :class:`~repro.core.posterior.DeviceSampleBank` ring buffer. The host
   sees one dispatch and one small metrics transfer per chunk.
+* :class:`ShardRoundEngine` — the SPMD path (DESIGN.md §4/§9): the node
+  axis K is *genuinely sharded* over a 1-D mesh axis, the scan-fused
+  super-round runs inside ``shard_map`` with donated node-sharded state,
+  and the Ω-mixing executes as explicit ``lax.ppermute`` neighbor exchange
+  (``repro.core.gossip.make_shard_mixer``). Requires a round function
+  built with the matching ``shard_ctx``
+  (:func:`repro.core.algorithms.make_round_fn`).
 
-Both engines consume the *same* PRNG streams: per round,
+All engines consume the *same* PRNG streams: per round,
 ``key, kround = jax.random.split(key)`` and the data key is
-``fold_in(kround, DATA_STREAM_SALT)``, so their trajectories (params,
-metrics, posterior banks) coincide to float tolerance — the equivalence
-tests in ``tests/test_engine.py`` pin this down.
+``fold_in(kround, DATA_STREAM_SALT)``; every per-node stream is derived
+from the node's *global* id. Their trajectories (params, metrics,
+posterior banks) therefore coincide — bitwise for the shard engine's
+per-node state — and the equivalence tests in ``tests/test_engine.py`` /
+``tests/test_shard.py`` pin this down.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Any, Callable, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.posterior import DeviceSampleBank, SampleBank
 from repro.data.partition import DeviceShards
@@ -56,6 +67,7 @@ class ChunkMetrics(NamedTuple):
     consensus: jax.Array          # (chunk,)
     delta_norm: jax.Array         # (chunk,)
     wire: jax.Array               # (chunk,) measured bytes/node/round
+    cross: jax.Array              # (chunk,) cross-shard bytes/node/round
 
 
 LogCb = Callable[[int, float, float], None]
@@ -77,6 +89,7 @@ class ScanRoundEngine:
         self.default_chunk = int(default_chunk)
         self._chunk_fns = {}              # static chunk length -> compiled fn
         self.last_wire_history: List[float] = []   # bytes/node/round
+        self.last_cross_history: List[float] = []  # cross-shard bytes/node
 
     # -- one round, traced inside the scan --------------------------------
     def _body(self, carry: EngineCarry, t) -> Tuple[EngineCarry, ChunkMetrics]:
@@ -92,6 +105,7 @@ class ScanRoundEngine:
             consensus=metrics.consensus_error,
             delta_norm=metrics.delta_norm,
             wire=metrics.wire_bytes,
+            cross=jnp.float32(metrics.cross_bytes),
         )
         return EngineCarry(state, key, bank), ms
 
@@ -120,7 +134,9 @@ class ScanRoundEngine:
         losses: List[float] = []
         cons: List[float] = []
         wires: List[float] = []
+        crosses: List[float] = []
         self.last_wire_history = wires
+        self.last_cross_history = crosses
         done = 0
         while done < rounds:
             n = min(chunk, rounds - done)
@@ -129,6 +145,7 @@ class ScanRoundEngine:
             losses.extend(np.asarray(ms.loss, np.float64).tolist())
             cons.extend(np.asarray(ms.consensus, np.float64).tolist())
             wires.extend(np.asarray(ms.wire, np.float64).tolist())
+            crosses.extend(np.asarray(ms.cross, np.float64).tolist())
             done += n
             # same cadence as the host loop: only exact log_every multiples
             # (a non-aligned remainder chunk does not emit a log line)
@@ -156,6 +173,7 @@ class HostRoundEngine:
         self.minibatch = int(minibatch)
         self.bank = bank                  # config only: burn_in/thin/capacity
         self.last_wire_history: List[float] = []   # bytes/node/round
+        self.last_cross_history: List[float] = []  # cross-shard bytes/node
 
     def make_bank(self) -> Optional[SampleBank]:
         if self.bank is None:
@@ -169,7 +187,9 @@ class HostRoundEngine:
         losses: List[float] = []
         cons: List[float] = []
         wires: List[float] = []
+        crosses: List[float] = []
         self.last_wire_history = wires
+        self.last_cross_history = crosses
         for i in range(rounds):
             t = t0 + i
             key, kround = jax.random.split(key)
@@ -179,6 +199,7 @@ class HostRoundEngine:
             losses.append(float(jnp.mean(metrics.loss)))
             cons.append(float(metrics.consensus_error))
             wires.append(float(metrics.wire_bytes))
+            crosses.append(float(metrics.cross_bytes))
             if self.bank is not None and bank_state is not None:
                 # same admit rule as DeviceSampleBank.admit_mask for rounds
                 # visited sequentially: t >= burn_in, (t - burn_in) % thin == 0
@@ -188,14 +209,174 @@ class HostRoundEngine:
         return state, key, bank_state, losses, cons
 
 
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """shard_map across jax versions (experimental before jax 0.6)."""
+    try:
+        from jax import shard_map as _sm            # jax >= 0.6
+        return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=False)
+    except (ImportError, TypeError):
+        from jax.experimental.shard_map import shard_map as _sm
+        return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+
+
+class ShardRoundEngine:
+    """Scan-fused super-rounds with the node axis sharded over a mesh axis.
+
+    The chunked ``lax.scan`` runs *inside* ``shard_map``: every program
+    instance owns K/S nodes' params/v/v̄ rows, posterior-bank slots and
+    data shards, and the Ω-mixing inside the round function is explicit
+    ``lax.ppermute`` neighbor exchange. The carry is donated, so sharded
+    state updates in place; per-round metrics are psum-reduced on device.
+
+    ``round_fn`` MUST be built with the matching ``shard_ctx``
+    (``make_round_fn(..., shard_ctx=ShardContext(fed_axis, S))``) — it is
+    traced on shard-local rows and uses the mesh axis by name. Because
+    every per-node PRNG stream keys off the node's global id, the
+    trajectory is bitwise identical per node to :class:`HostRoundEngine`
+    running the same-config unsharded round function.
+    """
+
+    name = "shard"
+
+    def __init__(self, round_fn, shards: DeviceShards, local_steps: int,
+                 minibatch: int, bank: Optional[DeviceSampleBank] = None,
+                 default_chunk: int = 64, mesh=None, fed_axis: str = "fed"):
+        if mesh is None:
+            from repro.launch.mesh import make_fed_mesh
+            mesh = make_fed_mesh(fed_axis=fed_axis)
+        self.mesh = mesh
+        self.fed_axis = fed_axis
+        self.num_shards = int(mesh.shape[fed_axis])
+        if shards.num_nodes % self.num_shards:
+            raise ValueError(
+                f"K={shards.num_nodes} nodes not divisible by "
+                f"{self.num_shards} shards on axis {fed_axis!r}")
+        self.round_fn = round_fn          # shard_ctx-built, un-jitted
+        self.shards = shards.with_sharding(mesh, fed_axis)
+        self.local_steps = int(local_steps)
+        self.minibatch = int(minibatch)
+        self.bank = bank
+        self.default_chunk = int(default_chunk)
+        self._chunk_fns = {}
+        self.last_wire_history: List[float] = []
+        self.last_cross_history: List[float] = []
+
+    # -- spec/placement helpers -------------------------------------------
+    def _carry_specs(self, carry: EngineCarry):
+        """shard_map boundary specs for the carry, built from the shared
+        spec sources (launch.sharding.fed_state_pspecs for the FedState,
+        DeviceSampleBank.pspecs for the bank) so 'which leaves are
+        node-sharded' lives in exactly one place per container."""
+        from repro.launch.sharding import fed_state_pspecs
+        state, _key, bank = carry
+        bank_specs = (self.bank.pspecs(bank, self.fed_axis)
+                      if bank is not None else None)
+        return EngineCarry(fed_state_pspecs(state, self.fed_axis), P(),
+                           bank_specs)
+
+    def place(self, carry: EngineCarry) -> EngineCarry:
+        """device_put the carry onto the fed mesh (node axes sharded)."""
+        specs = self._carry_specs(carry)
+        shardings = jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
+        return jax.device_put(carry, shardings)
+
+    # -- one round on this shard's nodes, traced inside the scan ----------
+    def _body(self, data, sizes, carry: EngineCarry, t):
+        state, key, bank = carry
+        key, kround = jax.random.split(key)
+        local_k = state.key.shape[0]
+        r = jax.lax.axis_index(self.fed_axis)
+        ids = r * local_k + jnp.arange(local_k, dtype=jnp.int32)
+        shards_local = DeviceShards(data=data, sizes=sizes,
+                                    example_field=self.shards.example_field)
+        batches = shards_local.sample(round_data_key(kround),
+                                      self.local_steps, self.minibatch,
+                                      node_ids=ids)
+        state, metrics = self.round_fn(state, batches, kround)
+        if self.bank is not None:
+            bank = self.bank.update(bank, t, state.params)
+        # loss is shard-local (lk, L); psum for the global per-round mean.
+        # consensus/delta_norm/wire/cross come out of the round fn already
+        # globally reduced (psum) or shard-invariant (static byte counts).
+        n_total = metrics.loss.size * self.num_shards
+        loss_mean = jax.lax.psum(
+            jnp.sum(metrics.loss.astype(jnp.float32)), self.fed_axis
+        ) / n_total
+        ms = ChunkMetrics(
+            loss=loss_mean,
+            consensus=metrics.consensus_error,
+            delta_norm=metrics.delta_norm,
+            wire=metrics.wire_bytes,
+            cross=jnp.float32(metrics.cross_bytes),
+        )
+        return EngineCarry(state, key, bank), ms
+
+    def _chunk_fn(self, length: int, carry: EngineCarry):
+        if length not in self._chunk_fns:
+            carry_specs = self._carry_specs(carry)
+            data_specs = (jax.tree.map(lambda _: P(self.fed_axis),
+                                       self.shards.data), P(self.fed_axis))
+            metric_specs = ChunkMetrics(P(), P(), P(), P(), P())
+
+            def local_chunk(data_sizes, carry, t0):
+                data, sizes = data_sizes
+                ts = t0 + jnp.arange(length, dtype=jnp.int32)
+                return jax.lax.scan(partial(self._body, data, sizes),
+                                    carry, ts)
+
+            def chunk(data_sizes, carry, t0):
+                return _shard_map(
+                    local_chunk, self.mesh,
+                    in_specs=(data_specs, carry_specs, P()),
+                    out_specs=(carry_specs, metric_specs),
+                )(data_sizes, carry, t0)
+
+            self._chunk_fns[length] = jax.jit(chunk, donate_argnums=(1,))
+        return self._chunk_fns[length]
+
+    def run(self, state, key, bank_state, rounds: int, t0: int = 0,
+            log_every: int = 0, log_cb: Optional[LogCb] = None):
+        """Same contract as :meth:`ScanRoundEngine.run`, node axis sharded."""
+        carry = self.place(EngineCarry(state, key, bank_state))
+        data_sizes = (self.shards.data, self.shards.sizes)
+        chunk = log_every if log_every > 0 else min(rounds, self.default_chunk)
+        losses: List[float] = []
+        cons: List[float] = []
+        wires: List[float] = []
+        crosses: List[float] = []
+        self.last_wire_history = wires
+        self.last_cross_history = crosses
+        done = 0
+        while done < rounds:
+            n = min(chunk, rounds - done)
+            carry, ms = self._chunk_fn(n, carry)(
+                data_sizes, carry, jnp.asarray(t0 + done, jnp.int32))
+            losses.extend(np.asarray(ms.loss, np.float64).tolist())
+            cons.extend(np.asarray(ms.consensus, np.float64).tolist())
+            wires.extend(np.asarray(ms.wire, np.float64).tolist())
+            crosses.extend(np.asarray(ms.cross, np.float64).tolist())
+            done += n
+            if log_cb is not None and log_every and done % log_every == 0:
+                log_cb(t0 + done, losses[-1], cons[-1])
+        return carry.state, carry.key, carry.bank, losses, cons
+
+
 def make_engine(name: str, round_fn, shards: DeviceShards, local_steps: int,
                 minibatch: int, bank: Optional[DeviceSampleBank] = None,
-                chunk: int = 64):
-    """Engine factory: ``"scan"`` (default, fused) or ``"host"`` (oracle)."""
+                chunk: int = 64, mesh=None, fed_axis: str = "fed"):
+    """Engine factory: ``"scan"`` (default, fused), ``"host"`` (oracle), or
+    ``"shard"`` (SPMD: node axis sharded over ``mesh``'s ``fed_axis``,
+    requires a ``shard_ctx``-built round function)."""
     if name == "scan":
         return ScanRoundEngine(round_fn, shards, local_steps, minibatch,
                                bank=bank, default_chunk=chunk)
     if name == "host":
         return HostRoundEngine(round_fn, shards, local_steps, minibatch,
                                bank=bank)
-    raise ValueError(f"unknown engine {name!r}; use 'scan' or 'host'")
+    if name == "shard":
+        return ShardRoundEngine(round_fn, shards, local_steps, minibatch,
+                                bank=bank, default_chunk=chunk, mesh=mesh,
+                                fed_axis=fed_axis)
+    raise ValueError(f"unknown engine {name!r}; use 'scan', 'host' or 'shard'")

@@ -43,7 +43,11 @@ class TrainResult:
     # measured from the packed WirePayload buffers (DESIGN.md §2); equals
     # the formula estimate up to index-width rounding for sparse codecs
     measured_bytes_per_round: float = 0.0
+    # bytes/node/round the Ω-mixing physically moved between mesh shards
+    # (ppermute/all-gather rows × row bytes; 0 off the shard engine)
+    cross_shard_bytes_per_round: float = 0.0
     wire_history: List[float] = field(default_factory=list)
+    cross_history: List[float] = field(default_factory=list)
     loss_history: List[float] = field(default_factory=list)
     consensus_history: List[float] = field(default_factory=list)
     probs: Optional[np.ndarray] = None
@@ -72,7 +76,7 @@ class FedTrainer:
                  minibatch: int = 10, data_scale: Optional[float] = None,
                  seed: int = 0, engine: str = "scan",
                  chunk: Optional[int] = None, bank_capacity: int = 40,
-                 bank_thin: int = 2):
+                 bank_thin: int = 2, mesh=None, fed_axis: str = "fed"):
         assert len(shards) == fed_cfg.num_nodes, "one shard per node"
         self.model = model
         self.fed_cfg = fed_cfg
@@ -105,10 +109,23 @@ class FedTrainer:
                                          thin=bank_thin)
         bank_enabled = fed_cfg.algorithm in ("cdbfl", "dsgld")
         self.device_shards = DeviceShards.from_shards(shards)
+        engine_round_fn = round_fn
+        if engine == "shard":
+            # the shard engine needs a round function traced on shard-local
+            # rows with the mixing lowered to explicit ppermute exchange
+            from repro.core.gossip import ShardContext
+            from repro.launch.mesh import make_fed_mesh
+            if mesh is None:
+                mesh = make_fed_mesh(fed_axis=fed_axis)
+            ctx = ShardContext(fed_axis, int(mesh.shape[fed_axis]))
+            engine_round_fn = make_round_fn(
+                fed_cfg.algorithm, model.loss, fed_cfg, self.omega,
+                self.compressor, data_scale=self.data_scale, shard_ctx=ctx,
+            )
         self._engine = make_engine(
-            engine, round_fn, self.device_shards, fed_cfg.local_steps,
+            engine, engine_round_fn, self.device_shards, fed_cfg.local_steps,
             minibatch, bank=self.bank_cfg if bank_enabled else None,
-            chunk=chunk or 64,
+            chunk=chunk or 64, mesh=mesh, fed_axis=fed_axis,
         )
         if engine == "host":
             self._bank_state: Any = self._engine.make_bank()
@@ -155,13 +172,17 @@ class FedTrainer:
         wire_hist = list(getattr(self._engine, "last_wire_history", []))
         measured = (float(np.mean(wire_hist)) * self._n_edges if wire_hist
                     else self.bytes_per_round)
+        cross_hist = list(getattr(self._engine, "last_cross_history", []))
         res = TrainResult(
             accuracy=float("nan"), ece=float("nan"), nll=float("nan"),
             brier=float("nan"),
             bytes_sent_per_round=self.bytes_per_round,
             total_bytes=self.bytes_per_round * rounds,
             measured_bytes_per_round=measured,
+            cross_shard_bytes_per_round=(float(np.mean(cross_hist))
+                                         if cross_hist else 0.0),
             wire_history=wire_hist,
+            cross_history=cross_hist,
             loss_history=losses, consensus_history=cons, wall_s=wall,
         )
         if eval_batch is not None:

@@ -37,10 +37,17 @@ def _setup(algorithm="cdbfl", K=4, L=3, compressor="topk", ratio=0.5,
 
 
 def test_cdbfl_converges_toward_truth():
+    """The posterior mean lands near the truth. A single SGLD iterate at
+    temperature 1.0 wanders with the Langevin noise (±0.3 on this toy), so
+    the assertion averages post-burn-in iterates — the estimator CD-BFL
+    actually ships (BMA over the sample bank)."""
     fed, rf, state, batch, wtrue = _setup(eta=5e-3)
-    for t in range(300):
+    post = []
+    for t in range(400):
         state, m = rf(state, batch, jax.random.fold_in(KEY, t))
-    w_mean = np.asarray(state.params["w"]).mean(0)
+        if t >= 200:
+            post.append(np.asarray(state.params["w"]).mean(0))
+    w_mean = np.mean(post, axis=0)
     assert np.linalg.norm(w_mean - np.asarray(wtrue)) < 0.5
     assert np.isfinite(m.loss).all()
 

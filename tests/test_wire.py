@@ -372,8 +372,9 @@ def test_round_metrics_report_wire_bytes():
         hists[name] = eng.last_wire_history
     assert len(hists["host"]) == len(hists["scan"]) == 7
     np.testing.assert_allclose(hists["host"], hists["scan"], rtol=1e-6)
-    # the value is the per-node measured payload
-    want = comp.wire_bytes({"w": jnp.zeros((K, DIM))}) / K
+    # the value is the per-node measured payload: each node encodes its own
+    # residual rows (node-decomposable compression, DESIGN.md §9)
+    want = comp.wire_bytes({"w": jnp.zeros((DIM,))})
     np.testing.assert_allclose(hists["host"], np.full(7, want), rtol=1e-6)
 
 
