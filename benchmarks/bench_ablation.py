@@ -24,9 +24,11 @@ from repro.train import FedTrainer
 def run(quick: bool = False) -> List[str]:
     rows = []
     rounds = 60 if quick else 120
-    cfg, model, shards, test_d1, _ = radar_world()
+    cfg, model, shards, test_d1, test_shift = radar_world()
 
-    # A: compression operators
+    # A: compression operators — day-1 metrics plus the shifted-ECE
+    # column (day-2/3 scenario cells through the fused eval engine):
+    # does the operator change calibration under shift, not just clean?
     for comp, ratio in (("block_topk", 0.01), ("randk", 0.01),
                         ("qsgd", None), ("sign", None)):
         kw = {"compressor": comp}
@@ -34,8 +36,11 @@ def run(quick: bool = False) -> List[str]:
             kw["ratio"] = ratio
         tr, res = run_method(model, shards, "cdbfl", local_steps=8,
                              rounds=rounds, eval_batch=test_d1, **kw)
+        rep_s = tr.eval_report(test_shift)
         rows.append(f"ablationA_{comp},{res.wall_s*1e6/rounds:.0f},"
                     f"acc={res.accuracy:.4f};ece={res.ece:.4f};"
+                    f"ece_shift={rep_s.ece:.4f};"
+                    f"gap_shift={rep_s.overconf_gap:+.4f};"
                     f"bytes_per_round={res.bytes_sent_per_round:.3e}")
 
     # B: topologies (bytes scale with edges — ring is the scarce-link case)

@@ -1,0 +1,167 @@
+"""Eval-engine throughput: legacy host BMA loop vs fused scan engine.
+
+The pre-PR5 evaluation path ran Bayesian model averaging as a traced
+Python loop over posterior samples (``bma_predict``) on the full
+dataset, then computed accuracy/ECE/NLL/Brier with four separate
+host-side calibration calls. ``ScanEvalEngine`` (DESIGN.md §10) replaces
+that with one donated ``lax.scan`` over batches, a single vmap over the
+stacked bank, and fused streaming metric accumulators.
+
+Three paths are timed on the radar LeNet pool with a realistic bank
+(S posterior samples × K node chains):
+
+* ``legacy`` — ``bma_predict`` sample loop + ``core.calibration`` host
+  metrics (what ``FedTrainer.evaluate`` did before PR 5);
+* ``host`` — the per-batch-dispatch eval oracle (same stats kernel);
+* ``scan`` — the fused engine.
+
+Every invocation proves equivalence first (scan == host bitwise, both
+within float tolerance of the legacy full-dataset formulas) and asserts
+the fused engine beats the legacy loop.
+
+    PYTHONPATH=src python benchmarks/bench_eval_engine.py [--tiny|--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_arch
+from repro.core import calibration as cal
+from repro.core.posterior import bma_predict
+from repro.data.radar import make_dataset
+from repro.eval import HostEvalEngine, ScanEvalEngine
+from repro.models import get_model
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results",
+                           "eval_engine")
+
+
+def _bank(model, s: int, k: int):
+    """(S, K, ...) stacked synthetic posterior bank."""
+    key = jax.random.PRNGKey(0)
+
+    def node_stack(i):
+        ps = [model.init(jax.random.fold_in(key, i * k + j))
+              for j in range(k)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+    banks = [node_stack(i) for i in range(s)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *banks)
+
+
+def measure(hw, n_eval: int, s: int = 20, k: int = 5, batch: int = 64,
+            iters: int = 5) -> Dict:
+    cfg = get_arch("lenet-radar").reduced.replace(input_hw=hw)
+    model = get_model(cfg)
+    stacked = _bank(model, s, k)
+    samples = [jax.tree.map(lambda x: x[i], stacked) for i in range(s)]
+    ds = make_dataset(n_eval, hw=hw, day=2, seed=7)
+    apply = lambda p, b: model.logits(p, b)
+
+    # -- legacy host loop: traced sample loop + host metric formulas ------
+    batch_dev = jax.tree.map(jnp.asarray, ds)
+
+    def legacy():
+        probs = bma_predict(apply, samples, batch_dev, node_axis=0)
+        probs = np.asarray(probs, np.float32)
+        return (float(cal.accuracy(probs, ds["y"])),
+                float(cal.ece(probs, ds["y"])),
+                float(cal.nll(probs, ds["y"])),
+                float(cal.brier(probs, ds["y"])))
+
+    host = HostEvalEngine(apply, batch_size=batch)
+    scan = ScanEvalEngine(apply, batch_size=batch)
+
+    # -- equivalence proof before any timing ------------------------------
+    acc_l, ece_l, nll_l, brier_l = legacy()
+    rep_h = host.evaluate(stacked, ds, node_axis=1)
+    rep_s = scan.evaluate(stacked, ds, node_axis=1)
+    assert rep_s == rep_h._replace(bins=rep_s.bins), \
+        "scan engine != host eval oracle"
+    for a, b in zip(rep_s.bins, rep_h.bins):
+        assert np.array_equal(a, b), "reliability bins mismatch"
+    np.testing.assert_allclose(
+        [rep_s.accuracy, rep_s.nll, rep_s.brier],
+        [acc_l, nll_l, brier_l], atol=2e-5)
+    # ECE sums bins in a different order than the full-array formula
+    np.testing.assert_allclose(rep_s.ece, ece_l, atol=2e-4)
+
+    def timeit(fn) -> float:
+        fn()                                     # warmup / compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        return (time.perf_counter() - t0) / iters
+
+    legacy_s = timeit(legacy)
+    host_s = timeit(lambda: host.evaluate(stacked, ds, node_axis=1))
+    scan_s = timeit(lambda: scan.evaluate(stacked, ds, node_axis=1))
+    rec = {
+        "hw": f"{hw[0]}x{hw[1]}", "n_eval": n_eval, "bank_s": s, "nodes": k,
+        "batch": batch,
+        "legacy_examples_per_s": n_eval / legacy_s,
+        "host_examples_per_s": n_eval / host_s,
+        "scan_examples_per_s": n_eval / scan_s,
+        "speedup_vs_legacy": legacy_s / scan_s,
+        "speedup_vs_host": host_s / scan_s,
+        "equiv_ece_delta": abs(rep_s.ece - ece_l),
+    }
+    assert rec["scan_examples_per_s"] > rec["legacy_examples_per_s"], (
+        f"fused eval engine slower than the legacy host loop: {rec}")
+    return rec
+
+
+def _row(rec: Dict) -> str:
+    us = 1e6 / rec["scan_examples_per_s"]
+    return (f"eval_engine_{rec['hw']}_n{rec['n_eval']},{us:.1f},"
+            f"scan_ex_per_s={rec['scan_examples_per_s']:.0f};"
+            f"legacy_ex_per_s={rec['legacy_examples_per_s']:.0f};"
+            f"speedup_vs_legacy={rec['speedup_vs_legacy']:.2f};"
+            f"speedup_vs_host={rec['speedup_vs_host']:.2f}")
+
+
+def _save(rec: Dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{rec['hw']}_n{rec['n_eval']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def run(quick: bool = False, tiny: bool = False) -> List[str]:
+    if tiny:
+        plan = [((16, 16), 192, 8, 3)]
+    elif quick:
+        plan = [((16, 16), 256, 12, 5), ((32, 16), 256, 12, 5)]
+    else:
+        plan = [((16, 16), 512, 20, 5), ((32, 16), 512, 20, 5),
+                ((32, 16), 2048, 20, 5)]
+    rows = []
+    for hw, n_eval, s, k in plan:
+        rec = measure(hw, n_eval, s=s, k=k,
+                      iters=3 if (tiny or quick) else 5)
+        _save(rec)
+        rows.append(_row(rec))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: one small config, ~seconds")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(quick=args.quick, tiny=args.tiny):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,47 +1,62 @@
 """Paper Fig. 4: reliability diagrams under distribution shift.
 
-Train on day-1, evaluate on the safety-critical subset (labels 1-6) of
-days 2-3. Claim: CD-BFL and DSGLD stay calibrated (confidence tracks
-accuracy); CF-FL is overconfident (confidence >> accuracy) — the paper's
-central safety argument.
+Train on day-1, evaluate on the safety-critical day-2/3 scenario cells.
+Claim: CD-BFL and DSGLD retain predictive uncertainty (confidence tracks
+accuracy); CF-FL turns overconfident (confidence >> accuracy) — the
+paper's central safety argument.
+
+Since PR 5 this is a thin wrapper over the scenario-matrix runner
+(``repro.eval.matrix``): training + fused-engine evaluation + claim
+checks all live there, and the same cells are hard-gated in CI by
+``benchmarks/check_regression.py --claims``.
 """
 from __future__ import annotations
 
 from typing import List
 
-import jax.numpy as jnp
-import numpy as np
-
-from benchmarks.common import PER_NODE_SHIFT, ROUNDS, radar_world, run_method
+from benchmarks.common import PER_NODE_SHIFT, ROUNDS
 from repro.core import calibration as cal
+from repro.eval.matrix import (CLAIMS_CFFL_GAP_RISE_MIN, CLAIMS_ECE_MARGIN,
+                               MatrixSpec, run_matrix)
+
+SHIFT = ("day23_critical", 1.0)
 
 
 def run(quick: bool = False) -> List[str]:
     rows = []
-    cfg, model, shards, _, test_shift = radar_world(per_node=PER_NODE_SHIFT)
     rounds = 60 if quick else ROUNDS
+    spec = MatrixSpec(
+        algorithms=("dsgld", "cdbfl", "cffl"), pipelines=("",),
+        cells=(("clean", 0.0), SHIFT),
+        rounds=rounds, per_node=PER_NODE_SHIFT,
+    )
+    cells = run_matrix(spec, log=None)
+    shift = {c.algorithm: c for c in cells if c.scenario == SHIFT[0]}
+    clean = {c.algorithm: c for c in cells if c.scenario == "clean"}
 
-    diagrams = {}
-    for algo in ("dsgld", "cdbfl", "cffl"):
-        _, res = run_method(model, shards, algo, local_steps=8,
-                            rounds=rounds, eval_batch=test_shift)
-        bins = cal.reliability_bins(jnp.asarray(res.probs),
-                                    jnp.asarray(res.labels), 10)
-        # mean confidence-accuracy gap over occupied bins (signed:
-        # positive = overconfident)
-        occ = np.asarray(bins.bin_counts) > 0
-        gap = float(np.mean((np.asarray(bins.bin_confidence)
-                             - np.asarray(bins.bin_accuracy))[occ]))
-        diagrams[algo] = (res, gap, bins)
-        rows.append(f"fig4_{algo}_shift,{res.wall_s*1e6/rounds:.0f},"
-                    f"acc={res.accuracy:.4f};ece={res.ece:.4f};"
-                    f"overconf_gap={gap:+.4f}")
+    for algo in spec.algorithms:
+        c = shift[algo]
+        r = c.report
+        rows.append(f"fig4_{algo}_shift,{c.train_wall_s*1e6/rounds:.0f},"
+                    f"acc={r.accuracy:.4f};ece={r.ece:.4f};"
+                    f"overconf_gap={r.overconf_gap:+.4f};"
+                    f"entropy={r.entropy:.4f}")
 
-    # the ordering claim itself, as a derived row
-    ece_ok = diagrams["cdbfl"][0].ece <= diagrams["cffl"][0].ece + 0.02
+    # the ordering claims as derived rows: the raw ECE ordering (fragile
+    # at reduced scale, reported) and the overconfidence-onset claim
+    # (gated in CI — the frequentist model is the one the shift breaks)
+    ece_ok = (shift["cdbfl"].report.ece
+              <= shift["cffl"].report.ece + CLAIMS_ECE_MARGIN)
     rows.append(f"fig4_claim_cdbfl_better_calibrated,0,"
-                f"cdbfl_ece={diagrams['cdbfl'][0].ece:.4f};"
-                f"cffl_ece={diagrams['cffl'][0].ece:.4f};holds={ece_ok}")
-    for algo, (res, gap, bins) in diagrams.items():
-        print(cal.render_reliability(bins, f"{algo} (days 2-3, labels 1-6)"))
+                f"cdbfl_ece={shift['cdbfl'].report.ece:.4f};"
+                f"cffl_ece={shift['cffl'].report.ece:.4f};holds={ece_ok}")
+    gap_rise = (shift["cffl"].report.overconf_gap
+                - clean["cffl"].report.overconf_gap)
+    rows.append(f"fig4_claim_cffl_overconfidence_onset,0,"
+                f"cffl_gap_rise={gap_rise:+.4f};"
+                f"cdbfl_shift_gap={shift['cdbfl'].report.overconf_gap:+.4f};"
+                f"holds={gap_rise >= CLAIMS_CFFL_GAP_RISE_MIN}")
+    for algo in spec.algorithms:
+        print(cal.render_reliability(shift[algo].report.bins,
+                                     f"{algo} (day-2/3, labels 1-6)"))
     return rows

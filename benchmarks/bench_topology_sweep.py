@@ -58,7 +58,7 @@ def _schedule_error(omega: np.ndarray) -> float:
     return float(np.abs(a - b).max())
 
 
-def run(quick: bool = False) -> List[str]:
+def run(quick: bool = False, tiny: bool = False) -> List[str]:
     rows = []
     payload = _payload_bytes()
 
@@ -83,6 +83,11 @@ def run(quick: bool = False) -> List[str]:
             f"wire_bytes={wire:.4g};wire_dense={dense_b:.4g};"
             f"saving_pct={100 * (1 - wire / dense_b):.1f};"
             f"sched_vs_dense_err={err:.2e}")
+
+    if tiny:
+        # CI smoke: the structural sweep alone (spectral gaps, wire
+        # accounting, schedule-vs-dense error) — no training runs
+        return rows
 
     # -- dropout sweep: expected-Ω spectral gap under per-link failures -----
     # E[Ω_t] = (1-p)·Ω + p·I in the Laplacian masking scheme, so the
@@ -123,3 +128,20 @@ def run(quick: bool = False) -> List[str]:
             f"bytes_per_round={res.bytes_sent_per_round:.4g};"
             f"rounds={rounds};link_failure={p_drop}")
     return rows
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: structural sweep only, no training")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(quick=args.quick, tiny=args.tiny):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

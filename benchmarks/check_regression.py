@@ -1,9 +1,9 @@
 """CI benchmark-regression gate: compare smoke results against references.
 
 The smoke benches (``bench_round_engine --tiny``, ``bench_wire --tiny``,
-``bench_shard_engine --tiny``) write JSON records under
-``benchmarks/results/<bench>/``. Two kinds of reference exist, because
-the two kinds of metric have different portability:
+``bench_shard_engine --tiny``, ``bench_eval_engine --tiny``) write JSON
+records under ``benchmarks/results/<bench>/``. Two kinds of reference
+exist, because the two kinds of metric have different portability:
 
 * **Measured bytes** (``*bytes*`` keys) are machine-independent and
   exact: they are hard-gated against the *committed* baselines in
@@ -25,10 +25,20 @@ also fails (the smoke did not run). A markdown report is always written
 (default ``benchmarks/results/regression_report.md``) — CI uploads it as
 a workflow artifact.
 
+``--claims`` is a separate mode gating the *paper's calibration claims*
+the way bytes are gated above: it runs the tiny fixed-seed scenario
+matrix (``repro.eval.matrix.run_claims_smoke`` — cdbfl vs cffl, clean vs
+the day-2/3 safety-critical shift) and hard-fails when a transferable
+claim breaks (shift stops degrading accuracy, the Bayesian model stops
+retaining predictive entropy under shift, the frequentist model stops
+turning overconfident, shifted ECE non-finite or non-reproducible).
+It needs ``PYTHONPATH=src`` and writes ``results/claims_report.md``.
+
     PYTHONPATH=src python benchmarks/check_regression.py
     PYTHONPATH=src python benchmarks/check_regression.py \
         --throughput-ref ../base/benchmarks/results       # PR gate
     PYTHONPATH=src python benchmarks/check_regression.py --update  # rebase
+    PYTHONPATH=src python benchmarks/check_regression.py --claims  # claims
 """
 from __future__ import annotations
 
@@ -49,6 +59,7 @@ BENCHES = {
     "round_engine": "host-loop vs scan-fused engine smoke",
     "wire_tiny": "packed wire-format byte accounting (tiny tree)",
     "shard_engine": "SPMD shard engine smoke (shard_map + ppermute)",
+    "eval_engine": "fused BMA eval engine smoke (vs legacy host loop)",
 }
 
 THROUGHPUT_SUFFIX = "rounds_per_s"
@@ -149,6 +160,54 @@ def compare(bench: str, tol: float, throughput_ref: str = None
     return rows, failures, warnings
 
 
+def run_claims(out_path: str) -> None:
+    """The calibration-claims gate (CI job ``claims``): run the tiny
+    fixed-seed scenario matrix and hard-fail on any broken claim."""
+    import importlib.util
+    if importlib.util.find_spec("repro") is None:   # pragma: no cover
+        print("claims gate needs PYTHONPATH=src (repro not importable)",
+              file=sys.stderr)
+        sys.exit(2)
+    from repro.eval.matrix import matrix_markdown, run_claims_smoke
+
+    out = run_claims_smoke()
+    report = [
+        "# Calibration claims report",
+        "",
+        "Gate: the paper's transferable shift-calibration claims on the "
+        "fixed-seed tiny scenario matrix (`repro.eval.matrix.CLAIMS_SPEC`). "
+        "Hard failures: non-finite or non-reproducible shifted ECE, shift "
+        "no longer degrading accuracy, the Bayesian model losing its "
+        "predictive-entropy margin under shift, the frequentist model "
+        "losing its overconfidence onset. The raw reduced-scale ECE "
+        "ordering is reported as a warning (DESIGN.md §10).",
+        "",
+        matrix_markdown(out["cells"]),
+        "",
+        "## Claim values",
+        "",
+    ]
+    report += [f"* {k}: {v}" for k, v in out["claims"].items()]
+    if out["failures"]:
+        report += ["", "## Failures", ""] + \
+            [f"* {f}" for f in out["failures"]]
+    if out["warnings"]:
+        report += ["", "## Warnings (non-fatal)", ""] + \
+            [f"* {w}" for w in out["warnings"]]
+    if not out["failures"]:
+        report += ["", "All gated claims hold."]
+    text = "\n".join(report) + "\n"
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write(text)
+    print(text)
+    if out["failures"]:
+        print(f"CLAIMS GATE FAILED ({len(out['failures'])} issue(s)); "
+              f"report: {out_path}", file=sys.stderr)
+        sys.exit(1)
+    print(f"claims gate passed; report: {out_path}")
+
+
 def update_baselines(benches) -> None:
     for bench in benches:
         src = os.path.join(RESULTS, bench)
@@ -177,8 +236,17 @@ def main() -> None:
                                                   "regression_report.md"))
     ap.add_argument("--update", action="store_true",
                     help="promote current results to baselines and exit")
+    ap.add_argument("--claims", action="store_true",
+                    help="run the tiny fixed-seed scenario matrix and "
+                         "gate the paper's calibration claims")
+    ap.add_argument("--claims-out",
+                    default=os.path.join(RESULTS, "claims_report.md"))
     args = ap.parse_args()
     benches = [b.strip() for b in args.bench.split(",") if b.strip()]
+
+    if args.claims:
+        run_claims(args.claims_out)
+        return
 
     if args.update:
         update_baselines(benches)

@@ -17,7 +17,8 @@ import numpy as np
 
 from repro.config import FedConfig, get_arch
 from repro.data.partition import partition_iid
-from repro.data.radar import critical_subset, make_dataset
+from repro.data.radar import make_dataset
+from repro.data.scenarios import make_scenario_dataset
 from repro.models import get_model
 from repro.train import FedTrainer
 
@@ -38,21 +39,25 @@ TEMPERATURE = 0.2     # cold posterior: compensates the reduced model/data
                       # scale (paper uses T=1 at 2.7M params / eta=1e-4)
 
 
+def shift_eval_set(hw, seed: int = 0, examples_per_day: int = 120):
+    """Days-2/3 safety-critical eval set from the scenario registry.
+
+    Replaces the per-benchmark ``critical_subset(make_dataset(day=d))``
+    copy-paste: ``day23_critical`` at severities 0 and 1 are the day-2 and
+    day-3 ends of the legacy shift, already restricted to labels 1..6.
+    """
+    days = [make_scenario_dataset("day23_critical", s, examples_per_day,
+                                  hw=hw, seed=seed + 90)
+            for s in (0.0, 1.0)]
+    return {f: np.concatenate([d[f] for d in days]) for f in ("x", "y")}
+
+
 def radar_world(seed: int = 0, per_node: int = PER_NODE):
     cfg = get_arch("lenet-radar").reduced
     model = get_model(cfg)
     train = make_dataset(K * per_node, hw=cfg.input_hw, day=1, seed=seed)
     test_d1 = make_dataset(200, hw=cfg.input_hw, day=1, seed=seed + 90)
-    test_shift = {
-        "x": np.concatenate([
-            critical_subset(make_dataset(200, hw=cfg.input_hw, day=d,
-                                         seed=seed + 90 + d))["x"]
-            for d in (2, 3)]),
-        "y": np.concatenate([
-            critical_subset(make_dataset(200, hw=cfg.input_hw, day=d,
-                                         seed=seed + 90 + d))["y"]
-            for d in (2, 3)]),
-    }
+    test_shift = shift_eval_set(cfg.input_hw, seed=seed)
     shards = partition_iid(train, K, seed=seed)
     return cfg, model, shards, test_d1, test_shift
 

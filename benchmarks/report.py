@@ -111,6 +111,29 @@ def shard_engine_table(results_dir: str = None) -> str:
     return "\n".join(lines)
 
 
+def eval_engine_table(results_dir: str = None) -> str:
+    """§Eval engine: fused BMA evaluation vs the legacy host loop."""
+    results_dir = results_dir or os.path.join(
+        os.path.dirname(__file__), "results", "eval_engine")
+    lines = [
+        "| config | N | bank S | legacy ex/s | host ex/s | scan ex/s | "
+        "scan/legacy |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for fn in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        rec = json.load(open(fn))
+        lines.append(
+            f"| lenet {rec['hw']} | {rec['n_eval']} | {rec['bank_s']} "
+            f"| {rec['legacy_examples_per_s']:.0f} "
+            f"| {rec['host_examples_per_s']:.0f} "
+            f"| {rec['scan_examples_per_s']:.0f} "
+            f"| {rec['speedup_vs_legacy']:.2f}× |")
+    if len(lines) == 2:
+        lines.append("| _no records — run bench_eval_engine first_ "
+                     "| | | | | | |")
+    return "\n".join(lines)
+
+
 def wire_table(results_dir: str = None) -> str:
     """§Wire accounting: measured packed-payload bytes vs the formula."""
     results_dir = results_dir or os.path.join(
@@ -142,6 +165,8 @@ def main():
     print(engine_table())
     print("\n### §Shard engine — SPMD node sharding (shard_map+ppermute)\n")
     print(shard_engine_table())
+    print("\n### §Eval engine — fused BMA evaluation vs legacy host loop\n")
+    print(eval_engine_table())
     print("\n### §Wire accounting — measured payload vs formula\n")
     print(wire_table())
     print("\n### §Roofline — single-pod 16×16\n")

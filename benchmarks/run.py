@@ -21,10 +21,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_ablation, bench_comm_overhead,
-                            bench_fig3_l_sweep, bench_fig4_reliability,
-                            bench_kernels, bench_round_engine,
-                            bench_shard_engine, bench_topology_sweep,
-                            bench_wire, roofline)
+                            bench_eval_engine, bench_fig3_l_sweep,
+                            bench_fig4_reliability, bench_kernels,
+                            bench_round_engine, bench_shard_engine,
+                            bench_topology_sweep, bench_wire, roofline)
     suites = {
         "fig3_l_sweep": bench_fig3_l_sweep.run,
         "fig4_reliability": bench_fig4_reliability.run,
@@ -32,6 +32,7 @@ def main() -> None:
         "topology_sweep": bench_topology_sweep.run,
         "round_engine": bench_round_engine.run,
         "shard_engine": bench_shard_engine.run,
+        "eval_engine": bench_eval_engine.run,
         "wire": bench_wire.run,
         "kernels": bench_kernels.run,
         "roofline": roofline.run,

@@ -1,1 +1,2 @@
-from repro.checkpoint.checkpoint import save_checkpoint, load_checkpoint, latest_step  # noqa: F401
+from repro.checkpoint.checkpoint import (save_checkpoint, load_checkpoint,  # noqa: F401
+                                         load_checkpoint_tree, latest_step)

@@ -79,6 +79,35 @@ def load_checkpoint(ckpt_dir: str, step: Optional[int] = None,
     return jax.tree.unflatten(treedef, leaves)
 
 
+def load_checkpoint_tree(ckpt_dir: str, step: Optional[int] = None) -> Any:
+    """Restore as a nested dict rebuilt from the manifest key paths.
+
+    No ``like=`` pytree needed — the manifest's ``path`` entries ("a/b/w")
+    carry the structure. Dict-keyed trees round-trip exactly (every params
+    container in the zoo); trees with list/tuple nodes come back as dicts
+    keyed by index string.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    base = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
+    data = np.load(base + ".npz")
+    with open(base + ".json") as f:
+        manifest = json.load(f)
+    tree: Dict = {}
+    for e in manifest["leaves"]:
+        arr = data[e["name"]]
+        if e["dtype"] == "bfloat16":
+            arr = arr.view(jax.numpy.bfloat16)
+        parts = e["path"].split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return tree
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
     if not os.path.isdir(ckpt_dir):
         return None

@@ -1,1 +1,1 @@
-from repro.data import radar, partition, synthetic_lm  # noqa: F401
+from repro.data import radar, partition, scenarios, synthetic_lm  # noqa: F401

@@ -1,0 +1,11 @@
+"""Device-resident evaluation: fused BMA metrics + scenario matrix."""
+from repro.eval.engine import (EvalAccum, EvalReport, HostEvalEngine,
+                               ScanEvalEngine, ShardEvalEngine, as_stacked,
+                               finalize, init_accum, make_eval_engine,
+                               stack_eval_batches, update_accum)
+
+__all__ = [
+    "EvalAccum", "EvalReport", "HostEvalEngine", "ScanEvalEngine",
+    "ShardEvalEngine", "as_stacked", "finalize", "init_accum",
+    "make_eval_engine", "stack_eval_batches", "update_accum",
+]

@@ -1,0 +1,329 @@
+"""Scenario × algorithm × pipeline calibration matrix (DESIGN.md §10).
+
+Evaluates trained models (fresh training runs or checkpointed params)
+across the shift-family registry (``repro.data.scenarios``) through the
+fused eval engine, producing one calibration row per
+(scenario, severity, algorithm, pipeline) cell: accuracy, ECE, NLL,
+Brier, predictive entropy and the signed overconfidence gap.
+
+Reduced-scale training defaults follow DESIGN.md §7 (same values as
+``benchmarks/common.py``); the paper-scale knobs are in the comments
+there. The CI claims gate (``benchmarks/check_regression.py --claims``)
+runs :func:`run_claims_smoke` — a tiny fixed-seed slice of this matrix —
+and hard-fails when the paper's ordering claims break.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.config import FedConfig, get_arch
+from repro.data.partition import partition_iid
+from repro.data.radar import make_dataset
+from repro.data.scenarios import make_scenario_dataset
+from repro.eval.engine import EvalReport, ScanEvalEngine, as_stacked
+from repro.models import get_model
+
+
+@dataclass(frozen=True)
+class MatrixCell:
+    scenario: str
+    severity: float
+    algorithm: str
+    pipeline: str          # codec DSL ("" = the legacy compressor enum)
+    report: EvalReport
+    train_wall_s: float = 0.0
+    eval_wall_s: float = 0.0
+
+    def row(self) -> Dict[str, float]:
+        r = self.report
+        return {
+            "scenario": self.scenario, "severity": self.severity,
+            "algorithm": self.algorithm, "pipeline": self.pipeline or "-",
+            "accuracy": r.accuracy, "ece": r.ece, "nll": r.nll,
+            "brier": r.brier, "overconf_gap": r.overconf_gap,
+            "count": r.count,
+        }
+
+
+@dataclass(frozen=True)
+class MatrixSpec:
+    """One matrix run: what to train, what to evaluate it on."""
+    algorithms: Sequence[str] = ("cdbfl", "cffl")
+    pipelines: Sequence[str] = ("",)
+    # (scenario, severity) cells; every trained model sees every cell
+    cells: Sequence[Tuple[str, float]] = (("clean", 0.0),
+                                          ("day23_critical", 0.5))
+    # reduced-scale training world (DESIGN.md §7; paper: K=10, T=800)
+    nodes: int = 5
+    per_node: int = 24
+    rounds: int = 150
+    burn_in_frac: float = 2.0 / 3.0
+    local_steps: int = 8
+    minibatch: int = 10
+    eta: float = 3e-3
+    zeta: float = 0.3
+    temperature: float = 0.2
+    # the paper's operator: plain top-k at 1% (run_method's default in
+    # benchmarks/common.py — fig4 rows stay comparable across PRs)
+    compressor: str = "topk"
+    compress_ratio: float = 0.01
+    topology: str = "full"
+    eval_examples: int = 200
+    eval_batch_size: int = 64
+    seed: int = 0
+    arch: str = "lenet-radar"
+
+
+def _train_one(spec: MatrixSpec, algorithm: str, pipeline: str):
+    from repro.train import FedTrainer   # deferred: trainer imports eval
+    cfg = get_arch(spec.arch).reduced
+    model = get_model(cfg)
+    train = make_dataset(spec.nodes * spec.per_node, hw=cfg.input_hw,
+                         day=1, seed=spec.seed)
+    shards = partition_iid(train, spec.nodes, seed=spec.seed)
+    fed = FedConfig(
+        num_nodes=spec.nodes, local_steps=spec.local_steps, eta=spec.eta,
+        zeta=spec.zeta, rounds=spec.rounds,
+        burn_in=int(spec.rounds * spec.burn_in_frac),
+        compressor=spec.compressor, pipeline=pipeline,
+        compress_ratio=spec.compress_ratio, topology=spec.topology,
+        temperature=spec.temperature, algorithm=algorithm, seed=spec.seed,
+    )
+    tr = FedTrainer(model, fed, shards, minibatch=spec.minibatch,
+                    seed=spec.seed, eval_batch_size=spec.eval_batch_size)
+    t0 = time.time()
+    tr.run(rounds=spec.rounds)
+    return cfg, tr, time.time() - t0
+
+
+def _cell_dataset(spec: MatrixSpec, cfg, scenario: str, severity: float
+                  ) -> Dict[str, np.ndarray]:
+    return make_scenario_dataset(scenario, severity, spec.eval_examples,
+                                 hw=cfg.input_hw, seed=spec.seed + 90)
+
+
+def run_matrix(spec: MatrixSpec, log=print,
+               trainers: Optional[Dict] = None) -> List[MatrixCell]:
+    """Train every (algorithm, pipeline), evaluate every scenario cell.
+
+    Pass a dict as ``trainers`` to receive the trained ``FedTrainer``
+    per (algorithm, pipeline) — the claims gate re-scores cells on them.
+    """
+    cells: List[MatrixCell] = []
+    for algorithm in spec.algorithms:
+        for pipeline in spec.pipelines:
+            cfg, tr, train_s = _train_one(spec, algorithm, pipeline)
+            if trainers is not None:
+                trainers[(algorithm, pipeline)] = tr
+            for scenario, severity in spec.cells:
+                ds = _cell_dataset(spec, cfg, scenario, severity)
+                t0 = time.time()
+                rep = tr.eval_report(ds)
+                cells.append(MatrixCell(
+                    scenario=scenario, severity=float(severity),
+                    algorithm=algorithm, pipeline=pipeline, report=rep,
+                    train_wall_s=train_s, eval_wall_s=time.time() - t0))
+                if log:
+                    log(f"  [{algorithm}|{pipeline or '-'}] "
+                        f"{scenario}@{severity:g}: acc={rep.accuracy:.4f} "
+                        f"ece={rep.ece:.4f} nll={rep.nll:.4f} "
+                        f"gap={rep.overconf_gap:+.4f}")
+    return cells
+
+
+def evaluate_params_matrix(params, arch: str,
+                           cells: Sequence[Tuple[str, float]],
+                           eval_examples: int = 200, seed: int = 0,
+                           batch_size: int = 64, node_axis: Optional[int] = 0,
+                           log=print) -> List[MatrixCell]:
+    """Point-estimate matrix for checkpointed params (no training run).
+
+    ``node_axis=0`` treats a leading params axis as node chains (the
+    FedState layout); ``None`` scores a single replica.
+    """
+    cfg = get_arch(arch).reduced if _looks_reduced(params, arch) else \
+        get_arch(arch).config
+    model = get_model(cfg)
+    stacked = as_stacked(params)
+    engine = ScanEvalEngine(lambda p, b: model.logits(p, b),
+                            batch_size=batch_size)
+    out: List[MatrixCell] = []
+    for scenario, severity in cells:
+        ds = make_scenario_dataset(scenario, severity, eval_examples,
+                                   hw=cfg.input_hw, seed=seed + 90)
+        t0 = time.time()
+        rep = engine.evaluate(stacked, ds,
+                              node_axis=(node_axis + 1
+                                         if node_axis is not None else None))
+        out.append(MatrixCell(scenario=scenario, severity=float(severity),
+                              algorithm="checkpoint", pipeline="",
+                              report=rep, eval_wall_s=time.time() - t0))
+        if log:
+            log(f"  [checkpoint] {scenario}@{severity:g}: "
+                f"acc={rep.accuracy:.4f} ece={rep.ece:.4f}")
+    return out
+
+
+def _looks_reduced(params, arch: str) -> bool:
+    """Heuristic: match checkpoint params against the reduced config's
+    input resolution (fc1 input width differs between the two)."""
+    import jax
+    try:
+        reduced = get_arch(arch).reduced
+        model = get_model(reduced)
+        like = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        flat_p = {tuple(np.shape(x)) for x in jax.tree.leaves(params)
+                  if np.ndim(x) >= 2}
+        flat_r = {tuple(x.shape) for x in jax.tree.leaves(like)
+                  if len(x.shape) >= 2}
+        # node-stacked checkpoints carry one leading axis
+        stripped = {s[1:] for s in flat_p}
+        return bool(flat_r & (flat_p | stripped))
+    except Exception:
+        return True
+
+
+def matrix_markdown(cells: Sequence[MatrixCell]) -> str:
+    lines = [
+        "| scenario | severity | algorithm | pipeline | acc | ece | nll "
+        "| brier | overconf_gap | n |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        r = c.report
+        lines.append(
+            f"| {c.scenario} | {c.severity:g} | {c.algorithm} "
+            f"| {c.pipeline or '-'} | {r.accuracy:.4f} | {r.ece:.4f} "
+            f"| {r.nll:.4f} | {r.brier:.4f} | {r.overconf_gap:+.4f} "
+            f"| {int(r.count)} |")
+    return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# CI claims gate (benchmarks/check_regression.py --claims)
+# --------------------------------------------------------------------------
+
+#: the tiny fixed-seed slice the claims job runs — small enough for a PR
+#: job, big enough that the gated claims hold with wide margins
+CLAIMS_SPEC = MatrixSpec(
+    algorithms=("cdbfl", "cffl"),
+    pipelines=("",),
+    cells=(("clean", 0.0), ("day23_critical", 1.0)),
+    rounds=60, per_node=24, eval_examples=200, seed=0,
+)
+
+#: slack on the ECE ordering claim, mirroring bench_fig4's claim row.
+#: NOTE (DESIGN.md §10): at DESIGN §7 reduced scale the cold-posterior
+#: BMA is *under*confident, so the paper's raw "cdbfl ECE ≤ cffl ECE
+#: under shift" ordering does not transfer — it is reported as a
+#: warning. The hard gates below pin the claims that do transfer: the
+#: shift genuinely degrades accuracy, the Bayesian model retains far
+#: more predictive uncertainty under shift, and the frequentist model —
+#: not the Bayesian one — is the one that turns overconfident.
+CLAIMS_ECE_MARGIN = 0.02
+CLAIMS_ACC_DROP_MIN = 0.15       # observed ≈ 0.53 at the claims seed
+CLAIMS_ENTROPY_MARGIN = 0.15     # observed ≈ 0.53
+CLAIMS_CFFL_GAP_RISE_MIN = 0.10  # observed ≈ 0.24
+
+
+def run_claims_smoke(spec: MatrixSpec = CLAIMS_SPEC, log=print
+                     ) -> Dict[str, object]:
+    """Run the claims slice; hard-fail when the paper's transferable
+    claims break, warn on the reduced-scale-fragile ECE ordering.
+
+    Also re-scores the cdbfl shifted cell from scratch (fresh scenario
+    synthesis + freshly-jitted engine) to prove the shifted calibration
+    numbers are reproducible, not run-to-run noise.
+    """
+    trainers: Dict = {}
+    cells = run_matrix(spec, log=log, trainers=trainers)
+    by = {(c.algorithm, c.scenario): c for c in cells}
+    shift_name, shift_sev = next((s, v) for s, v in spec.cells
+                                 if s != "clean")
+
+    failures: List[str] = []
+    warnings: List[str] = []
+    for c in cells:
+        if not np.isfinite(c.report.ece):
+            failures.append(f"{c.algorithm}/{c.scenario}: ECE is not finite "
+                            f"({c.report.ece})")
+    cd = by[("cdbfl", shift_name)].report
+    cf = by[("cffl", shift_name)].report
+    cd0 = by[("cdbfl", "clean")].report
+    cf0 = by[("cffl", "clean")].report
+
+    # reproducibility: a fresh dataset synthesis (pure in seed/severity)
+    # scored through a freshly-jitted engine must reproduce the shifted
+    # ECE bitwise — the whole cell is a function of the spec, nothing else
+    cfg = get_arch(spec.arch).reduced
+    ds_a = _cell_dataset(spec, cfg, shift_name, shift_sev)
+    ds_b = _cell_dataset(spec, cfg, shift_name, shift_sev)
+    if not (np.array_equal(ds_a["x"], ds_b["x"])
+            and np.array_equal(ds_a["y"], ds_b["y"])):
+        failures.append(f"scenario {shift_name}@{shift_sev} is not "
+                        f"reproducible: two syntheses differ")
+    tr = trainers[("cdbfl", spec.pipelines[0])]
+    model = tr.model
+    fresh = ScanEvalEngine(lambda p, b: model.logits(p, b),
+                           batch_size=spec.eval_batch_size)
+    rep2 = fresh.evaluate(tr._stacked_bank(), ds_b, node_axis=1)
+    if rep2.ece != cd.ece:
+        failures.append(
+            f"shifted ECE not reproducible: fresh-engine re-score "
+            f"{rep2.ece!r} != first score {cd.ece!r}")
+
+    # the shift must genuinely bite (precondition of the whole argument)
+    for name, clean, shifted in (("cdbfl", cd0, cd), ("cffl", cf0, cf)):
+        drop = clean.accuracy - shifted.accuracy
+        if drop < CLAIMS_ACC_DROP_MIN:
+            failures.append(
+                f"{name}: {shift_name} no longer degrades accuracy "
+                f"(drop {drop:.3f} < {CLAIMS_ACC_DROP_MIN}) — the shift "
+                f"scenario lost its teeth")
+    # uncertainty retention: the Bayesian model keeps far more predictive
+    # entropy under shift than the frequentist point model (paper §V-B:
+    # the mechanism by which CD-BFL avoids overconfident failures)
+    if cd.entropy < cf.entropy + CLAIMS_ENTROPY_MARGIN:
+        failures.append(
+            f"uncertainty-retention claim broke under {shift_name}: cdbfl "
+            f"entropy {cd.entropy:.4f} < cffl entropy {cf.entropy:.4f} + "
+            f"{CLAIMS_ENTROPY_MARGIN}")
+    # overconfidence onset: the shift turns the *frequentist* model
+    # overconfident (confidence-accuracy gap rises by a clear margin)
+    gap_rise = cf.overconf_gap - cf0.overconf_gap
+    if gap_rise < CLAIMS_CFFL_GAP_RISE_MIN:
+        failures.append(
+            f"overconfidence-onset claim broke: cffl gap rose only "
+            f"{gap_rise:+.4f} under {shift_name} "
+            f"(< {CLAIMS_CFFL_GAP_RISE_MIN}) — Fig. 4's frequentist "
+            f"overconfidence signal vanished")
+    # raw ECE ordering: warning-only at reduced scale (see note above)
+    if not (cd.ece <= cf.ece + CLAIMS_ECE_MARGIN):
+        warnings.append(
+            f"reduced-scale ECE ordering under {shift_name}: cdbfl ECE "
+            f"{cd.ece:.4f} > cffl ECE {cf.ece:.4f} + {CLAIMS_ECE_MARGIN} "
+            f"(known DESIGN.md §7/§10 deviation: the cold-posterior BMA "
+            f"is underconfident at smoke scale; gated via the entropy and "
+            f"overconfidence-onset claims instead)")
+    return {
+        "cells": cells,
+        "failures": failures,
+        "warnings": warnings,
+        "claims": {
+            "shift_scenario": shift_name,
+            "shift_severity": shift_sev,
+            "cdbfl_shift_ece": cd.ece,
+            "cffl_shift_ece": cf.ece,
+            "cdbfl_shift_entropy": cd.entropy,
+            "cffl_shift_entropy": cf.entropy,
+            "cdbfl_shift_gap": cd.overconf_gap,
+            "cffl_shift_gap": cf.overconf_gap,
+            "cffl_gap_rise": gap_rise,
+            "cdbfl_acc_drop": cd0.accuracy - cd.accuracy,
+            "cffl_acc_drop": cf0.accuracy - cf.accuracy,
+        },
+    }

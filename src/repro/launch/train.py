@@ -85,6 +85,14 @@ def _parse_args():
     ap.add_argument("--pool", type=int, default=64,
                     help="per-node synthetic sequence pool size (rounds "
                          "sample minibatches from it on device)")
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help=">0: score the consensus model every N rounds "
+                         "through the fused eval engine (DESIGN.md §10)")
+    ap.add_argument("--eval-scenario", default="clean",
+                    help="shift family for the in-training eval set "
+                         "(lenet pools; see repro.data.scenarios)")
+    ap.add_argument("--eval-severity", type=float, default=1.0)
+    ap.add_argument("--eval-examples", type=int, default=128)
     return ap.parse_args()
 
 
@@ -211,13 +219,53 @@ def main():
         print(f"mesh={args.mesh}x{args.fed_axis!r} "
               f"({fed.num_nodes // args.mesh} nodes/shard) substrate={sub}")
 
+    # periodic in-training evaluation through the fused eval engine: the
+    # consensus (node-averaged point) model is scored on a held-out set
+    # every --eval-every rounds, same compiled path as launch.evaluate
+    eval_engine = eval_ds = None
+    if args.eval_every > 0:
+        from repro.eval.engine import (ScanEvalEngine, ShardEvalEngine,
+                                       as_stacked, lm_apply_fn)
+        if cfg.family == "lenet":
+            from repro.data.scenarios import make_scenario_dataset
+            eval_ds = make_scenario_dataset(
+                args.eval_scenario, args.eval_severity, args.eval_examples,
+                hw=cfg.input_hw, seed=fed.seed + 90)
+            apply_fn = lambda p, b: model.logits(p, b)
+        else:
+            held = markov_tokens(args.eval_examples, args.seq,
+                                 cfg.vocab_size, seed=fed.seed,
+                                 node=fed.num_nodes)   # unseen node stream
+            eval_ds = {"tokens": held, "y": np.asarray(held)[:, 1:]}
+            apply_fn = lm_apply_fn(model)
+        if args.engine == "shard":
+            eval_engine = ShardEvalEngine(apply_fn, mesh, args.fed_axis)
+        else:
+            eval_engine = ScanEvalEngine(apply_fn)
+
     t0 = time.time()
     log_cb = lambda t, loss, cons: print(
         f"round {t:4d} loss={loss:.4f} consensus={cons:.3e} "
         f"({(time.time()-t0)/max(t, 1):.2f}s/round)")
-    state, key, _, losses, _ = engine.run(
-        state, jax.random.fold_in(key, 1), None, args.rounds,
-        log_every=args.log_every, log_cb=log_cb)
+    key = jax.random.fold_in(key, 1)
+    segment = args.eval_every if args.eval_every > 0 else args.rounds
+    done = 0
+    while done < args.rounds:
+        n = min(segment, args.rounds - done)
+        state, key, _, losses, _ = engine.run(
+            state, key, None, n, t0=done,
+            log_every=args.log_every, log_cb=log_cb)
+        done += n
+        if eval_engine is not None:
+            stacked = as_stacked(state.params)
+            if args.engine == "shard":
+                rep = eval_engine.evaluate(stacked, eval_ds)
+            else:
+                rep = eval_engine.evaluate(stacked, eval_ds, node_axis=1)
+            print(f"eval  round {done:4d} [{args.eval_scenario}"
+                  f"@{args.eval_severity:g}] acc={rep.accuracy:.4f} "
+                  f"ece={rep.ece:.4f} nll={rep.nll:.4f} "
+                  f"gap={rep.overconf_gap:+.4f}")
     cross = getattr(engine, "last_cross_history", [])
     if cross and cross[-1] > 0:
         # only the explicit-collective path accounts its ppermute traffic;

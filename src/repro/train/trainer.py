@@ -13,6 +13,12 @@ Execution is delegated to a round engine (DESIGN.md §8): the default
 super-round with on-device minibatch sampling and an on-device posterior
 ring buffer; ``engine="host"`` keeps the original per-round dispatch loop
 as the reference oracle. Both consume identical PRNG streams.
+
+Evaluation routes through the fused eval engines (DESIGN.md §10): one
+scanned dispatch computes BMA accuracy/ECE/NLL/Brier/entropy over the
+whole eval set (``eval_report``/``evaluate``), the SPMD psum path is
+auto-selected on the shard engine, and ``run(eval_every=N)`` takes
+in-training snapshots through the same compiled path.
 """
 from __future__ import annotations
 
@@ -24,11 +30,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (FedState, SampleBank, bma_predict, build_topology,
-                        calibration, init_fed_state, make_compressor,
-                        make_round_fn, point_predict, resolve_topology)
-from repro.core.posterior import (DeviceSampleBank, bma_predict_stacked)
+from repro.core import (FedState, SampleBank, build_topology,
+                        init_fed_state, make_compressor,
+                        make_round_fn, resolve_topology)
+from repro.core.posterior import DeviceSampleBank
 from repro.data.partition import DeviceShards
+from repro.eval.engine import (EvalReport, ScanEvalEngine, ShardEvalEngine,
+                               as_stacked, lm_apply_fn)
 from repro.train.engine import make_engine
 
 
@@ -40,6 +48,14 @@ class TrainResult:
     brier: float
     bytes_sent_per_round: float
     total_bytes: float
+    # mean signed confidence-accuracy gap over occupied reliability bins
+    # (positive = overconfident, the Fig. 4 safety signal)
+    overconf_gap: float = float("nan")
+    # periodic in-training evaluation snapshots (run(eval_every=N)):
+    # [{"round", "accuracy", "ece", "nll", "brier", "overconf_gap"}, ...]
+    eval_history: List[Dict[str, float]] = field(default_factory=list)
+    # full finalized report of the last evaluation (bins included)
+    report: Optional[EvalReport] = None
     # measured from the packed WirePayload buffers (DESIGN.md §2); equals
     # the formula estimate up to index-width rounding for sparse codecs
     measured_bytes_per_round: float = 0.0
@@ -76,7 +92,8 @@ class FedTrainer:
                  minibatch: int = 10, data_scale: Optional[float] = None,
                  seed: int = 0, engine: str = "scan",
                  chunk: Optional[int] = None, bank_capacity: int = 40,
-                 bank_thin: int = 2, mesh=None, fed_axis: str = "fed"):
+                 bank_thin: int = 2, mesh=None, fed_axis: str = "fed",
+                 eval_batch_size: int = 64):
         assert len(shards) == fed_cfg.num_nodes, "one shard per node"
         self.model = model
         self.fed_cfg = fed_cfg
@@ -127,6 +144,10 @@ class FedTrainer:
             minibatch, bank=self.bank_cfg if bank_enabled else None,
             chunk=chunk or 64, mesh=mesh, fed_axis=fed_axis,
         )
+        self._mesh = getattr(self._engine, "mesh", mesh)
+        self._fed_axis = fed_axis
+        self.eval_batch_size = int(eval_batch_size)
+        self._eval_engines: Dict[str, Any] = {}
         if engine == "host":
             self._bank_state: Any = self._engine.make_bank()
         else:
@@ -153,7 +174,11 @@ class FedTrainer:
 
     # ------------------------------------------------------------------
     def run(self, rounds: Optional[int] = None, log_every: int = 0,
-            eval_batch: Optional[Dict[str, np.ndarray]] = None) -> TrainResult:
+            eval_batch: Optional[Dict[str, np.ndarray]] = None,
+            eval_every: int = 0) -> TrainResult:
+        """Train ``rounds`` rounds; with ``eval_every=N`` (and an
+        ``eval_batch``) the fused eval engine scores the current posterior
+        every N rounds and the snapshots land in ``result.eval_history``."""
         fed = self.fed_cfg
         rounds = rounds if rounds is not None else fed.rounds
         t0 = time.time()
@@ -161,18 +186,40 @@ class FedTrainer:
         if log_every:
             log_cb = lambda t, l, c: print(
                 f"  round {t:4d}  loss={l:.4f} consensus={c:.3e}")
-        t_start = int(self.state.round)
-        (self.state, self.key, self._bank_state, losses, cons
-         ) = self._engine.run(self.state, self.key, self._bank_state, rounds,
-                              t0=t_start, log_every=log_every, log_cb=log_cb)
+        segment = (eval_every if eval_every and eval_batch is not None
+                   else rounds)
+        losses: List[float] = []
+        cons: List[float] = []
+        wire_hist: List[float] = []
+        cross_hist: List[float] = []
+        eval_history: List[Dict[str, float]] = []
+        done = 0
+        while done < rounds:
+            n = min(segment, rounds - done)
+            t_start = int(self.state.round)
+            (self.state, self.key, self._bank_state, seg_losses, seg_cons
+             ) = self._engine.run(self.state, self.key, self._bank_state, n,
+                                  t0=t_start, log_every=log_every,
+                                  log_cb=log_cb)
+            losses.extend(seg_losses)
+            cons.extend(seg_cons)
+            wire_hist.extend(getattr(self._engine, "last_wire_history", []))
+            cross_hist.extend(getattr(self._engine, "last_cross_history", []))
+            done += n
+            if segment < rounds and done < rounds:
+                # in-training snapshot through the same fused eval path
+                rep = self.eval_report(eval_batch)
+                eval_history.append({
+                    "round": float(t_start + n), "accuracy": rep.accuracy,
+                    "ece": rep.ece, "nll": rep.nll, "brier": rep.brier,
+                    "overconf_gap": rep.overconf_gap,
+                })
         wall = time.time() - t0
 
         # per-round measured bytes from the round functions (wire payload
         # per node; scale by the directed edge count like bytes_per_round)
-        wire_hist = list(getattr(self._engine, "last_wire_history", []))
         measured = (float(np.mean(wire_hist)) * self._n_edges if wire_hist
                     else self.bytes_per_round)
-        cross_hist = list(getattr(self._engine, "last_cross_history", []))
         res = TrainResult(
             accuracy=float("nan"), ece=float("nan"), nll=float("nan"),
             brier=float("nan"),
@@ -184,35 +231,83 @@ class FedTrainer:
             wire_history=wire_hist,
             cross_history=cross_hist,
             loss_history=losses, consensus_history=cons, wall_s=wall,
+            eval_history=eval_history,
         )
         if eval_batch is not None:
             res = self.evaluate(eval_batch, res)
+            res.eval_history = eval_history + [{
+                "round": float(self.state.round), "accuracy": res.accuracy,
+                "ece": res.ece, "nll": res.nll, "brier": res.brier,
+                "overconf_gap": res.overconf_gap,
+            }]
         return res
 
     # ------------------------------------------------------------------
+    def _apply_fn(self, batch: Dict[str, np.ndarray]):
+        """Per-sample logits fn + labels for classifier or LM batches."""
+        if "y" in batch:
+            return (lambda p, b: self.model.logits(p, b)), batch["y"]
+        return lm_apply_fn(self.model), np.asarray(batch["tokens"])[:, 1:]
+
+    def _stacked_bank(self):
+        """(S, K, ...) stacked posterior samples, whichever bank holds them.
+
+        Returns ``None`` when the algorithm keeps no posterior (cffl) or
+        the bank is still empty (pre burn-in) — point-estimate fallback.
+        """
+        if self.fed_cfg.algorithm not in ("cdbfl", "dsgld"):
+            return None
+        if isinstance(self._bank_state, SampleBank):
+            samples = self._bank_state.samples
+            if not samples:
+                return None
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *samples)
+        if self._bank_state is None or not self.bank_cfg.length(
+                self._bank_state):
+            return None
+        return self.bank_cfg.stacked(self._bank_state)
+
+    def _eval_engine(self, apply_fn, kind: str):
+        eng = self._eval_engines.get(kind)
+        if eng is None:
+            if kind == "shard":
+                eng = ShardEvalEngine(apply_fn, self._mesh, self._fed_axis,
+                                      batch_size=self.eval_batch_size)
+            else:
+                eng = ScanEvalEngine(apply_fn,
+                                     batch_size=self.eval_batch_size)
+            self._eval_engines[kind] = eng
+        return eng
+
+    def eval_report(self, batch: Dict[str, np.ndarray],
+                    return_probs: bool = False):
+        """Evaluate the current model through the fused eval engine
+        (DESIGN.md §10): BMA over the posterior bank for the Bayesian
+        algorithms, point softmax for cffl; node chains always average.
+        Runs the SPMD psum path when training on the shard engine."""
+        apply, labels = self._apply_fn(batch)
+        data = dict(batch)
+        data["y"] = np.asarray(labels)
+        stacked = self._stacked_bank()
+        if stacked is None:
+            stacked = as_stacked(self.state.params)    # (1, K, ...)
+        if self.engine == "shard" and not return_probs:
+            return self._eval_engine(apply, "shard").evaluate(stacked, data)
+        return self._eval_engine(apply, "scan").evaluate(
+            stacked, data, node_axis=1, return_probs=return_probs)
+
     def evaluate(self, batch: Dict[str, np.ndarray],
                  res: Optional[TrainResult] = None) -> TrainResult:
-        batch = jax.tree.map(jnp.asarray, batch)
-        labels = batch["y"] if "y" in batch else batch["tokens"][:, 1:]
-        apply = lambda p, b: self.model.logits(p, b)
-        if self.fed_cfg.algorithm in ("cdbfl", "dsgld") and len(self.bank):
-            if isinstance(self._bank_state, SampleBank):
-                probs = bma_predict(apply, self._bank_state.samples, batch,
-                                    node_axis=0)
-            else:
-                # one vmapped dispatch over the whole (S, K, ...) bank
-                stacked = self.bank_cfg.stacked(self._bank_state)
-                probs = bma_predict_stacked(apply, stacked, batch,
-                                            node_axis=0)
-        else:
-            probs = point_predict(apply, self.state.params, batch, node_axis=0)
-        probs = np.asarray(probs, np.float32)
-        labels_np = np.asarray(labels)
+        rep, probs = self.eval_report(batch, return_probs=True)
         if res is None:
             res = TrainResult(0, 0, 0, 0, self.bytes_per_round, 0)
-        res.accuracy = float(calibration.accuracy(probs, labels_np))
-        res.ece = float(calibration.ece(probs, labels_np))
-        res.nll = float(calibration.nll(probs, labels_np))
-        res.brier = float(calibration.brier(probs, labels_np))
-        res.probs, res.labels = probs, labels_np
+        res.accuracy = rep.accuracy
+        res.ece = rep.ece
+        res.nll = rep.nll
+        res.brier = rep.brier
+        res.overconf_gap = rep.overconf_gap
+        res.report = rep
+        res.probs = probs
+        res.labels = (np.asarray(batch["y"]) if "y" in batch
+                      else np.asarray(batch["tokens"])[:, 1:])
         return res

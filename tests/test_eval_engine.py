@@ -1,0 +1,285 @@
+"""Eval-engine equivalence: fused scan vs host oracle vs legacy formulas,
+plus the SPMD psum path on a forced multi-device mesh (tier1-spmd job)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FedConfig, get_arch
+from repro.core import calibration as cal
+from repro.core.posterior import bma_predict, point_predict
+from repro.data.partition import partition_iid
+from repro.data.radar import make_dataset
+from repro.eval import (HostEvalEngine, ScanEvalEngine, ShardEvalEngine,
+                        as_stacked, finalize, init_accum, make_eval_engine,
+                        update_accum)
+from repro.models import get_model
+from repro.train import FedTrainer
+
+NDEV = jax.device_count()
+needs4 = pytest.mark.skipif(
+    NDEV < 4, reason="needs >=4 devices (tier1-spmd forces "
+                     "xla_force_host_platform_device_count=8)")
+
+HW = (16, 16)
+S, K = 3, 4
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_arch("lenet-radar").reduced.replace(input_hw=HW)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+
+    def node_stack(i):
+        ps = [model.init(jax.random.fold_in(key, i * K + j))
+              for j in range(K)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[node_stack(i) for i in range(S)])
+    ds = make_dataset(150, hw=HW, day=2, seed=5)   # padded: 150 % 64 != 0
+    apply = lambda p, b: model.logits(p, b)
+    return model, apply, stacked, ds
+
+
+def test_scan_matches_host_oracle_bitwise(world):
+    _, apply, stacked, ds = world
+    scan = ScanEvalEngine(apply, batch_size=64)
+    host = HostEvalEngine(apply, batch_size=64)
+    rs, ps = scan.evaluate(stacked, ds, node_axis=1, return_probs=True)
+    rh, ph = host.evaluate(stacked, ds, node_axis=1, return_probs=True)
+    assert rs == rh._replace(bins=rs.bins)
+    for a, b in zip(rs.bins, rh.bins):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(ps, ph)
+    assert rs.count == 150.0
+
+
+def test_scan_matches_legacy_bma_and_formulas(world):
+    """The fused metrics agree with the pre-PR5 path: bma_predict over a
+    sample list + the core.calibration full-array formulas."""
+    _, apply, stacked, ds = world
+    samples = [jax.tree.map(lambda x: x[i], stacked) for i in range(S)]
+    batch = jax.tree.map(jnp.asarray, ds)
+    probs = np.asarray(bma_predict(apply, samples, batch, node_axis=0),
+                       np.float32)
+    scan = ScanEvalEngine(apply, batch_size=64)
+    rep, ps = scan.evaluate(stacked, ds, node_axis=1, return_probs=True)
+    np.testing.assert_allclose(ps, probs, atol=2e-6)
+    np.testing.assert_allclose(rep.accuracy,
+                               float(cal.accuracy(probs, ds["y"])), atol=1e-6)
+    np.testing.assert_allclose(rep.nll, float(cal.nll(probs, ds["y"])),
+                               atol=1e-5)
+    np.testing.assert_allclose(rep.brier, float(cal.brier(probs, ds["y"])),
+                               atol=1e-5)
+    # bin sums accumulate per batch instead of one full-array scatter
+    np.testing.assert_allclose(rep.ece, float(cal.ece(probs, ds["y"])),
+                               atol=2e-4)
+    np.testing.assert_allclose(rep.mce, float(cal.mce(probs, ds["y"])),
+                               atol=2e-4)
+
+
+def test_batch_size_changes_only_float_summation(world):
+    _, apply, stacked, ds = world
+    r64 = ScanEvalEngine(apply, batch_size=64).evaluate(stacked, ds,
+                                                        node_axis=1)
+    r30 = ScanEvalEngine(apply, batch_size=30).evaluate(stacked, ds,
+                                                        node_axis=1)
+    assert r64.count == r30.count == 150.0
+    assert r64.accuracy == r30.accuracy          # integer-valued sums
+    np.testing.assert_array_equal(r64.bins.bin_counts, r30.bins.bin_counts)
+    np.testing.assert_allclose(
+        [r64.ece, r64.nll, r64.brier, r64.entropy],
+        [r30.ece, r30.nll, r30.brier, r30.entropy], rtol=1e-5)
+
+
+def test_point_path_matches_point_predict(world):
+    _, apply, stacked, ds = world
+    params = jax.tree.map(lambda x: x[0], stacked)       # (K, ...)
+    batch = jax.tree.map(jnp.asarray, ds)
+    probs = np.asarray(point_predict(apply, params, batch, node_axis=0),
+                       np.float32)
+    rep, ps = ScanEvalEngine(apply, batch_size=64).evaluate(
+        as_stacked(params), ds, node_axis=1, return_probs=True)
+    np.testing.assert_allclose(ps, probs, atol=2e-6)
+    np.testing.assert_allclose(rep.accuracy,
+                               float(cal.accuracy(probs, ds["y"])), atol=1e-6)
+
+
+def test_update_accum_flattens_token_level_batches():
+    """(B, T, C) probability batches score every label position, with the
+    batch mask broadcasting over T (the LM evaluation path)."""
+    rng = np.random.default_rng(0)
+    b, t, c = 4, 6, 8
+    probs = jax.nn.softmax(jnp.asarray(rng.normal(size=(b, t, c))), -1)
+    labels = jnp.asarray(rng.integers(0, c, size=(b, t)))
+    mask = jnp.asarray([1.0, 1.0, 1.0, 0.0])
+    acc = update_accum(init_accum(10), probs, labels, mask, 10)
+    flat = update_accum(init_accum(10), probs[:3].reshape(-1, c),
+                        labels[:3].reshape(-1), jnp.ones(3 * t), 10)
+    for a, f in zip(acc, flat):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(f), rtol=1e-6)
+    assert float(acc.n) == 3 * t
+
+
+def test_return_probs_keeps_token_dims():
+    """Scan and host engines return identical (N, T, C) probabilities for
+    token-level batches (regression: the scan path used to flatten T)."""
+    rng = np.random.default_rng(1)
+    n, t, c = 10, 5, 7
+    w = jnp.asarray(rng.normal(size=(c, c)), jnp.float32)
+    emb = jnp.asarray(rng.normal(size=(c + 1, c)), jnp.float32)
+
+    def apply(p, b):
+        return emb[b["tokens"]][:, :-1] @ p      # (B, T, C) next-token lgts
+
+    data = {"tokens": rng.integers(0, c + 1, size=(n, t + 1)),
+            "y": rng.integers(0, c, size=(n, t))}
+    stacked = as_stacked(w)
+    rs, ps = ScanEvalEngine(apply, batch_size=4).evaluate(
+        stacked, data, return_probs=True)
+    rh, ph = HostEvalEngine(apply, batch_size=4).evaluate(
+        stacked, data, return_probs=True)
+    assert ps.shape == (n, t, c) and ph.shape == (n, t, c)
+    np.testing.assert_array_equal(ps, ph)
+    assert rs.count == float(n * t)
+    assert rs == rh._replace(bins=rs.bins)
+
+
+def test_finalize_overconf_gap_sign():
+    """Overconfident probs -> positive gap; report fields are consistent
+    with the reliability bins."""
+    probs = jnp.asarray([[0.95, 0.05]] * 100, jnp.float32)
+    labels = jnp.asarray([0] * 60 + [1] * 40)            # 60% accuracy
+    acc = update_accum(init_accum(10), probs, labels, jnp.ones(100), 10)
+    rep = finalize(acc)
+    assert rep.accuracy == pytest.approx(0.6)
+    assert rep.overconf_gap == pytest.approx(0.35, abs=1e-6)
+    assert rep.ece == pytest.approx(0.35, abs=1e-6)
+
+
+def test_matrix_defaults_match_benchmark_protocol():
+    """MatrixSpec mirrors the DESIGN §7 reduced-scale constants in
+    benchmarks/common.py — retuning one side must fail here, not drift."""
+    common = pytest.importorskip("benchmarks.common")
+    from repro.eval.matrix import MatrixSpec
+    spec = MatrixSpec()
+    assert spec.nodes == common.K
+    assert spec.rounds == common.ROUNDS
+    assert spec.per_node == common.PER_NODE_SHIFT
+    assert int(spec.rounds * spec.burn_in_frac) == common.BURN_IN
+    assert spec.eta == common.ETA
+    assert spec.zeta == common.ZETA
+    assert spec.temperature == common.TEMPERATURE
+    assert spec.minibatch == common.MINIBATCH
+    assert spec.compress_ratio == common.RATIO
+
+
+def test_make_eval_engine_factory(world):
+    _, apply, _, _ = world
+    assert isinstance(make_eval_engine("scan", apply), ScanEvalEngine)
+    assert isinstance(make_eval_engine("host", apply), HostEvalEngine)
+    with pytest.raises(ValueError):
+        make_eval_engine("nope", apply)
+
+
+# -- trainer integration ---------------------------------------------------
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = get_arch("lenet-radar").reduced.replace(input_hw=HW)
+    model = get_model(cfg)
+    k = 3
+    train = make_dataset(k * 30, hw=HW, day=1, seed=0)
+    shards = partition_iid(train, k, seed=0)
+    test = make_dataset(80, hw=HW, day=1, seed=99)
+    fed = FedConfig(num_nodes=k, local_steps=4, eta=3e-3, zeta=0.3,
+                    rounds=24, burn_in=12, compressor="block_topk",
+                    compress_ratio=0.05, topology="full", algorithm="cdbfl",
+                    seed=0)
+    return model, fed, shards, test
+
+
+def test_trainer_evaluate_routes_through_engine(trained):
+    model, fed, shards, test = trained
+    tr = FedTrainer(model, fed, shards, minibatch=8)
+    res = tr.run(rounds=24, eval_batch=test)
+    rep = tr.eval_report(test)
+    assert res.accuracy == rep.accuracy and res.ece == rep.ece
+    assert res.report is not None and res.overconf_gap == rep.overconf_gap
+    assert res.probs.shape == (80, 10)
+    # probs from the engine match the bank BMA semantics
+    stacked = tr._stacked_bank()
+    assert stacked is not None
+    assert np.isfinite(res.nll) and np.isfinite(res.brier)
+
+
+def test_trainer_periodic_eval_history(trained):
+    model, fed, shards, test = trained
+    tr = FedTrainer(model, fed, shards, minibatch=8)
+    res = tr.run(rounds=24, eval_batch=test, eval_every=8)
+    assert len(res.eval_history) == 3                   # rounds 8, 16, 24
+    assert [h["round"] for h in res.eval_history] == [8.0, 16.0, 24.0]
+    assert res.eval_history[-1]["accuracy"] == res.accuracy
+    assert res.eval_history[-1]["ece"] == res.ece
+    for h in res.eval_history:
+        assert np.isfinite(h["ece"]) and np.isfinite(h["nll"])
+
+
+def test_trainer_point_fallback_before_burn_in(trained):
+    model, fed, shards, test = trained
+    import dataclasses
+    fed_late = dataclasses.replace(fed, burn_in=1000)
+    tr = FedTrainer(model, fed_late, shards, minibatch=8)
+    res = tr.run(rounds=6, eval_batch=test)             # bank still empty
+    assert len(tr.bank) == 0
+    assert np.isfinite(res.accuracy) and np.isfinite(res.ece)
+
+
+# -- SPMD psum path (tier1-spmd job) ---------------------------------------
+
+@needs4
+@pytest.mark.parametrize("shards_n", [2, 4])
+def test_shard_eval_matches_scan(world, shards_n):
+    from repro.launch.mesh import make_fed_mesh
+    _, apply, stacked, ds = world
+    rs = ScanEvalEngine(apply, batch_size=64).evaluate(stacked, ds,
+                                                       node_axis=1)
+    mesh = make_fed_mesh(shards_n)
+    rr = ShardEvalEngine(apply, mesh, "fed", batch_size=64).evaluate(
+        stacked, ds)
+    # integer-valued statistics survive the psum reduction exactly
+    assert rr.count == rs.count and rr.accuracy == rs.accuracy
+    np.testing.assert_array_equal(rr.bins.bin_counts, rs.bins.bin_counts)
+    # float sums reassociate (per-shard partials then psum): 1-ulp class
+    np.testing.assert_allclose(
+        [rr.ece, rr.mce, rr.nll, rr.brier, rr.entropy, rr.overconf_gap],
+        [rs.ece, rs.mce, rs.nll, rs.brier, rs.entropy, rs.overconf_gap],
+        rtol=1e-6, atol=1e-7)
+
+
+@needs4
+def test_shard_trainer_eval_uses_psum_path(world):
+    """FedTrainer(engine='shard').eval_report runs the ShardEvalEngine and
+    agrees with the same trainer's scan-path probs evaluation."""
+    cfg = get_arch("lenet-radar").reduced.replace(input_hw=HW)
+    model = get_model(cfg)
+    k = 4
+    train = make_dataset(k * 20, hw=HW, day=1, seed=0)
+    shards = partition_iid(train, k, seed=0)
+    test = make_dataset(64, hw=HW, day=1, seed=99)
+    fed = FedConfig(num_nodes=k, local_steps=2, eta=3e-3, zeta=0.3,
+                    rounds=10, burn_in=4, compressor="block_topk",
+                    compress_ratio=0.05, topology="ring", algorithm="cdbfl",
+                    seed=0)
+    from repro.launch.mesh import make_fed_mesh
+    tr = FedTrainer(model, fed, shards, minibatch=6, engine="shard",
+                    mesh=make_fed_mesh(4))
+    tr.run(rounds=10)
+    rep_shard = tr.eval_report(test)                    # psum path
+    rep_scan, _ = tr.eval_report(test, return_probs=True)   # scan path
+    assert rep_shard.count == rep_scan.count
+    assert rep_shard.accuracy == rep_scan.accuracy
+    np.testing.assert_allclose(rep_shard.ece, rep_scan.ece,
+                               rtol=1e-6, atol=1e-7)
