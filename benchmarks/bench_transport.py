@@ -1,0 +1,165 @@
+"""Lossy D2D transport: bytes delivered and airtime vs erasure rate
+(DESIGN.md §11).
+
+For each frame-erasure rate this runs a small fixed-seed cdbfl
+federation (K=4, topk@0.5, ring) with the transport threaded between
+``encode()`` and ``mix(decode())`` and reports, per node per round:
+
+* ``wire``      — codec payload bytes (what PR 3 measured);
+* ``offered``   — framed on-air bytes: payload + 8-byte LEN/SEQ/CRC
+  header per MTU-bounded frame (static, every frame is transmitted);
+* ``delivered`` — bytes whose frames survived the seed-deterministic
+  Bernoulli draws (delivered == offered at erasure 0);
+* ``airtime``/``energy`` — seconds/joules on air at the configured PHY
+  rate and TX power (250 kbps / 100 mW defaults, 802.15.4-class).
+
+Byte columns are machine-independent and exact (the loss draws are
+threefry-deterministic), so ``--tiny`` saves them under
+``results/transport/`` for the CI regression gate
+(``benchmarks/check_regression.py``) to compare against the committed
+baselines bit for bit. A throughput row times the masking path's
+overhead against the teleport path (informational; not gated).
+
+    PYTHONPATH=src python -m benchmarks.bench_transport [--tiny|--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.config import FedConfig, TransportConfig
+from repro.core import (build_topology, init_fed_state, make_compressor,
+                        make_round_fn, resolve_topology)
+from repro.data.partition import DeviceShards
+from repro.train.engine import make_engine
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "transport")
+
+K, L, M, DIM = 4, 3, 5, 6
+MTU = 16                      # 3 frames per 18-byte topk payload
+ERASURES = (0.0, 0.1, 0.3)
+
+
+def _shards():
+    rng = np.random.default_rng(0)
+    out = []
+    for n in (17, 20, 20, 13):
+        x = rng.normal(size=(n, DIM)).astype(np.float32)
+        w = np.arange(1.0, DIM + 1.0, dtype=np.float32) / DIM
+        out.append({"x": x, "y": (x @ w).astype(np.float32)})
+    return out
+
+
+def _linear_loss(params, batch, key):
+    pred = batch["x"] @ params["w"]
+    return jnp.mean((pred - batch["y"]) ** 2), ()
+
+
+def _build(transport: Optional[TransportConfig]):
+    fed = FedConfig(num_nodes=K, local_steps=L, eta=5e-3, zeta=0.3,
+                    burn_in=4, compressor="topk", compress_ratio=0.5,
+                    topology="ring", algorithm="cdbfl", transport=transport)
+    topo = build_topology(resolve_topology(fed), K)
+    comp = make_compressor(fed)
+    rf = make_round_fn("cdbfl", _linear_loss, fed, topo.omega, comp,
+                       data_scale=10.0)
+    eng = make_engine("scan", rf, DeviceShards.from_shards(_shards()),
+                      L, M, bank=None, chunk=4)
+    state = init_fed_state({"w": jnp.zeros((DIM,))}, fed,
+                           key=jax.random.PRNGKey(0))
+    return eng, state
+
+
+def _run_rounds(eng, state, rounds):
+    out = eng.run(state, jax.random.PRNGKey(1), None, rounds)
+    jax.block_until_ready(out[0].params)
+    return out
+
+
+def _erasure_rows(rounds: int, save: bool) -> List[str]:
+    rows = []
+    for e in ERASURES:
+        tcfg = TransportConfig(mtu=MTU, erasure=e)
+        eng, state = _build(tcfg)
+        _run_rounds(eng, state, rounds)
+        hist = {name: [float(np.asarray(x))
+                       for x in getattr(eng, f"last_{name}_history")]
+                for name in ("wire", "offered", "delivered", "airtime",
+                             "energy")}
+        rec = {
+            "erasure": e, "mtu": MTU, "rounds": rounds,
+            "wire_bytes_per_round": float(np.mean(hist["wire"])),
+            "offered_bytes_per_round": float(np.mean(hist["offered"])),
+            "delivered_bytes_per_round": float(np.mean(hist["delivered"])),
+            "airtime_us_per_round": 1e6 * float(np.mean(hist["airtime"])),
+            "energy_uj_per_round": 1e6 * float(np.mean(hist["energy"])),
+            "delivered_frac": (float(np.mean(hist["delivered"]))
+                               / max(float(np.mean(hist["offered"])), 1e-12)),
+        }
+        if save:
+            os.makedirs(RESULTS_DIR, exist_ok=True)
+            fn = f"erasure_{str(e).replace('.', 'p')}.json"
+            with open(os.path.join(RESULTS_DIR, fn), "w") as f:
+                json.dump(rec, f, indent=1)
+        rows.append(
+            f"transport_erasure_{e},0,"
+            f"wire={rec['wire_bytes_per_round']:g}B;"
+            f"offered={rec['offered_bytes_per_round']:g}B;"
+            f"delivered={rec['delivered_bytes_per_round']:g}B;"
+            f"airtime={rec['airtime_us_per_round']:.1f}us;"
+            f"delivered_frac={rec['delivered_frac']:.3f}")
+    return rows
+
+
+def _overhead_rows(rounds: int) -> List[str]:
+    """Masking-path overhead vs the teleport path (informational)."""
+    rows = []
+    for label, tcfg in (("teleport", None),
+                        ("lossy", TransportConfig(mtu=MTU, erasure=0.3))):
+        eng, state = _build(tcfg)
+        # the scan engine donates its input state: chain each run's output
+        holder = {"state": _run_rounds(eng, state, rounds)[0]}  # compile
+
+        def once():
+            holder["state"] = _run_rounds(eng, holder["state"], rounds)[0]
+
+        t = timeit(once, iters=3)
+        rows.append(f"transport_scan_{label},{t:.0f},"
+                    f"rounds={rounds};us_per_round={t / rounds:.1f}")
+    return rows
+
+
+def run(quick: bool = False, tiny: bool = False) -> List[str]:
+    """Benchmark-suite entry point (CSV rows for benchmarks.run).
+
+    ``--tiny`` saves the (machine-independent, threefry-deterministic)
+    byte records under ``results/transport/`` — gated exactly against
+    ``results/baselines/transport/`` by check_regression.py.
+    """
+    rounds = 4 if (tiny or quick) else 16
+    rows = _erasure_rows(rounds, save=tiny)
+    rows += _overhead_rows(8 if (tiny or quick) else 32)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 4 rounds, saves byte records for the "
+                         "regression gate")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(quick=args.quick, tiny=args.tiny):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

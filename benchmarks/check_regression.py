@@ -1,8 +1,9 @@
 """CI benchmark-regression gate: compare smoke results against references.
 
 The smoke benches (``bench_round_engine --tiny``, ``bench_wire --tiny``,
-``bench_shard_engine --tiny``, ``bench_eval_engine --tiny``) write JSON
-records under ``benchmarks/results/<bench>/``. Two kinds of reference
+``bench_shard_engine --tiny``, ``bench_eval_engine --tiny``,
+``bench_transport --tiny``) write JSON records under
+``benchmarks/results/<bench>/``. Two kinds of reference
 exist, because the two kinds of metric have different portability:
 
 * **Measured bytes** (``*bytes*`` keys) are machine-independent and
@@ -60,6 +61,7 @@ BENCHES = {
     "wire_tiny": "packed wire-format byte accounting (tiny tree)",
     "shard_engine": "SPMD shard engine smoke (shard_map + ppermute)",
     "eval_engine": "fused BMA eval engine smoke (vs legacy host loop)",
+    "transport": "lossy D2D transport: offered/delivered framed bytes",
 }
 
 THROUGHPUT_SUFFIX = "rounds_per_s"

@@ -24,7 +24,8 @@ def main() -> None:
                             bench_eval_engine, bench_fig3_l_sweep,
                             bench_fig4_reliability, bench_kernels,
                             bench_round_engine, bench_shard_engine,
-                            bench_topology_sweep, bench_wire, roofline)
+                            bench_topology_sweep, bench_transport,
+                            bench_wire, roofline)
     suites = {
         "fig3_l_sweep": bench_fig3_l_sweep.run,
         "fig4_reliability": bench_fig4_reliability.run,
@@ -34,6 +35,7 @@ def main() -> None:
         "shard_engine": bench_shard_engine.run,
         "eval_engine": bench_eval_engine.run,
         "wire": bench_wire.run,
+        "transport": bench_transport.run,
         "kernels": bench_kernels.run,
         "roofline": roofline.run,
     }

@@ -115,6 +115,44 @@ class TopologyConfig:
 
 
 @dataclass(frozen=True)
+class TransportConfig:
+    """Lossy D2D frame transport under the gossip layer (DESIGN.md §11).
+
+    Payloads are fragmented into ``mtu``-bounded frames (8-byte LEN/SEQ/CRC
+    header each); frames erase per the named loss model, and whole links
+    drop for a round per the SNR-derived Rayleigh outage (reusing the
+    gossip layer's ``link_failure_prob`` seam). Pure data so config stays
+    dependency-free; ``repro.core.transport`` interprets it.
+    """
+    mtu: int = 256                  # on-air frame size cap, header included
+    # per-frame erasure: scalar rate, or a per-node tuple (asymmetric loss;
+    # 1.0 = dead transmitter). Interpreted by the ``loss_model`` below.
+    erasure: Any = 0.0
+    loss_model: str = "bernoulli"   # bernoulli | gilbert
+    # Gilbert-Elliott burst channel (loss_model="gilbert")
+    gilbert_p_enter: float = 0.05   # good -> bad episode start, per frame
+    gilbert_p_exit: float = 0.3     # bad -> good recovery, per frame
+    gilbert_loss_good: float = 0.0
+    gilbert_loss_bad: float = 1.0
+    # SNR-parameterized per-link outage (None disables): per-node mean SNR
+    # snr_db ± lognormal shadowing, edge outage 1 - exp(-γ_th/γ̄) at the
+    # weaker endpoint, fed into the gossip link-dropout seam.
+    snr_db: Optional[float] = None
+    snr_spread_db: float = 0.0
+    snr_threshold_db: float = 0.0
+    # radio cost model (802.15.4-class defaults) for airtime/energy columns
+    phy_rate_bps: float = 250_000.0
+    tx_power_w: float = 0.1
+    # CHOCO error feedback: update the control sequence v with the
+    # *delivered* delta only, so lost frames stay in the next residual
+    error_feedback: bool = True
+    seed: int = 0                   # SNR shadowing draw seed
+
+    def replace(self, **kw) -> "TransportConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
 class FedConfig:
     num_nodes: int = 10             # K
     topology: str = "full"          # legacy string: full | ring | grid | star
@@ -139,6 +177,8 @@ class FedConfig:
     min_dense_size: int = 0         # leaves smaller than this sent dense
     algorithm: str = "cdbfl"        # cdbfl | dsgld | cffl | sgld
     control_dtype: str = "float32"  # v / v̄ storage (bfloat16 halves fed state)
+    # lossy D2D frame transport (None = ideal links, today's teleport path)
+    transport: Optional[TransportConfig] = None
     seed: int = 0
 
 

@@ -9,6 +9,10 @@ from repro.core.topology import (Topology, MixSchedule, build_topology,
 from repro.core.gossip import (dense_mix, schedule_mix, make_mixer,
                                ShardContext, ShardMixStats, make_shard_mixer,
                                plan_shard_mix)
+from repro.core.transport import (BernoulliLoss, DeadNodeLoss, FixedMaskLoss,
+                                  GilbertElliottLoss, LossyTransport,
+                                  TransportMetrics, fragment, reassemble,
+                                  resolve_transport, serialize_payload)
 from repro.core.fed_state import FedState, init_fed_state
 from repro.core.algorithms import (
     make_cdbfl_round,
@@ -30,6 +34,9 @@ __all__ = [
     "build_schedule", "graph_adjacency", "mixing_weights",
     "resolve_topology", "dense_mix", "schedule_mix", "make_mixer",
     "ShardContext", "ShardMixStats", "make_shard_mixer", "plan_shard_mix",
+    "BernoulliLoss", "DeadNodeLoss", "FixedMaskLoss", "GilbertElliottLoss",
+    "LossyTransport", "TransportMetrics", "fragment", "reassemble",
+    "resolve_transport", "serialize_payload",
     "FedState", "init_fed_state", "make_cdbfl_round",
     "make_dsgld_round", "make_cffl_round", "make_sgld_step", "make_round_fn",
     "RoundMetrics", "SampleBank", "DeviceSampleBank", "DeviceBankState",

@@ -43,22 +43,35 @@ import jax.numpy as jnp
 from repro.core.compression import Compressor
 from repro.core.fed_state import FedState
 from repro.core.gossip import ShardContext, ShardMixStats
+from repro.core.transport import (TRANSPORT_SALT, LossyTransport,
+                                  TransportMetrics, resolve_transport)
 from repro.utils.tree import tree_count, tree_random_normal
 
 
-def _default_mixer(omega, fed_cfg):
+def _transport_link_probs(transport: Optional[LossyTransport]):
+    """The gossip-layer hook: per-edge outage probabilities from the
+    transport's SNR model (None when no link-level loss is configured)."""
+    if transport is not None and transport.has_link_outage:
+        return transport.outage_probs
+    return None
+
+
+def _default_mixer(omega, fed_cfg, link_probs=None):
     from repro.core.gossip import make_mixer
     from repro.core.topology import resolve_topology
     import numpy as _np
-    return make_mixer(_np.asarray(omega), config=resolve_topology(fed_cfg))
+    return make_mixer(_np.asarray(omega), config=resolve_topology(fed_cfg),
+                      link_probs=link_probs)
 
 
-def _resolve_mixer(omega, fed_cfg, mixer, shard_ctx: Optional[ShardContext]):
+def _resolve_mixer(omega, fed_cfg, mixer, shard_ctx: Optional[ShardContext],
+                   transport: Optional[LossyTransport] = None):
     """Pick the mixing lowering: shard (ppermute), explicit, or default.
 
     Returns ``(mix_fn, ShardMixStats | None)`` — stats only exist on the
     shard path, where cross/intra-shard rows are statically known.
     """
+    link_probs = _transport_link_probs(transport)
     if shard_ctx is not None:
         if mixer is not None:
             raise ValueError("pass either mixer= or shard_ctx=, not both")
@@ -66,9 +79,14 @@ def _resolve_mixer(omega, fed_cfg, mixer, shard_ctx: Optional[ShardContext]):
         from repro.core.topology import resolve_topology
         import numpy as _np
         return make_shard_mixer(_np.asarray(omega), shard_ctx,
-                                config=resolve_topology(fed_cfg))
+                                config=resolve_topology(fed_cfg),
+                                link_probs=link_probs)
     if mixer is None:
-        return _default_mixer(omega, fed_cfg), None
+        return _default_mixer(omega, fed_cfg, link_probs), None
+    if link_probs is not None:
+        raise ValueError("an explicit mixer= cannot be combined with a "
+                         "transport SNR link-outage model; build the mixer "
+                         "with make_mixer(link_probs=...) instead")
     from repro.core.gossip import as_keyed_mixer
     return as_keyed_mixer(mixer), None
 
@@ -134,6 +152,13 @@ class RoundMetrics(NamedTuple):
     cross_bytes: Any = 0.0     # scalar: bytes/node/round the mixing moved
                                # *between shards* (ppermute/all-gather rows
                                # × row bytes); 0 off the shard path
+    # lossy-transport accounting (0 when no transport is configured):
+    offered_bytes: Any = 0.0   # scalar: on-air bytes/node/round offered to
+                               # the link (payload + frame headers)
+    delivered_bytes: Any = 0.0  # scalar: bytes/node/round whose frames
+                               # survived the erasure draws
+    airtime_s: Any = 0.0       # scalar: TX airtime/node/round at phy_rate
+    energy_j: Any = 0.0        # scalar: TX energy/node/round at tx_power
 
 
 def _node_ids(local_k: int, shard_ctx: Optional[ShardContext]) -> jax.Array:
@@ -148,8 +173,10 @@ def _node_keys_for(key, node_ids) -> jax.Array:
     return jax.vmap(lambda i: jax.random.fold_in(key, i))(node_ids)
 
 
-def _compress_exchange(compressor, residual, key, node_ids):
-    """Run Q per node over the residual tree; return (delta, bytes/node).
+def _compress_exchange(compressor, residual, key, node_ids,
+                       transport: Optional[LossyTransport] = None):
+    """Run Q per node over the residual tree, optionally through the lossy
+    frame transport; return ``(delta_v, delta_mix, bytes/node, tx)``.
 
     Node k's rows are encoded under ``fold_in(key, k)`` — its compression
     (top-k selection, QSGD norm, rand-k index set) depends only on its own
@@ -159,17 +186,63 @@ def _compress_exchange(compressor, residual, key, node_ids):
     closed-form byte table. The payload buffers carry the local node axis,
     so dividing by the local node count gives the per-node figure the
     paper reports (identical on every shard).
+
+    With a transport, the decoded delta is masked by the per-frame erasure
+    draws (keys from ``fold_in(key, TRANSPORT_SALT)`` then the global node
+    id — a stream separate from kql/knoise/kmix, identical across
+    engines). ``delta_mix`` is the *delivered* delta (what the neighbors
+    integrate); ``delta_v`` is what the sender's control sequence absorbs:
+    equal to ``delta_mix`` under error feedback — lost frames stay in the
+    next round's residual θ - v and are re-offered to the compressor — or
+    the full lossless decode without it (the sender then believes
+    everything arrived, and v/v̄ desynchronize). ``tx`` carries per-node
+    :class:`TransportMetrics` arrays, or None when no transport applies.
     """
     keys = _node_keys_for(key, node_ids)
     local_k = node_ids.shape[0]
     if hasattr(compressor, "encode"):
         payload = jax.vmap(compressor.encode)(residual, keys)
-        delta = jax.vmap(compressor.decode)(payload)
-        wire = payload.measured_bytes() / local_k
-    else:
-        delta = jax.vmap(compressor)(residual, keys)
-        wire = compressor.wire_bytes(jax.tree.map(lambda x: x[0], residual))
-    return delta, jnp.float32(wire)
+        wire = jnp.float32(payload.measured_bytes() / local_k)
+        if transport is None:
+            delta = jax.vmap(compressor.decode)(payload)
+            return delta, delta, wire, None
+        kloss = jax.random.fold_in(key, TRANSPORT_SALT)
+        tkeys = _node_keys_for(kloss, node_ids)
+        delta_full, delta_del, tx = jax.vmap(
+            partial(transport.deliver, compressor))(payload, tkeys, node_ids)
+        delta_v = delta_del if transport.error_feedback else delta_full
+        return delta_v, delta_del, wire, tx
+    delta = jax.vmap(compressor)(residual, keys)
+    wire = compressor.wire_bytes(jax.tree.map(lambda x: x[0], residual))
+    return delta, delta, jnp.float32(wire), None
+
+
+def _reduce_transport(tx: Optional[TransportMetrics],
+                      shard_ctx: Optional[ShardContext], num_nodes: int
+                      ) -> TransportMetrics:
+    """Global per-node means of the per-node transport metric arrays.
+
+    Delivered/offered byte counts are integer-valued f32 well below 2^24,
+    so the sums (and psums) are exact and identical across engines.
+    """
+    if tx is None:
+        return TransportMetrics.zero()
+    return TransportMetrics(
+        offered=_allsum(jnp.sum(tx.offered), shard_ctx) / num_nodes,
+        delivered=_allsum(jnp.sum(tx.delivered), shard_ctx) / num_nodes,
+        airtime_s=_allsum(jnp.sum(tx.airtime_s), shard_ctx) / num_nodes,
+        energy_j=_allsum(jnp.sum(tx.energy_j), shard_ctx) / num_nodes,
+    )
+
+
+def _check_transport(transport: Optional[LossyTransport], compressor):
+    """Frame-level loss needs the materialized wire format."""
+    if (transport is not None and transport.lossy
+            and not hasattr(compressor, "encode")):
+        raise ValueError(
+            "frame-level transport loss requires a codec pipeline "
+            "(CompressionPipeline); the legacy dense-masked Compressor has "
+            "no wire payload to fragment — use fed_cfg.pipeline")
 
 
 def _allsum(x, shard_ctx: Optional[ShardContext]):
@@ -219,7 +292,8 @@ def _cross_bytes(mix_stats: Optional[ShardMixStats], mixed_tree,
 
 def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
                      data_scale: float = 1.0, mixer=None,
-                     shard_ctx: Optional[ShardContext] = None):
+                     shard_ctx: Optional[ShardContext] = None,
+                     transport: Optional[LossyTransport] = None):
     """Build the jit-able CD-BFL round function.
 
     One round = L local SGLD-style SGD steps per node, compressed residual
@@ -234,13 +308,23 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
     ``shard_map`` whose ``axis_name`` carries the node axis: the mixing is
     explicit ppermute exchange, metric reductions psum over shards, and
     per-node arithmetic is bitwise identical to the unsharded round.
+
+    ``transport``: optional :class:`~repro.core.transport.LossyTransport`
+    override (defaults to one built from ``fed_cfg.transport``; None when
+    neither is set = ideal links). Frame erasure masks the exchanged delta
+    and, with error feedback on, the lost mass stays in the next round's
+    residual. With ``erasure=0`` and no SNR model the trajectory is
+    bitwise identical to the no-transport path.
     """
     eta = fed_cfg.eta
     zeta = fed_cfg.zeta
     K = fed_cfg.num_nodes
     L = fed_cfg.local_steps
     omega = jnp.asarray(omega, jnp.float32)
-    mixer, mix_stats = _resolve_mixer(omega, fed_cfg, mixer, shard_ctx)
+    transport = resolve_transport(fed_cfg, transport)
+    _check_transport(transport, compressor)
+    mixer, mix_stats = _resolve_mixer(omega, fed_cfg, mixer, shard_ctx,
+                                      transport)
     prior_weight = 1.0 / K
 
     def round_fn(state: FedState, batches, key) -> Tuple[FedState, RoundMetrics]:
@@ -265,10 +349,15 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
         # consumes the decoded dense delta (DESIGN.md §2).
         residual = jax.tree.map(lambda t, v: t - v.astype(t.dtype), theta_L,
                                 state.v)
-        delta, wire = _compress_exchange(compressor, residual, kql, ids)
+        delta_v, delta, wire, tx = _compress_exchange(
+            compressor, residual, kql, ids, transport)
 
         # -- Eq. 7 / Eq. 8: control sequences (stored in control_dtype) ------
-        v_new = jax.tree.map(lambda v, d: (v + d.astype(v.dtype)), state.v, delta)
+        # under a lossy transport, v absorbs the *delivered* delta (error
+        # feedback: lost frames stay in the next residual); delta below is
+        # always the delivered one — it is what the neighbors mix in.
+        v_new = jax.tree.map(lambda v, d: (v + d.astype(v.dtype)), state.v,
+                             delta_v)
         mixed = mixer(delta, kmix)
         v_bar_new = jax.tree.map(lambda vb, m: (vb + m.astype(vb.dtype)),
                                  state.v_bar, mixed)
@@ -284,12 +373,17 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
             theta_L, v_bar_new, v_new, noise,
         )
 
+        txm = _reduce_transport(tx, shard_ctx, K)
         metrics = RoundMetrics(
             loss=losses,
             consensus_error=_consensus_error(params_new, shard_ctx, K) / K,
             delta_norm=_sq_norm(delta, shard_ctx) / K,
             wire_bytes=wire,
             cross_bytes=_cross_bytes(mix_stats, delta, ids.shape[0]),
+            offered_bytes=txm.offered,
+            delivered_bytes=txm.delivered,
+            airtime_s=txm.airtime_s,
+            energy_j=txm.energy_j,
         )
         new_state = FedState(
             params=params_new, v=v_new, v_bar=v_bar_new,
@@ -305,18 +399,28 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
 # --------------------------------------------------------------------------
 
 def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0,
-                     mixer=None, shard_ctx: Optional[ShardContext] = None):
+                     mixer=None, shard_ctx: Optional[ShardContext] = None,
+                     transport: Optional[LossyTransport] = None):
     """One DSGLD iteration: θ_{k,t+1} = Σ_j ω_kj θ_j - η ∇f_k + √(2η) ξ.
 
     For fairness against CD-BFL with L local steps, ``batches`` still has the
     (K, L, ...) layout and we take the first minibatch (L is 1 per exchange in
     DSGLD); the driver calls it L times per CD-BFL round when matching
     gradient budgets.
+
+    With a transport, the SNR link-outage model applies through the mixer
+    seam and the dense θ exchange gets frame-level *accounting* (offered
+    bytes / airtime / energy; delivered == offered). Frame-level erasure of
+    the dense payload is not modeled: DSGLD has no codec or control
+    sequence to absorb partial deltas — that is exactly the robustness gap
+    CD-BFL's error feedback closes.
     """
     eta = fed_cfg.eta
     K = fed_cfg.num_nodes
     omega = jnp.asarray(omega, jnp.float32)
-    mixer, mix_stats = _resolve_mixer(omega, fed_cfg, mixer, shard_ctx)
+    transport = resolve_transport(fed_cfg, transport)
+    mixer, mix_stats = _resolve_mixer(omega, fed_cfg, mixer, shard_ctx,
+                                      transport)
     prior_weight = 1.0 / K
 
     def round_fn(state: FedState, batches, key) -> Tuple[FedState, RoundMetrics]:
@@ -348,14 +452,20 @@ def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0,
             ).astype(m.dtype),
             mixed, grads, noise,
         )
+        dense_bytes = tree_count(state.params) // ids.shape[0] * 4
+        txm = (transport.account_dense(dense_bytes)
+               if transport is not None else TransportMetrics.zero())
         metrics = RoundMetrics(
             loss=losses[:, None],
             consensus_error=_consensus_error(params_new, shard_ctx, K) / K,
             delta_norm=_sq_norm(state.params, shard_ctx) / K,
             # uncompressed θ exchange: dense fp32 payload per node
-            wire_bytes=jnp.float32(
-                tree_count(state.params) // ids.shape[0] * 4),
+            wire_bytes=jnp.float32(dense_bytes),
             cross_bytes=_cross_bytes(mix_stats, state.params, ids.shape[0]),
+            offered_bytes=txm.offered,
+            delivered_bytes=txm.delivered,
+            airtime_s=txm.airtime_s,
+            energy_j=txm.energy_j,
         )
         return (
             FedState(params_new, state.v, state.v_bar, state.opt_state,
@@ -372,14 +482,18 @@ def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0,
 
 def make_cffl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
                     data_scale: float = 1.0, mixer=None,
-                    shard_ctx: Optional[ShardContext] = None):
+                    shard_ctx: Optional[ShardContext] = None,
+                    transport: Optional[LossyTransport] = None):
     """CD-BFL minus the Langevin noise and prior: a point-estimate learner."""
     eta = fed_cfg.eta
     zeta = fed_cfg.zeta
     K = fed_cfg.num_nodes
     L = fed_cfg.local_steps
     omega = jnp.asarray(omega, jnp.float32)
-    mixer, mix_stats = _resolve_mixer(omega, fed_cfg, mixer, shard_ctx)
+    transport = resolve_transport(fed_cfg, transport)
+    _check_transport(transport, compressor)
+    mixer, mix_stats = _resolve_mixer(omega, fed_cfg, mixer, shard_ctx,
+                                      transport)
 
     def round_fn(state: FedState, batches, key) -> Tuple[FedState, RoundMetrics]:
         # same key derivation as cdbfl so the compressor streams coincide
@@ -397,8 +511,10 @@ def make_cffl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
 
         residual = jax.tree.map(lambda t, v: t - v.astype(t.dtype), theta_L,
                                 state.v)
-        delta, wire = _compress_exchange(compressor, residual, kq, ids)
-        v_new = jax.tree.map(lambda v, d: (v + d.astype(v.dtype)), state.v, delta)
+        delta_v, delta, wire, tx = _compress_exchange(
+            compressor, residual, kq, ids, transport)
+        v_new = jax.tree.map(lambda v, d: (v + d.astype(v.dtype)), state.v,
+                             delta_v)
         mixed = mixer(delta, kmix)
         v_bar_new = jax.tree.map(lambda vb, m: (vb + m.astype(vb.dtype)),
                                  state.v_bar, mixed)
@@ -409,12 +525,17 @@ def make_cffl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
             ).astype(t.dtype),
             theta_L, v_bar_new, v_new,
         )
+        txm = _reduce_transport(tx, shard_ctx, K)
         metrics = RoundMetrics(
             loss=losses,
             consensus_error=_consensus_error(params_new, shard_ctx, K) / K,
             delta_norm=_sq_norm(delta, shard_ctx) / K,
             wire_bytes=wire,
             cross_bytes=_cross_bytes(mix_stats, delta, ids.shape[0]),
+            offered_bytes=txm.offered,
+            delivered_bytes=txm.delivered,
+            airtime_s=txm.airtime_s,
+            energy_j=txm.energy_j,
         )
         return (
             FedState(params_new, v_new, v_bar_new, state.opt_state,
@@ -467,14 +588,18 @@ ALGORITHMS = {
 
 def make_round_fn(algorithm: str, loss_fn: LossFn, fed_cfg, omega,
                   compressor: Compressor = None, data_scale: float = 1.0,
-                  mixer=None, shard_ctx: Optional[ShardContext] = None):
+                  mixer=None, shard_ctx: Optional[ShardContext] = None,
+                  transport: Optional[LossyTransport] = None):
     if algorithm == "cdbfl":
         return make_cdbfl_round(loss_fn, fed_cfg, omega, compressor,
-                                data_scale, mixer=mixer, shard_ctx=shard_ctx)
+                                data_scale, mixer=mixer, shard_ctx=shard_ctx,
+                                transport=transport)
     if algorithm == "dsgld":
         return make_dsgld_round(loss_fn, fed_cfg, omega, data_scale,
-                                mixer=mixer, shard_ctx=shard_ctx)
+                                mixer=mixer, shard_ctx=shard_ctx,
+                                transport=transport)
     if algorithm == "cffl":
         return make_cffl_round(loss_fn, fed_cfg, omega, compressor,
-                               data_scale, mixer=mixer, shard_ctx=shard_ctx)
+                               data_scale, mixer=mixer, shard_ctx=shard_ctx,
+                               transport=transport)
     raise ValueError(f"unknown algorithm {algorithm!r}")

@@ -84,25 +84,36 @@ def _roll_mix(schedule: MixSchedule, tree):
     return jax.tree.map(leaf, tree)
 
 
-def _matching_masks(schedule: MixSchedule, key, link_failure_prob: float,
+def _p_active(link_failure_prob) -> bool:
+    """Static host-side check: does this (scalar or per-edge array) dropout
+    probability ever fire? Arrays come from the SNR-outage transport path."""
+    return bool(np.any(np.asarray(link_failure_prob, np.float64) > 0.0))
+
+
+def _matching_masks(schedule: MixSchedule, key, link_failure_prob,
                     gossip_pairs: int):
     """Per-round (M, K) activation mask, symmetric per edge, from a key.
 
     Link dropout: per matching, draw u ~ U(K) per node and give edge (i, j)
     the symmetric uniform value (u_i + u_j) mod 1 — both endpoints see the
-    same coin, so the realized Ω_t stays symmetric. Gossip-pair sampling:
-    keep only ``gossip_pairs`` matchings, chosen uniformly per round.
-    Everything is shape-static, so the caller's round stays jit-pure.
+    same coin, so the realized Ω_t stays symmetric. ``link_failure_prob``
+    may be a scalar or a per-matching, per-node (M, K) array (the SNR
+    outage path); the array must itself be edge-symmetric
+    (p[m, i] == p[m, perm_m[i]]) to preserve the symmetric realization.
+    Gossip-pair sampling: keep only ``gossip_pairs`` matchings, chosen
+    uniformly per round. Everything is shape-static, so the caller's round
+    stays jit-pure.
     """
     m, k = schedule.perms.shape
     perms = jnp.asarray(schedule.perms)
     mask = jnp.ones((m, k), jnp.float32)
     kdrop, kpair = jax.random.split(key)
-    if link_failure_prob > 0.0:
+    if _p_active(link_failure_prob):
+        p = jnp.asarray(link_failure_prob, jnp.float32)
         u = jax.random.uniform(kdrop, (m, k))
         u_peer = jnp.take_along_axis(u, perms, axis=1)
         edge_coin = jnp.mod(u + u_peer, 1.0)
-        mask = mask * (edge_coin >= link_failure_prob).astype(jnp.float32)
+        mask = mask * (edge_coin >= p).astype(jnp.float32)
     if gossip_pairs > 0 and gossip_pairs < m:
         chosen = jax.random.choice(kpair, m, (gossip_pairs,), replace=False)
         sel = jnp.zeros((m,), jnp.float32).at[chosen].set(1.0)
@@ -111,7 +122,7 @@ def _matching_masks(schedule: MixSchedule, key, link_failure_prob: float,
 
 
 def schedule_mix(schedule: MixSchedule, tree, key=None, *,
-                 link_failure_prob: float = 0.0, gossip_pairs: int = 0):
+                 link_failure_prob=0.0, gossip_pairs: int = 0):
     """Sparse Ω-mixing as a sum of matching permutations (Laplacian form).
 
     ``x + Σ_m mask_m·w_m·(x[perm_m] - x)`` is symmetric doubly stochastic
@@ -122,7 +133,7 @@ def schedule_mix(schedule: MixSchedule, tree, key=None, *,
     m = schedule.num_perms
     if m == 0:
         return tree
-    time_varying = key is not None and (link_failure_prob > 0.0
+    time_varying = key is not None and (_p_active(link_failure_prob)
                                         or 0 < gossip_pairs < m)
     if not time_varying and schedule.shifts is not None:
         return _roll_mix(schedule, tree)
@@ -146,16 +157,19 @@ def schedule_mix(schedule: MixSchedule, tree, key=None, *,
 
 
 def plan_mixer(omega: np.ndarray, config: Optional[TopologyConfig] = None,
-               use_ring: bool = True):
+               use_ring: bool = True, force_tv: bool = False):
     """Decide the lowering for Ω: (mode, schedule).
 
     ``mode`` is one of ``"identity"`` (K=1 / no edges), ``"dense"`` (the
     all-gather oracle: deg ≥ K-1 or K ≤ 2 — no cheaper than K-1 permutes),
     ``"schedule"`` (static sparse mixer), or ``"schedule_tv"`` (per-round
     masks from ``config.link_failure_prob`` / ``config.gossip_pairs``).
-    Single source of truth: ``make_mixer`` executes this decision and
-    reporting code (launch/train, bench_topology_sweep) prints it, so the
-    wire numbers shown always describe the lowering that runs.
+    ``force_tv`` requests the time-varying schedule even when the config
+    knobs are 0 — the transport layer's SNR-outage path supplies per-edge
+    probabilities of its own. Single source of truth: ``make_mixer``
+    executes this decision and reporting code (launch/train,
+    bench_topology_sweep) prints it, so the wire numbers shown always
+    describe the lowering that runs.
     """
     om = np.asarray(omega, np.float64)
     k = om.shape[0]
@@ -167,39 +181,64 @@ def plan_mixer(omega: np.ndarray, config: Optional[TopologyConfig] = None,
     # schedule is requested): skip the O(E·deg) matching decomposition
     adj = (np.abs(om) > 1e-12) & ~np.eye(k, dtype=bool)
     max_deg = int(adj.sum(axis=1).max())
-    if p_drop == 0.0 and pairs == 0 and (k <= 2 or max_deg >= k - 1):
+    if (p_drop == 0.0 and pairs == 0 and not force_tv
+            and (k <= 2 or max_deg >= k - 1)):
         return "dense", None
     schedule = build_schedule(om)
     if schedule.num_perms == 0:
         return "dense", schedule
-    if p_drop > 0.0 or 0 < pairs < schedule.num_perms:
+    if p_drop > 0.0 or force_tv or 0 < pairs < schedule.num_perms:
         return "schedule_tv", schedule
     if k <= 2 or schedule.num_perms >= k - 1 or not use_ring:
         return "dense", schedule
     return "schedule", schedule
 
 
+def _tv_probs(schedule: MixSchedule, config: Optional[TopologyConfig],
+              link_probs: Optional[Callable]):
+    """Effective per-edge dropout probabilities for a time-varying mixer.
+
+    Config dropout (scalar p1) and transport outage (per-edge p2 from
+    ``link_probs(schedule)``, e.g. the SNR Rayleigh model) are independent
+    failure mechanisms: a link is up iff both keep it, so the combined
+    probability is 1 - (1-p1)(1-p2). Computed once on the host; the
+    per-round coins stay a single symmetric draw per edge.
+    """
+    p_cfg = float(config.link_failure_prob) if config is not None else 0.0
+    if link_probs is None:
+        return p_cfg
+    p_link = np.asarray(link_probs(schedule), np.float64)
+    if p_link.shape != schedule.perms.shape:
+        raise ValueError(f"link_probs returned shape {p_link.shape}, "
+                         f"schedule needs {schedule.perms.shape}")
+    return np.asarray(1.0 - (1.0 - p_cfg) * (1.0 - p_link), np.float32)
+
+
 def make_mixer(omega: np.ndarray, topology: Optional[str] = None,
                use_ring: bool = True, *,
-               config: Optional[TopologyConfig] = None) -> Callable:
+               config: Optional[TopologyConfig] = None,
+               link_probs: Optional[Callable] = None) -> Callable:
     """Build mix(tree, key=None) -> tree for any graph (leaves lead with K).
 
     Executes the cheapest exact lowering per :func:`plan_mixer`: schedule
     mixer (rolls when circulant) for sparse graphs, per-round masked
     schedule for time-varying configs, dense all-gather oracle otherwise.
-    ``topology``/``use_ring`` are accepted for back compatibility; the
-    graph family is inferred from Ω's sparsity, so no string dispatch
-    remains.
+    ``link_probs`` is an optional ``schedule -> (M, K)`` callable of
+    per-edge outage probabilities (the transport layer's SNR model),
+    composed with the config's scalar dropout. ``topology``/``use_ring``
+    are accepted for back compatibility; the graph family is inferred from
+    Ω's sparsity, so no string dispatch remains.
     """
     om = np.asarray(omega, np.float64)
-    mode, schedule = plan_mixer(om, config, use_ring)
+    mode, schedule = plan_mixer(om, config, use_ring,
+                                force_tv=link_probs is not None)
     if mode == "identity":
         return lambda tree, key=None: tree
     if mode == "dense":
         return lambda tree, key=None: dense_mix(om, tree)
     if mode == "schedule_tv":
-        p_drop = float(config.link_failure_prob)
-        pairs = int(config.gossip_pairs)
+        p_drop = _tv_probs(schedule, config, link_probs)
+        pairs = int(config.gossip_pairs) if config is not None else 0
         return lambda tree, key=None: schedule_mix(
             schedule, tree, key, link_failure_prob=p_drop, gossip_pairs=pairs)
     return lambda tree, key=None: schedule_mix(schedule, tree)
@@ -395,7 +434,7 @@ def _shard_partner(x, ex: _MatchingExchange, r, ctx: ShardContext):
 
 def _shard_schedule_mix(schedule: MixSchedule, plan: ShardMixPlan, tree,
                         ctx: ShardContext, key=None, *,
-                        link_failure_prob: float = 0.0, gossip_pairs: int = 0):
+                        link_failure_prob=0.0, gossip_pairs: int = 0):
     """Sharded :func:`schedule_mix`, bitwise identical per node.
 
     The per-round dropout/pair masks are realized exactly as on the host —
@@ -407,7 +446,7 @@ def _shard_schedule_mix(schedule: MixSchedule, plan: ShardMixPlan, tree,
     m = schedule.num_perms
     if m == 0:
         return tree
-    time_varying = key is not None and (link_failure_prob > 0.0
+    time_varying = key is not None and (_p_active(link_failure_prob)
                                         or 0 < gossip_pairs < m)
     if not time_varying and schedule.shifts is not None:
         return _shard_roll_mix(schedule, tree, ctx)
@@ -450,23 +489,27 @@ def _shard_dense_mix(omega, tree, ctx: ShardContext):
 
 
 def make_shard_mixer(omega: np.ndarray, ctx: ShardContext, *,
-                     config: Optional[TopologyConfig] = None
+                     config: Optional[TopologyConfig] = None,
+                     link_probs: Optional[Callable] = None
                      ) -> Tuple[Callable, ShardMixStats]:
     """Build the SPMD mixer: mix(tree, key) to be called *inside* shard_map.
 
     Executes the same lowering decision as :func:`plan_mixer` — identity /
     dense all-gather / static schedule (roll fast path when circulant) /
     per-round masked schedule — with the node axis sharded over
-    ``ctx.axis_name``. Per-node outputs are bitwise identical to the
-    single-device mixer on the gathered axis. Returns the mixer and its
-    :class:`ShardMixStats` row accounting.
+    ``ctx.axis_name``. ``link_probs`` composes per-edge transport outage
+    with the config dropout exactly as on the host path (the masks are
+    drawn from the replicated key, so realizations match bit for bit; the
+    ppermute pattern itself stays static). Per-node outputs are bitwise
+    identical to the single-device mixer on the gathered axis. Returns the
+    mixer and its :class:`ShardMixStats` row accounting.
     """
     om = np.asarray(omega, np.float64)
     k = om.shape[0]
     if k % ctx.num_shards:
         raise ValueError(f"K={k} not divisible by {ctx.num_shards} shards")
     lk = k // ctx.num_shards
-    mode, schedule = plan_mixer(om, config)
+    mode, schedule = plan_mixer(om, config, force_tv=link_probs is not None)
     if mode == "identity":
         return (lambda tree, key=None: tree), ShardMixStats("identity", 0, 0)
     if mode == "dense":
@@ -475,8 +518,8 @@ def make_shard_mixer(omega: np.ndarray, ctx: ShardContext, *,
         return (lambda tree, key=None: _shard_dense_mix(om, tree, ctx)), stats
     plan = plan_shard_mix(schedule, ctx.num_shards)
     if mode == "schedule_tv":
-        p_drop = float(config.link_failure_prob)
-        pairs = int(config.gossip_pairs)
+        p_drop = _tv_probs(schedule, config, link_probs)
+        pairs = int(config.gossip_pairs) if config is not None else 0
         stats = ShardMixStats("schedule_tv",
                               plan.cross_rows_per_shard / lk,
                               plan.intra_rows_per_shard / lk)

@@ -1,0 +1,528 @@
+"""Lossy D2D transport under the gossip layer (DESIGN.md §11).
+
+PR 3 made the wire real at the *codec* level: :class:`WirePayload` packs the
+buffers a radio would ship and measures their bytes. This module makes the
+link itself real: payloads are fragmented into MTU-bounded frames with
+LEN/SEQ/CRC headers, frames are erased by seed-deterministic loss draws,
+and what the neighbors decode is only what survived — the paper's 99%
+communication cut composed with the erasure regime an IIoT deployment
+actually lives in (channel-driven D2D, arXiv 2210.10502).
+
+Two execution levels share one frame-layout arithmetic:
+
+* **Host byte codec** — :func:`fragment` / :func:`reassemble` operate on
+  real byte strings (``struct``-packed headers, zlib CRC-32). Used by the
+  fault-injection harness, the golden wire-format tests, and any future
+  off-device radio backend.
+* **In-round erasure model** — inside jit, frames are never materialized;
+  instead each leaf's static frame layout maps stage-0 codec records to
+  frame indices, a PRNG-pure loss model draws per-frame keep masks, and
+  the decoded delta is masked through the stage-0 scatter. Shapes are
+  static, so the loss path traces cleanly under ``lax.scan``/``shard_map``
+  and is bitwise identical across the Host/Scan/Shard engines (masks key
+  off the round key and the node's *global* id).
+
+Loss models (all PRNG-pure, seed-deterministic):
+
+* :class:`BernoulliLoss` — iid per-frame erasure, scalar or per-node rates
+  (per-node rates give asymmetric loss; rate 1.0 is a dead transmitter).
+* :class:`GilbertElliottLoss` — two-state burst channel: frames erase at
+  ``loss_good``/``loss_bad`` depending on a Markov good/bad state that
+  enters bad episodes with ``p_enter`` and recovers with ``p_exit``.
+* :class:`FixedMaskLoss` — drop an explicit frame-index set (deterministic
+  fixtures for the fault harness).
+
+Link-level loss (whole links out for a round) reuses the gossip layer's
+dropout seam: :meth:`LossyTransport.outage_probs` converts per-node SNR
+draws into a per-matching, per-edge Rayleigh outage matrix that
+``repro.core.gossip`` consumes exactly like ``link_failure_prob`` — the
+realized Ω stays symmetric doubly stochastic, so consensus analysis holds.
+
+Error feedback: the round functions update the CHOCO control sequence
+``v`` with the *delivered* delta only (``error_feedback=True``), so lost
+frames stay in the next round's residual ``θ - v`` and are re-offered to
+the compressor — the mechanism (arXiv 2209.07267) that keeps compression
+convergent under loss. With ``error_feedback=False`` the sender's ``v``
+absorbs the full delta while the neighbors' ``v̄`` only saw the survivors;
+the control sequences desynchronize and accuracy measurably degrades
+(pinned in tests/test_transport.py).
+"""
+from __future__ import annotations
+
+import struct
+import zlib
+from dataclasses import dataclass
+from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import WirePayload
+
+# Frame header: LEN (uint16, payload bytes) | SEQ (uint16) | CRC32 (uint32),
+# little-endian. 8 bytes on the air in front of every fragment.
+HEADER_FMT = "<HHI"
+HEADER_BYTES = struct.calcsize(HEADER_FMT)       # == 8
+
+# Salt folding the round key into the frame-loss stream. Distinct from the
+# kql/knoise (split) and kmix (fold_in 2) derivations inside the round
+# functions, so configuring a transport never perturbs the algorithm
+# streams — the erasure=0 path stays bitwise identical to the teleport path.
+TRANSPORT_SALT = 5
+
+
+# --------------------------------------------------------------------------
+# Host byte codec: real frames, real headers, real CRC
+# --------------------------------------------------------------------------
+
+def frame_sizes(total_bytes: int, mtu: int) -> np.ndarray:
+    """On-air byte size of every frame for a ``total_bytes`` payload.
+
+    Each frame carries at most ``mtu - HEADER_BYTES`` payload bytes plus
+    the 8-byte header; the tail frame is short. A zero-byte payload still
+    costs one (header-only) frame — the receiver needs the LEN=0 marker.
+    """
+    cap = int(mtu) - HEADER_BYTES
+    if cap <= 0:
+        raise ValueError(f"mtu {mtu} too small for the {HEADER_BYTES}-byte "
+                         f"frame header")
+    n = max(1, -(-int(total_bytes) // cap))
+    sizes = np.full(n, cap + HEADER_BYTES, np.int64)
+    sizes[-1] = total_bytes - (n - 1) * cap + HEADER_BYTES
+    return sizes
+
+
+def num_frames(total_bytes: int, mtu: int) -> int:
+    return int(frame_sizes(total_bytes, mtu).shape[0])
+
+
+def fragment(data: bytes, mtu: int) -> List[bytes]:
+    """Split ``data`` into MTU-bounded frames with LEN/SEQ/CRC headers."""
+    cap = int(mtu) - HEADER_BYTES
+    if cap <= 0:
+        raise ValueError(f"mtu {mtu} too small for the {HEADER_BYTES}-byte "
+                         f"frame header")
+    n = max(1, -(-len(data) // cap))
+    if n - 1 > np.iinfo(np.uint16).max:
+        raise ValueError(f"payload of {len(data)} bytes needs {n} frames; "
+                         f"SEQ is uint16")
+    frames = []
+    for seq in range(n):
+        chunk = data[seq * cap:(seq + 1) * cap]
+        hdr = struct.pack(HEADER_FMT, len(chunk), seq,
+                          zlib.crc32(chunk) & 0xFFFFFFFF)
+        frames.append(hdr + chunk)
+    return frames
+
+
+def parse_frame(frame: bytes) -> Optional[Tuple[int, bytes]]:
+    """Validate one frame; returns ``(seq, payload)`` or ``None`` if the
+    frame is truncated, over-long, or fails its CRC."""
+    if len(frame) < HEADER_BYTES:
+        return None
+    length, seq, crc = struct.unpack(HEADER_FMT, frame[:HEADER_BYTES])
+    payload = frame[HEADER_BYTES:]
+    if len(payload) != length:
+        return None
+    if (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
+        return None
+    return seq, payload
+
+
+def reassemble(frames: Sequence[Optional[bytes]], total_bytes: int,
+               mtu: int) -> Tuple[bytes, np.ndarray]:
+    """Reassemble a ``total_bytes`` payload from (possibly lost, corrupt,
+    or out-of-order) frames.
+
+    Returns ``(data, received)``: missing regions are zero-filled and
+    ``received`` is the per-frame delivery mask (CRC failures count as
+    lost). SEQ restores ordering, so the caller may shuffle frames.
+    """
+    sizes = frame_sizes(total_bytes, mtu)
+    cap = int(mtu) - HEADER_BYTES
+    n = sizes.shape[0]
+    received = np.zeros(n, bool)
+    out = bytearray(total_bytes)
+    for frame in frames:
+        if frame is None:
+            continue
+        parsed = parse_frame(frame)
+        if parsed is None:
+            continue
+        seq, payload = parsed
+        if seq >= n or len(payload) != sizes[seq] - HEADER_BYTES:
+            continue
+        out[seq * cap:seq * cap + len(payload)] = payload
+        received[seq] = True
+    return bytes(out), received
+
+
+def serialize_payload(payload: WirePayload) -> bytes:
+    """The canonical on-air byte string of a packed :class:`WirePayload`.
+
+    Per leaf in treedef order: the final wire carrier, then every stage's
+    sidecar buffers with keys sorted — each buffer as raw little-endian
+    C-order bytes. Static metadata (specs, stages) is the codec contract
+    both endpoints share out of band, exactly like the PRNG-derivable
+    rand-k index sets. ``len(serialize_payload(p)) == p.measured_bytes()``
+    by construction, which the tests pin.
+    """
+    chunks: List[bytes] = []
+    for entry in payload.entries:
+        chunks.append(np.asarray(entry.wire).astype(
+            np.asarray(entry.wire).dtype.newbyteorder("<")).tobytes())
+        for aux in entry.aux:
+            for k in sorted(aux):
+                buf = np.asarray(aux[k])
+                chunks.append(buf.astype(
+                    buf.dtype.newbyteorder("<")).tobytes())
+    return b"".join(chunks)
+
+
+# --------------------------------------------------------------------------
+# Loss models: PRNG-pure per-frame keep masks
+# --------------------------------------------------------------------------
+
+class LossModel:
+    """Per-frame keep-mask draw. Implementations must be PRNG-pure: the
+    mask is a function of ``(key, n_frames, node_id)`` alone."""
+
+    lossy: bool = True
+
+    def keep(self, key, n_frames: int, node_id) -> jax.Array:
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class BernoulliLoss(LossModel):
+    """iid per-frame erasure; ``rate`` is a scalar or per-node tuple
+    (per-node rates model asymmetric links; 1.0 is a dead transmitter)."""
+
+    rate: object = 0.0               # float | tuple per node
+
+    @property
+    def lossy(self) -> bool:
+        return bool(np.any(np.asarray(self.rate, np.float64) > 0.0))
+
+    def keep(self, key, n_frames: int, node_id) -> jax.Array:
+        r = np.asarray(self.rate, np.float32)
+        p = jnp.asarray(r)[node_id] if r.ndim else jnp.float32(r)
+        u = jax.random.uniform(key, (n_frames,))
+        return (u >= p).astype(jnp.float32)
+
+
+@dataclass(frozen=True)
+class GilbertElliottLoss(LossModel):
+    """Two-state burst channel (Gilbert-Elliott) over the frame sequence.
+
+    A good/bad Markov state evolves per frame (``p_enter``: good→bad,
+    ``p_exit``: bad→good; the start state is drawn from the stationary
+    distribution), and frames erase at ``loss_good``/``loss_bad``
+    depending on the state — bursty episodes instead of iid drops.
+    """
+
+    p_enter: float = 0.05
+    p_exit: float = 0.3
+    loss_good: float = 0.0
+    loss_bad: float = 1.0
+
+    @property
+    def lossy(self) -> bool:
+        return (self.loss_good > 0.0
+                or (self.loss_bad > 0.0 and self.p_enter > 0.0))
+
+    def keep(self, key, n_frames: int, node_id) -> jax.Array:
+        k0, ktrans, kloss = jax.random.split(key, 3)
+        pi_bad = self.p_enter / max(self.p_enter + self.p_exit, 1e-12)
+        bad0 = (jax.random.uniform(k0, ()) < pi_bad).astype(jnp.float32)
+        u_t = jax.random.uniform(ktrans, (n_frames,))
+        u_l = jax.random.uniform(kloss, (n_frames,))
+
+        def step(bad, us):
+            ut, ul = us
+            # state used for THIS frame, then transition for the next one
+            p_loss = jnp.where(bad > 0.5, self.loss_bad, self.loss_good)
+            keep = (ul >= p_loss).astype(jnp.float32)
+            p_flip = jnp.where(bad > 0.5, self.p_exit, self.p_enter)
+            bad = jnp.where(ut < p_flip, 1.0 - bad, bad)
+            return bad, keep
+
+        _, keeps = jax.lax.scan(step, bad0, (u_t, u_l))
+        return keeps
+
+
+@dataclass(frozen=True)
+class FixedMaskLoss(LossModel):
+    """Drop an explicit set of frame indices on every leaf and node —
+    the deterministic fixture the fault harness injects."""
+
+    drop: Tuple[int, ...] = ()
+
+    @property
+    def lossy(self) -> bool:
+        return len(self.drop) > 0
+
+    def keep(self, key, n_frames: int, node_id) -> jax.Array:
+        mask = np.ones(n_frames, np.float32)
+        for d in self.drop:
+            if 0 <= d < n_frames:
+                mask[d] = 0.0
+        return jnp.asarray(mask)
+
+
+@dataclass(frozen=True)
+class DeadNodeLoss(LossModel):
+    """Wrap a base model; listed nodes' broadcasts are fully erased."""
+
+    base: LossModel = BernoulliLoss(0.0)
+    dead: Tuple[int, ...] = ()
+
+    @property
+    def lossy(self) -> bool:
+        return self.base.lossy or len(self.dead) > 0
+
+    def keep(self, key, n_frames: int, node_id) -> jax.Array:
+        keep = self.base.keep(key, n_frames, node_id)
+        alive = jnp.ones((), jnp.float32)
+        for d in self.dead:
+            alive = alive * (jnp.asarray(node_id) != d).astype(jnp.float32)
+        return keep * alive
+
+
+def model_from_config(cfg) -> LossModel:
+    """Build the loss model a :class:`repro.config.TransportConfig` names."""
+    if cfg.loss_model == "bernoulli":
+        return BernoulliLoss(rate=cfg.erasure)
+    if cfg.loss_model == "gilbert":
+        return GilbertElliottLoss(p_enter=cfg.gilbert_p_enter,
+                                  p_exit=cfg.gilbert_p_exit,
+                                  loss_good=cfg.gilbert_loss_good,
+                                  loss_bad=cfg.gilbert_loss_bad)
+    raise ValueError(f"unknown loss model {cfg.loss_model!r}; "
+                     f"known: bernoulli, gilbert")
+
+
+# --------------------------------------------------------------------------
+# The transport: frame layouts, in-round erasure, byte/airtime accounting
+# --------------------------------------------------------------------------
+
+class LeafFraming(NamedTuple):
+    """Static framing of one leaf's wire bytes (host-side arithmetic)."""
+    nbytes: int                  # payload bytes (measured from the buffers)
+    n_frames: int
+    frame_bytes: np.ndarray      # (F,) on-air bytes incl. header
+    record_frame: np.ndarray     # flat record index -> frame index
+    record_shape: Tuple[int, ...]
+
+
+class TransportMetrics(NamedTuple):
+    """Per-node per-round accounting. ``offered``/``airtime``/``energy``
+    are static (every frame is transmitted regardless of its fate);
+    ``delivered`` is traced — the bytes whose frames survived."""
+    offered: jax.Array
+    delivered: jax.Array
+    airtime_s: jax.Array
+    energy_j: jax.Array
+
+    @staticmethod
+    def zero() -> "TransportMetrics":
+        z = jnp.float32(0.0)
+        return TransportMetrics(z, z, z, z)
+
+
+def _record_layout(payload: WirePayload, i: int):
+    """Stage-0 record shape + scatter mode for leaf ``i`` (static).
+
+    Frames carry stage-0 codec records (a survivor's value with its index
+    / quantized grid entry riding alongside, plus its share of the static
+    sidecars); losing a frame loses those records. Returns
+    ``(record_shape, mode)`` where mode is ``"scatter"`` (mask must go
+    through the sparsifier's decode to land on the dense coordinates) or
+    ``"dense"`` (records are 1:1 with the leaf's elements).
+    """
+    spec = payload.specs[i]
+    if spec.passthrough:
+        return tuple(spec.shape), "dense"
+    stage0 = payload.stages[0]
+    meta0 = spec.metas[0]
+    if stage0.kind == "sparsify" and meta0.mode != "dense":
+        if meta0.mode in ("block", "pallas"):
+            return (meta0.nb, meta0.k), "scatter"
+        return (meta0.k,), "scatter"                 # global top-k / rand-k
+    return tuple(meta0.shape), "dense"
+
+
+class LossyTransport:
+    """Frame-level erasure between ``encode()`` and ``mix(decode())``.
+
+    ``model`` overrides the config-named loss model (the fault harness
+    injects fixed masks / bursts / dead nodes this way); ``link_probs``
+    overrides the SNR-derived per-edge outage callable handed to the
+    gossip layer. ``num_nodes`` sizes the per-node SNR draws.
+    """
+
+    def __init__(self, cfg, num_nodes: int = 0,
+                 model: Optional[LossModel] = None,
+                 link_probs: Optional[Callable] = None):
+        self.cfg = cfg
+        self.num_nodes = int(num_nodes)
+        self.model = model if model is not None else model_from_config(cfg)
+        self._link_probs = link_probs
+        self._framings = {}
+
+    # -- static layout -----------------------------------------------------
+    @property
+    def lossy(self) -> bool:
+        """Frame-level loss active? False keeps the teleport path bitwise."""
+        return self.model.lossy
+
+    @property
+    def error_feedback(self) -> bool:
+        return bool(self.cfg.error_feedback)
+
+    @property
+    def has_link_outage(self) -> bool:
+        return self._link_probs is not None or self.cfg.snr_db is not None
+
+    def leaf_framing(self, nbytes: int, record_shape: Tuple[int, ...]
+                     ) -> LeafFraming:
+        """Static frame layout of one leaf: ``nbytes`` of wire spread
+        uniformly over the stage-0 records, MTU-fragmented. Record ``r``
+        owns bytes ``[r·B/E, (r+1)·B/E)`` and rides in the frame holding
+        its first byte — the integer arithmetic the host codec's
+        ``fragment`` applies to the serialized stream."""
+        key = (int(nbytes), tuple(record_shape))
+        if key not in self._framings:
+            sizes = frame_sizes(nbytes, self.cfg.mtu)
+            cap = self.cfg.mtu - HEADER_BYTES
+            e = max(1, int(np.prod(record_shape)))
+            start = np.arange(e, dtype=np.int64) * int(nbytes) // e
+            self._framings[key] = LeafFraming(
+                nbytes=int(nbytes), n_frames=int(sizes.shape[0]),
+                frame_bytes=sizes, record_frame=(start // cap),
+                record_shape=tuple(record_shape))
+        return self._framings[key]
+
+    # -- airtime / energy (the cost an IIoT deployment pays) ---------------
+    def airtime_s(self, on_air_bytes: float) -> float:
+        return float(on_air_bytes) * 8.0 / float(self.cfg.phy_rate_bps)
+
+    def energy_j(self, on_air_bytes: float) -> float:
+        return self.airtime_s(on_air_bytes) * float(self.cfg.tx_power_w)
+
+    def account_dense(self, nbytes: int) -> TransportMetrics:
+        """Static accounting for a dense (uncompressed) exchange — the
+        dsgld baseline: frames offered and the airtime they cost, with no
+        frame-level erasure modeled (no codec, no error feedback)."""
+        offered = float(frame_sizes(nbytes, self.cfg.mtu).sum())
+        return TransportMetrics(
+            offered=jnp.float32(offered), delivered=jnp.float32(offered),
+            airtime_s=jnp.float32(self.airtime_s(offered)),
+            energy_j=jnp.float32(self.energy_j(offered)))
+
+    # -- the in-round erasure path ------------------------------------------
+    def keep_masks(self, payload: WirePayload, key, node_id):
+        """Per-frame loss draws for one node's payload.
+
+        Returns ``(dense_keep, delivered_bytes, offered_bytes)`` where
+        ``dense_keep`` is a pytree of {0,1} f32 masks on the *decoded*
+        (dense) coordinates — each leaf's per-frame keep mask gathered to
+        its stage-0 records and scattered through the sparsifier's index
+        map — and the byte counts include frame headers (offered is
+        static, delivered traced). PRNG-pure: everything derives from
+        ``key`` (already folded per node) and the static layout.
+        """
+        per_leaf_nbytes = payload.per_leaf_bytes()
+        keep_leaves = []
+        delivered = jnp.float32(0.0)
+        offered = 0.0
+        for i, (entry, spec) in enumerate(zip(payload.entries,
+                                              payload.specs)):
+            rec_shape, mode = _record_layout(payload, i)
+            fr = self.leaf_framing(per_leaf_nbytes[i], rec_shape)
+            kleaf = jax.random.fold_in(key, i)
+            keep_f = self.model.keep(kleaf, fr.n_frames, node_id)
+            offered += float(fr.frame_bytes.sum())
+            delivered = delivered + jnp.dot(
+                keep_f, jnp.asarray(fr.frame_bytes, jnp.float32))
+            keep_rec = keep_f[jnp.asarray(fr.record_frame)].reshape(
+                fr.record_shape)
+            if mode == "scatter":
+                stage0 = payload.stages[0]
+                keep_leaves.append(stage0.decode(keep_rec, entry.aux[0],
+                                                 spec.metas[0]))
+            else:
+                keep_leaves.append(keep_rec.reshape(spec.shape))
+        keep_tree = jax.tree.unflatten(payload.treedef, keep_leaves)
+        return keep_tree, delivered, jnp.float32(offered)
+
+    def deliver(self, pipeline, payload: WirePayload, key, node_id):
+        """decode + erase for one node: ``(delta_full, delta_delivered,
+        TransportMetrics)``. ``delta_full`` is the lossless decode (what a
+        feedback-less sender believes it sent); ``delta_delivered`` is
+        what actually landed on the neighbors."""
+        delta_full = pipeline.decode(payload)
+        if not self.lossy:
+            m = self._static_metrics(payload)
+            return delta_full, delta_full, m
+        keep, delivered, offered = self.keep_masks(payload, key, node_id)
+        delta_del = jax.tree.map(
+            lambda x, k: (x.astype(jnp.float32) * k).astype(x.dtype),
+            delta_full, keep)
+        airtime = self.airtime_s(1.0) * offered
+        return delta_full, delta_del, TransportMetrics(
+            offered=offered, delivered=delivered,
+            airtime_s=jnp.float32(airtime),
+            energy_j=jnp.float32(airtime * float(self.cfg.tx_power_w)))
+
+    def _static_metrics(self, payload: WirePayload) -> TransportMetrics:
+        offered = 0.0
+        for i, nbytes in enumerate(payload.per_leaf_bytes()):
+            offered += float(frame_sizes(nbytes, self.cfg.mtu).sum())
+        return TransportMetrics(
+            offered=jnp.float32(offered), delivered=jnp.float32(offered),
+            airtime_s=jnp.float32(self.airtime_s(offered)),
+            energy_j=jnp.float32(self.energy_j(offered)))
+
+    # -- SNR-parameterized link outage (the gossip dropout seam) ------------
+    def snr_per_node(self) -> np.ndarray:
+        """Per-node mean link SNR in dB: ``snr_db`` plus seed-deterministic
+        lognormal shadowing (``snr_spread_db`` standard deviation)."""
+        rng = np.random.default_rng(int(self.cfg.seed) + 0x5EED)
+        base = float(self.cfg.snr_db if self.cfg.snr_db is not None else 0.0)
+        return base + float(self.cfg.snr_spread_db) * rng.standard_normal(
+            self.num_nodes)
+
+    def outage_probs(self, schedule) -> np.ndarray:
+        """Per-matching, per-edge Rayleigh outage matrix (M, K) for the
+        gossip layer's dropout seam: edge (k, perm_m[k]) fails for a round
+        with ``1 - exp(-γ_th/γ̄)`` at the weaker endpoint's mean SNR —
+        symmetric per edge (min is symmetric), so the realized Ω stays
+        doubly stochastic.
+        """
+        if self._link_probs is not None:
+            return np.asarray(self._link_probs(schedule), np.float64)
+        snr_db = self.snr_per_node()
+        if schedule.k != self.num_nodes:
+            raise ValueError(f"schedule over {schedule.k} nodes but the "
+                             f"transport was built for {self.num_nodes}")
+        gamma = 10.0 ** (snr_db / 10.0)
+        gamma_th = 10.0 ** (float(self.cfg.snr_threshold_db) / 10.0)
+        edge_gamma = np.minimum(gamma[None, :], gamma[schedule.perms])
+        p = 1.0 - np.exp(-gamma_th / np.maximum(edge_gamma, 1e-12))
+        # fixed points (unmatched rows) have no edge: no outage to draw
+        p[schedule.perms == np.arange(schedule.k)[None, :]] = 0.0
+        return p
+
+
+def resolve_transport(fed_cfg, transport: Optional[LossyTransport] = None
+                      ) -> Optional[LossyTransport]:
+    """The transport a round function should use: an explicit override, or
+    one built from ``fed_cfg.transport`` (None = today's teleport path)."""
+    if transport is not None:
+        return transport
+    tcfg = getattr(fed_cfg, "transport", None)
+    if tcfg is None:
+        return None
+    return LossyTransport(tcfg, num_nodes=fed_cfg.num_nodes)

@@ -63,6 +63,25 @@ def _parse_args():
                     help=">0: activate only this many matchings per round")
     ap.add_argument("--topo-seed", type=int, default=0,
                     help="graph-sampling seed (erdos_renyi/geometric)")
+    ap.add_argument("--transport", action="store_true",
+                    help="frame the wire payloads (MTU fragmentation + "
+                         "header/airtime accounting) even at zero loss")
+    ap.add_argument("--mtu", type=int, default=256,
+                    help="transport frame MTU in bytes (8-byte header)")
+    ap.add_argument("--erasure", type=float, default=0.0,
+                    help=">0: per-frame Bernoulli erasure rate (implies "
+                         "--transport; error feedback re-offers lost mass)")
+    ap.add_argument("--loss-model", default="bernoulli",
+                    choices=["bernoulli", "gilbert"],
+                    help="frame-loss process (gilbert: bursty episodes)")
+    ap.add_argument("--snr-db", type=float, default=None,
+                    help="mean link SNR: enables the Rayleigh per-link "
+                         "outage model on the gossip schedule")
+    ap.add_argument("--snr-spread-db", type=float, default=0.0,
+                    help="per-node lognormal shadowing std dev (dB)")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="ablation: sender's control sequence absorbs the "
+                         "full delta even when frames were lost")
     ap.add_argument("--compressor", default="block_topk")
     ap.add_argument("--pipeline", default="",
                     help="codec pipeline DSL, e.g. 'block_topk|qsgd' "
@@ -129,6 +148,13 @@ def main():
         radius=args.radius, seed=args.topo_seed,
         link_failure_prob=args.link_failure, gossip_pairs=args.gossip_pairs,
     )
+    tcfg = None
+    if args.transport or args.erasure > 0 or args.snr_db is not None:
+        from repro.config import TransportConfig
+        tcfg = TransportConfig(
+            mtu=args.mtu, erasure=args.erasure, loss_model=args.loss_model,
+            snr_db=args.snr_db, snr_spread_db=args.snr_spread_db,
+            error_feedback=not args.no_error_feedback)
     fed = FedConfig(
         num_nodes=args.nodes, local_steps=args.local_steps,
         eta=args.eta, zeta=args.zeta, topology=args.topology,
@@ -136,6 +162,7 @@ def main():
         compressor=args.compressor, pipeline=args.pipeline,
         compress_ratio=args.ratio,
         algorithm=args.algorithm,
+        transport=tcfg,
     )
     topo = build_topology(topo_cfg, fed.num_nodes)
     omega = topo.omega
@@ -158,8 +185,11 @@ def main():
     # dsgld gossips uncompressed θ; the compressed algorithms ship Q(Δθ)
     wire = (n_params * 4 if args.algorithm == "dsgld"
             else comp.wire_bytes(params0))
-    # report exactly the lowering make_mixer will execute (same decision fn)
-    mode, sched = plan_mixer(omega, topo_cfg)
+    # report exactly the lowering make_mixer will execute (same decision fn;
+    # an SNR outage model forces the time-varying schedule)
+    mode, sched = plan_mixer(omega, topo_cfg,
+                             force_tv=tcfg is not None
+                             and tcfg.snr_db is not None)
     n_perms = sched.num_perms if sched else 0
     if mode.startswith("schedule"):
         # expected payloads/round: gossip-pair sampling activates only
@@ -187,6 +217,12 @@ def main():
           f"{dense_wire_bytes(fed.num_nodes, wire)/1e6:.3f}MB)"
           + (f" link_failure={args.link_failure}" if args.link_failure else "")
           + (f" gossip_pairs={args.gossip_pairs}" if args.gossip_pairs else ""))
+    if tcfg is not None:
+        print(f"transport: mtu={tcfg.mtu}B (+8B header/frame) "
+              f"loss={tcfg.loss_model}@{tcfg.erasure:g} "
+              + (f"snr={tcfg.snr_db:g}±{tcfg.snr_spread_db:g}dB "
+                 if tcfg.snr_db is not None else "")
+              + f"error_feedback={'on' if tcfg.error_feedback else 'OFF'}")
 
     # per-node synthetic pool, resident on device; rounds gather minibatch
     # index tensors from the round key inside the engine (no per-round H2D)
@@ -266,6 +302,15 @@ def main():
                   f"@{args.eval_severity:g}] acc={rep.accuracy:.4f} "
                   f"ece={rep.ece:.4f} nll={rep.nll:.4f} "
                   f"gap={rep.overconf_gap:+.4f}")
+    offered = getattr(engine, "last_offered_history", [])
+    if offered and float(offered[-1]) > 0:
+        delivered = float(engine.last_delivered_history[-1])
+        frac = delivered / float(offered[-1])
+        print(f"transport accounting: offered "
+              f"{float(offered[-1]):.0f}B/node/round, delivered "
+              f"{delivered:.0f}B ({100 * frac:.1f}%), airtime "
+              f"{1e3 * float(engine.last_airtime_history[-1]):.2f}ms, "
+              f"energy {1e3 * float(engine.last_energy_history[-1]):.2f}mJ")
     cross = getattr(engine, "last_cross_history", [])
     if cross and cross[-1] > 0:
         # only the explicit-collective path accounts its ppermute traffic;

@@ -68,9 +68,46 @@ class ChunkMetrics(NamedTuple):
     delta_norm: jax.Array         # (chunk,)
     wire: jax.Array               # (chunk,) measured bytes/node/round
     cross: jax.Array              # (chunk,) cross-shard bytes/node/round
+    # lossy-transport columns (all 0 when no transport is configured):
+    offered: jax.Array            # (chunk,) on-air bytes/node/round offered
+    delivered: jax.Array          # (chunk,) bytes/node/round delivered
+    airtime: jax.Array            # (chunk,) TX airtime s/node/round
+    energy: jax.Array             # (chunk,) TX energy J/node/round
 
 
 LogCb = Callable[[int, float, float], None]
+
+# engine attribute -> ChunkMetrics field for the per-round histories every
+# engine exposes after run() (the trainer collects them by these names)
+_HISTORY_FIELDS = (
+    ("last_wire_history", "wire"),          # bytes/node/round
+    ("last_cross_history", "cross"),        # cross-shard bytes/node/round
+    ("last_offered_history", "offered"),    # transport on-air bytes offered
+    ("last_delivered_history", "delivered"),  # transport bytes delivered
+    ("last_airtime_history", "airtime"),    # transport TX airtime s
+    ("last_energy_history", "energy"),      # transport TX energy J
+)
+
+
+def _init_histories(engine) -> None:
+    for attr, _ in _HISTORY_FIELDS:
+        setattr(engine, attr, [])
+
+
+def _reset_histories(engine) -> dict:
+    """Fresh per-run history lists, installed on the engine and returned
+    keyed by ChunkMetrics field name for the run loop to extend."""
+    out = {}
+    for attr, field in _HISTORY_FIELDS:
+        lst: List[float] = []
+        setattr(engine, attr, lst)
+        out[field] = lst
+    return out
+
+
+def _extend_histories(hists: dict, ms: ChunkMetrics) -> None:
+    for field, lst in hists.items():
+        lst.extend(np.asarray(getattr(ms, field), np.float64).tolist())
 
 
 class ScanRoundEngine:
@@ -88,8 +125,7 @@ class ScanRoundEngine:
         self.bank = bank
         self.default_chunk = int(default_chunk)
         self._chunk_fns = {}              # static chunk length -> compiled fn
-        self.last_wire_history: List[float] = []   # bytes/node/round
-        self.last_cross_history: List[float] = []  # cross-shard bytes/node
+        _init_histories(self)
 
     # -- one round, traced inside the scan --------------------------------
     def _body(self, carry: EngineCarry, t) -> Tuple[EngineCarry, ChunkMetrics]:
@@ -106,6 +142,10 @@ class ScanRoundEngine:
             delta_norm=metrics.delta_norm,
             wire=metrics.wire_bytes,
             cross=jnp.float32(metrics.cross_bytes),
+            offered=jnp.float32(metrics.offered_bytes),
+            delivered=jnp.float32(metrics.delivered_bytes),
+            airtime=jnp.float32(metrics.airtime_s),
+            energy=jnp.float32(metrics.energy_j),
         )
         return EngineCarry(state, key, bank), ms
 
@@ -133,10 +173,7 @@ class ScanRoundEngine:
         chunk = log_every if log_every > 0 else min(rounds, self.default_chunk)
         losses: List[float] = []
         cons: List[float] = []
-        wires: List[float] = []
-        crosses: List[float] = []
-        self.last_wire_history = wires
-        self.last_cross_history = crosses
+        hists = _reset_histories(self)
         done = 0
         while done < rounds:
             n = min(chunk, rounds - done)
@@ -144,8 +181,7 @@ class ScanRoundEngine:
                                                              jnp.int32))
             losses.extend(np.asarray(ms.loss, np.float64).tolist())
             cons.extend(np.asarray(ms.consensus, np.float64).tolist())
-            wires.extend(np.asarray(ms.wire, np.float64).tolist())
-            crosses.extend(np.asarray(ms.cross, np.float64).tolist())
+            _extend_histories(hists, ms)
             done += n
             # same cadence as the host loop: only exact log_every multiples
             # (a non-aligned remainder chunk does not emit a log line)
@@ -172,8 +208,7 @@ class HostRoundEngine:
         self.local_steps = int(local_steps)
         self.minibatch = int(minibatch)
         self.bank = bank                  # config only: burn_in/thin/capacity
-        self.last_wire_history: List[float] = []   # bytes/node/round
-        self.last_cross_history: List[float] = []  # cross-shard bytes/node
+        _init_histories(self)
 
     def make_bank(self) -> Optional[SampleBank]:
         if self.bank is None:
@@ -186,10 +221,7 @@ class HostRoundEngine:
             log_every: int = 0, log_cb: Optional[LogCb] = None):
         losses: List[float] = []
         cons: List[float] = []
-        wires: List[float] = []
-        crosses: List[float] = []
-        self.last_wire_history = wires
-        self.last_cross_history = crosses
+        hists = _reset_histories(self)
         for i in range(rounds):
             t = t0 + i
             key, kround = jax.random.split(key)
@@ -198,8 +230,12 @@ class HostRoundEngine:
             state, metrics = self.round_fn(state, batches, kround)
             losses.append(float(jnp.mean(metrics.loss)))
             cons.append(float(metrics.consensus_error))
-            wires.append(float(metrics.wire_bytes))
-            crosses.append(float(metrics.cross_bytes))
+            hists["wire"].append(float(metrics.wire_bytes))
+            hists["cross"].append(float(metrics.cross_bytes))
+            hists["offered"].append(float(metrics.offered_bytes))
+            hists["delivered"].append(float(metrics.delivered_bytes))
+            hists["airtime"].append(float(metrics.airtime_s))
+            hists["energy"].append(float(metrics.energy_j))
             if self.bank is not None and bank_state is not None:
                 # same admit rule as DeviceSampleBank.admit_mask for rounds
                 # visited sequentially: t >= burn_in, (t - burn_in) % thin == 0
@@ -260,8 +296,7 @@ class ShardRoundEngine:
         self.bank = bank
         self.default_chunk = int(default_chunk)
         self._chunk_fns = {}
-        self.last_wire_history: List[float] = []
-        self.last_cross_history: List[float] = []
+        _init_histories(self)
 
     # -- spec/placement helpers -------------------------------------------
     def _carry_specs(self, carry: EngineCarry):
@@ -310,6 +345,10 @@ class ShardRoundEngine:
             delta_norm=metrics.delta_norm,
             wire=metrics.wire_bytes,
             cross=jnp.float32(metrics.cross_bytes),
+            offered=jnp.float32(metrics.offered_bytes),
+            delivered=jnp.float32(metrics.delivered_bytes),
+            airtime=jnp.float32(metrics.airtime_s),
+            energy=jnp.float32(metrics.energy_j),
         )
         return EngineCarry(state, key, bank), ms
 
@@ -318,7 +357,7 @@ class ShardRoundEngine:
             carry_specs = self._carry_specs(carry)
             data_specs = (jax.tree.map(lambda _: P(self.fed_axis),
                                        self.shards.data), P(self.fed_axis))
-            metric_specs = ChunkMetrics(P(), P(), P(), P(), P())
+            metric_specs = ChunkMetrics(*([P()] * len(ChunkMetrics._fields)))
 
             def local_chunk(data_sizes, carry, t0):
                 data, sizes = data_sizes
@@ -344,10 +383,7 @@ class ShardRoundEngine:
         chunk = log_every if log_every > 0 else min(rounds, self.default_chunk)
         losses: List[float] = []
         cons: List[float] = []
-        wires: List[float] = []
-        crosses: List[float] = []
-        self.last_wire_history = wires
-        self.last_cross_history = crosses
+        hists = _reset_histories(self)
         done = 0
         while done < rounds:
             n = min(chunk, rounds - done)
@@ -355,8 +391,7 @@ class ShardRoundEngine:
                 data_sizes, carry, jnp.asarray(t0 + done, jnp.int32))
             losses.extend(np.asarray(ms.loss, np.float64).tolist())
             cons.extend(np.asarray(ms.consensus, np.float64).tolist())
-            wires.extend(np.asarray(ms.wire, np.float64).tolist())
-            crosses.extend(np.asarray(ms.cross, np.float64).tolist())
+            _extend_histories(hists, ms)
             done += n
             if log_cb is not None and log_every and done % log_every == 0:
                 log_cb(t0 + done, losses[-1], cons[-1])

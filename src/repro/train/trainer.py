@@ -62,8 +62,17 @@ class TrainResult:
     # bytes/node/round the Ω-mixing physically moved between mesh shards
     # (ppermute/all-gather rows × row bytes; 0 off the shard engine)
     cross_shard_bytes_per_round: float = 0.0
+    # lossy-transport accounting (DESIGN.md §11; all 0 with no transport):
+    # mean on-air bytes/node/round offered to the link vs delivered (frames
+    # that survived the erasure draws), and the radio cost of the offer
+    offered_bytes_per_round: float = 0.0
+    delivered_bytes_per_round: float = 0.0
+    airtime_s_per_round: float = 0.0
+    energy_j_per_round: float = 0.0
     wire_history: List[float] = field(default_factory=list)
     cross_history: List[float] = field(default_factory=list)
+    offered_history: List[float] = field(default_factory=list)
+    delivered_history: List[float] = field(default_factory=list)
     loss_history: List[float] = field(default_factory=list)
     consensus_history: List[float] = field(default_factory=list)
     probs: Optional[np.ndarray] = None
@@ -93,7 +102,7 @@ class FedTrainer:
                  seed: int = 0, engine: str = "scan",
                  chunk: Optional[int] = None, bank_capacity: int = 40,
                  bank_thin: int = 2, mesh=None, fed_axis: str = "fed",
-                 eval_batch_size: int = 64):
+                 eval_batch_size: int = 64, transport=None):
         assert len(shards) == fed_cfg.num_nodes, "one shard per node"
         self.model = model
         self.fed_cfg = fed_cfg
@@ -110,12 +119,19 @@ class FedTrainer:
             data_scale = float(np.mean([len(s[next(iter(s))]) for s in shards]))
         self.data_scale = data_scale
 
+        # lossy D2D transport: explicit LossyTransport override (the fault
+        # harness injects custom loss models here) or fed_cfg.transport;
+        # None = ideal links (today's teleport path, bitwise unchanged)
+        from repro.core import resolve_transport
+        self.transport = resolve_transport(fed_cfg, transport)
+
         key = jax.random.PRNGKey(seed)
         params0 = model.init(key)
         self.state: FedState = init_fed_state(params0, fed_cfg, key=key)
         round_fn = make_round_fn(
             fed_cfg.algorithm, model.loss, fed_cfg, self.omega,
             self.compressor, data_scale=self.data_scale,
+            transport=self.transport,
         )
         self.round_fn = jax.jit(round_fn)   # kept for ad-hoc single rounds
         self.key = jax.random.PRNGKey(seed + 1)
@@ -138,6 +154,7 @@ class FedTrainer:
             engine_round_fn = make_round_fn(
                 fed_cfg.algorithm, model.loss, fed_cfg, self.omega,
                 self.compressor, data_scale=self.data_scale, shard_ctx=ctx,
+                transport=self.transport,
             )
         self._engine = make_engine(
             engine, engine_round_fn, self.device_shards, fed_cfg.local_steps,
@@ -192,6 +209,10 @@ class FedTrainer:
         cons: List[float] = []
         wire_hist: List[float] = []
         cross_hist: List[float] = []
+        offered_hist: List[float] = []
+        delivered_hist: List[float] = []
+        airtime_hist: List[float] = []
+        energy_hist: List[float] = []
         eval_history: List[Dict[str, float]] = []
         done = 0
         while done < rounds:
@@ -205,6 +226,14 @@ class FedTrainer:
             cons.extend(seg_cons)
             wire_hist.extend(getattr(self._engine, "last_wire_history", []))
             cross_hist.extend(getattr(self._engine, "last_cross_history", []))
+            offered_hist.extend(
+                getattr(self._engine, "last_offered_history", []))
+            delivered_hist.extend(
+                getattr(self._engine, "last_delivered_history", []))
+            airtime_hist.extend(
+                getattr(self._engine, "last_airtime_history", []))
+            energy_hist.extend(
+                getattr(self._engine, "last_energy_history", []))
             done += n
             if segment < rounds and done < rounds:
                 # in-training snapshot through the same fused eval path
@@ -228,8 +257,18 @@ class FedTrainer:
             measured_bytes_per_round=measured,
             cross_shard_bytes_per_round=(float(np.mean(cross_hist))
                                          if cross_hist else 0.0),
+            offered_bytes_per_round=(float(np.mean(offered_hist))
+                                     if offered_hist else 0.0),
+            delivered_bytes_per_round=(float(np.mean(delivered_hist))
+                                       if delivered_hist else 0.0),
+            airtime_s_per_round=(float(np.mean(airtime_hist))
+                                 if airtime_hist else 0.0),
+            energy_j_per_round=(float(np.mean(energy_hist))
+                                if energy_hist else 0.0),
             wire_history=wire_hist,
             cross_history=cross_hist,
+            offered_history=offered_hist,
+            delivered_history=delivered_hist,
             loss_history=losses, consensus_history=cons, wall_s=wall,
             eval_history=eval_history,
         )

@@ -34,6 +34,15 @@ else:
     def _sampled_from(elements):
         return _Strategy(list(elements)[0])
 
+    def _booleans():
+        return _Strategy(False)
+
+    def _binary(min_size=0, max_size=None, **_):
+        return _Strategy(b"\x00" * int(min_size))
+
+    def _lists(elements, min_size=0, max_size=None, **_):
+        return _Strategy([elements.example] * int(min_size))
+
     def _given(*args, **kwargs):
         if args:
             raise TypeError("hypothesis shim supports keyword strategies only")
@@ -73,6 +82,9 @@ else:
     _st.integers = _integers
     _st.floats = _floats
     _st.sampled_from = _sampled_from
+    _st.booleans = _booleans
+    _st.binary = _binary
+    _st.lists = _lists
     _hyp = types.ModuleType("hypothesis")
     _hyp.given = _given
     _hyp.settings = _Settings

@@ -1,0 +1,181 @@
+"""Fault-injection harness for the lossy D2D transport (DESIGN.md §11).
+
+Injects deterministic loss patterns into any engine run — the same tiny
+linear-regression federation ``tests/test_engine.py`` pins, with a
+:class:`repro.core.LossyTransport` threaded between ``encode()`` and
+``mix(decode())``. Every pattern is seed-deterministic: two runs with the
+same spec produce identical delivered-frame sets and identical
+trajectories on the Host/Scan/Shard engines.
+
+Patterns (constructors below build the loss models / link matrices):
+
+* ``fixed_drop(*frames)``      — erase an explicit frame-index set
+* ``asymmetric(rates)``        — per-node Bernoulli rates (1.0 = dead tx)
+* ``bursty(...)``              — Gilbert-Elliott burst episodes
+* ``dead_nodes(*nodes)``       — listed senders' broadcasts fully erased
+* ``dead_links(edges)``        — whole gossip edges out every round, via
+  the ``link_probs`` seam the SNR outage model also uses
+
+``run_world`` executes one configuration and returns the trajectory plus
+the byte/airtime accounting histories the engines now record.
+"""
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FedConfig, TransportConfig
+from repro.core import (BernoulliLoss, DeadNodeLoss, FixedMaskLoss,
+                        GilbertElliottLoss, LossyTransport, ShardContext,
+                        build_topology, init_fed_state, make_compressor,
+                        make_round_fn, resolve_topology)
+from repro.core.posterior import DeviceSampleBank
+from repro.data.partition import DeviceShards
+from repro.train.engine import make_engine
+
+K, L, M, DIM = 4, 3, 5, 6
+
+
+def linear_loss(params, batch, key):
+    pred = batch["x"] @ params["w"]
+    return jnp.mean((pred - batch["y"]) ** 2), ()
+
+
+def make_shards(sizes=(17, 20, 20, 13)):
+    rng = np.random.default_rng(0)
+    out = []
+    for n in sizes:
+        x = rng.normal(size=(n, DIM)).astype(np.float32)
+        w = np.arange(1.0, DIM + 1.0, dtype=np.float32) / DIM
+        out.append({"x": x, "y": (x @ w).astype(np.float32)})
+    return out
+
+
+# --------------------------------------------------------------------------
+# loss-pattern constructors
+# --------------------------------------------------------------------------
+
+def fixed_drop(*frames: int) -> FixedMaskLoss:
+    """Erase exactly the listed frame indices on every leaf and node."""
+    return FixedMaskLoss(drop=tuple(frames))
+
+
+def asymmetric(rates) -> BernoulliLoss:
+    """Per-node erasure rates (tuple of length num_nodes)."""
+    return BernoulliLoss(rate=tuple(float(r) for r in rates))
+
+
+def bursty(p_enter=0.1, p_exit=0.4, loss_good=0.0,
+           loss_bad=1.0) -> GilbertElliottLoss:
+    """Gilbert-Elliott burst episodes instead of iid drops."""
+    return GilbertElliottLoss(p_enter=p_enter, p_exit=p_exit,
+                              loss_good=loss_good, loss_bad=loss_bad)
+
+
+def dead_nodes(*nodes: int, base: Optional[object] = None) -> DeadNodeLoss:
+    """Fully erase the listed senders' broadcasts (on top of ``base``)."""
+    return DeadNodeLoss(base=base if base is not None else BernoulliLoss(0.0),
+                        dead=tuple(nodes))
+
+
+def dead_links(edges):
+    """A ``link_probs`` callable taking whole gossip edges out every round.
+
+    ``edges`` is an iterable of undirected node pairs; the returned
+    callable maps a :class:`MixSchedule` to the (M, K) per-matching
+    outage matrix the gossip layer consumes (probability 1 on the listed
+    edges, 0 elsewhere — edge-symmetric by construction).
+    """
+    es = {frozenset(map(int, e)) for e in edges}
+
+    def probs(schedule):
+        perms = np.asarray(schedule.perms)
+        p = np.zeros(perms.shape, np.float64)
+        for m in range(perms.shape[0]):
+            for k in range(perms.shape[1]):
+                j = int(perms[m, k])
+                if j != k and frozenset((k, j)) in es:
+                    p[m, k] = 1.0
+        return p
+
+    return probs
+
+
+def make_transport(model=None, link_probs=None, num_nodes=K,
+                   **cfg_kw) -> LossyTransport:
+    """A transport with an injected loss model / link-outage matrix."""
+    cfg = TransportConfig(**cfg_kw)
+    return LossyTransport(cfg, num_nodes=num_nodes, model=model,
+                          link_probs=link_probs)
+
+
+# --------------------------------------------------------------------------
+# engine runner
+# --------------------------------------------------------------------------
+
+class FaultRun(NamedTuple):
+    state: object
+    bank: object
+    losses: np.ndarray
+    cons: np.ndarray
+    wire: List[float]        # codec payload bytes/node/round
+    offered: List[float]     # framed on-air bytes/node/round (w/ headers)
+    delivered: List[float]   # bytes whose frames survived
+    airtime: List[float]     # seconds on air per node per round
+    energy: List[float]      # joules per node per round
+
+
+def _mesh(s):
+    from repro.launch.mesh import make_fed_mesh
+    return make_fed_mesh(s)
+
+
+def run_world(engine_name="host", algorithm="cdbfl", transport=None,
+              rounds=8, chunk=4, s=2, seed=1, topology="ring",
+              sizes=(17, 20, 20, 13), **fed_kw) -> FaultRun:
+    """Run ``rounds`` federated rounds with ``transport`` injected.
+
+    ``transport`` may be a :class:`LossyTransport`, a
+    :class:`TransportConfig` (built into one for ``K`` nodes), or None
+    (today's teleport path).
+    """
+    fed = FedConfig(num_nodes=K, local_steps=L, eta=5e-3, zeta=0.3,
+                    burn_in=4, compressor="topk", compress_ratio=0.5,
+                    topology=topology, algorithm=algorithm, **fed_kw)
+    if isinstance(transport, TransportConfig):
+        transport = LossyTransport(transport, num_nodes=K)
+    topo = build_topology(resolve_topology(fed), K)
+    comp = make_compressor(fed)
+    dshards = DeviceShards.from_shards(make_shards(sizes))
+    bayes = algorithm in ("cdbfl", "dsgld")
+    bank_cfg = DeviceSampleBank(burn_in=4, capacity=5, thin=2)
+    shard_ctx = ShardContext("fed", s) if engine_name == "shard" else None
+    kwargs = dict(mesh=_mesh(s)) if engine_name == "shard" else {}
+    rf = make_round_fn(algorithm, linear_loss, fed, topo.omega, comp,
+                       data_scale=10.0, shard_ctx=shard_ctx,
+                       transport=transport)
+    eng = make_engine(engine_name, rf, dshards, L, M,
+                      bank=bank_cfg if bayes else None, chunk=chunk,
+                      **kwargs)
+    params0 = {"w": jnp.zeros((DIM,))}
+    state = init_fed_state(params0, fed, key=jax.random.PRNGKey(0))
+    if not bayes:
+        bank0 = None
+    elif engine_name == "host":
+        bank0 = eng.make_bank()
+    else:
+        bank0 = bank_cfg.init(state.params)
+    state, _, bank, losses, cons = eng.run(state, jax.random.PRNGKey(seed),
+                                           bank0, rounds)
+
+    def _hist(name):
+        return [float(np.asarray(x)) for x in getattr(eng, name)]
+
+    return FaultRun(state=state, bank=bank,
+                    losses=np.asarray(losses), cons=np.asarray(cons),
+                    wire=_hist("last_wire_history"),
+                    offered=_hist("last_offered_history"),
+                    delivered=_hist("last_delivered_history"),
+                    airtime=_hist("last_airtime_history"),
+                    energy=_hist("last_energy_history"))
