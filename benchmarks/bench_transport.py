@@ -13,8 +13,15 @@ federation (K=4, topk@0.5, ring) with the transport threaded between
 * ``airtime``/``energy`` — seconds/joules on air at the configured PHY
   rate and TX power (250 kbps / 100 mW defaults, 802.15.4-class).
 
-Byte columns are machine-independent and exact (the loss draws are
-threefry-deterministic), so ``--tiny`` saves them under
+An **ARQ sweep** (DESIGN.md §12) runs the same federation over an
+erasure × max_retries grid — selective-repeat retransmission buys
+delivered bytes at the price of retransmit airtime; the saved records
+trace that Pareto frontier (``delivered_bytes_per_round`` vs
+``airtime_us_per_round``) plus the ``retransmits_per_round`` /
+``abandoned_bytes_per_round`` reliability columns.
+
+Byte and retransmit columns are machine-independent and exact (the loss
+draws are threefry-deterministic), so ``--tiny`` saves them under
 ``results/transport/`` for the CI regression gate
 (``benchmarks/check_regression.py``) to compare against the committed
 baselines bit for bit. A throughput row times the masking path's
@@ -45,6 +52,8 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "transport")
 K, L, M, DIM = 4, 3, 5, 6
 MTU = 16                      # 3 frames per 18-byte topk payload
 ERASURES = (0.0, 0.1, 0.3)
+ARQ_ERASURES = (0.1, 0.3)
+ARQ_RETRIES = (0, 1, 2)       # 0 = single-shot baseline
 
 
 def _shards():
@@ -83,31 +92,40 @@ def _run_rounds(eng, state, rounds):
     return out
 
 
+def _measure(tcfg: Optional[TransportConfig], rounds: int) -> dict:
+    eng, state = _build(tcfg)
+    _run_rounds(eng, state, rounds)
+    hist = {name: [float(np.asarray(x))
+                   for x in getattr(eng, f"last_{name}_history")]
+            for name in ("wire", "offered", "delivered", "airtime",
+                         "energy", "retransmit", "abandoned")}
+    return {
+        "mtu": MTU, "rounds": rounds,
+        "wire_bytes_per_round": float(np.mean(hist["wire"])),
+        "offered_bytes_per_round": float(np.mean(hist["offered"])),
+        "delivered_bytes_per_round": float(np.mean(hist["delivered"])),
+        "airtime_us_per_round": 1e6 * float(np.mean(hist["airtime"])),
+        "energy_uj_per_round": 1e6 * float(np.mean(hist["energy"])),
+        "retransmits_per_round": float(np.mean(hist["retransmit"])),
+        "abandoned_bytes_per_round": float(np.mean(hist["abandoned"])),
+        "delivered_frac": (float(np.mean(hist["delivered"]))
+                           / max(float(np.mean(hist["offered"])), 1e-12)),
+    }
+
+
+def _save(rec: dict, fn: str) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, fn), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
 def _erasure_rows(rounds: int, save: bool) -> List[str]:
     rows = []
     for e in ERASURES:
-        tcfg = TransportConfig(mtu=MTU, erasure=e)
-        eng, state = _build(tcfg)
-        _run_rounds(eng, state, rounds)
-        hist = {name: [float(np.asarray(x))
-                       for x in getattr(eng, f"last_{name}_history")]
-                for name in ("wire", "offered", "delivered", "airtime",
-                             "energy")}
-        rec = {
-            "erasure": e, "mtu": MTU, "rounds": rounds,
-            "wire_bytes_per_round": float(np.mean(hist["wire"])),
-            "offered_bytes_per_round": float(np.mean(hist["offered"])),
-            "delivered_bytes_per_round": float(np.mean(hist["delivered"])),
-            "airtime_us_per_round": 1e6 * float(np.mean(hist["airtime"])),
-            "energy_uj_per_round": 1e6 * float(np.mean(hist["energy"])),
-            "delivered_frac": (float(np.mean(hist["delivered"]))
-                               / max(float(np.mean(hist["offered"])), 1e-12)),
-        }
+        rec = {"erasure": e,
+               **_measure(TransportConfig(mtu=MTU, erasure=e), rounds)}
         if save:
-            os.makedirs(RESULTS_DIR, exist_ok=True)
-            fn = f"erasure_{str(e).replace('.', 'p')}.json"
-            with open(os.path.join(RESULTS_DIR, fn), "w") as f:
-                json.dump(rec, f, indent=1)
+            _save(rec, f"erasure_{str(e).replace('.', 'p')}.json")
         rows.append(
             f"transport_erasure_{e},0,"
             f"wire={rec['wire_bytes_per_round']:g}B;"
@@ -115,6 +133,28 @@ def _erasure_rows(rounds: int, save: bool) -> List[str]:
             f"delivered={rec['delivered_bytes_per_round']:g}B;"
             f"airtime={rec['airtime_us_per_round']:.1f}us;"
             f"delivered_frac={rec['delivered_frac']:.3f}")
+    return rows
+
+
+def _arq_rows(rounds: int, save: bool) -> List[str]:
+    """Erasure × max_retries sweep: the delivered-bytes vs airtime
+    Pareto frontier selective-repeat ARQ trades along (DESIGN.md §12)."""
+    rows = []
+    for e in ARQ_ERASURES:
+        for r in ARQ_RETRIES:
+            tcfg = TransportConfig(mtu=MTU, erasure=e,
+                                   arq=r > 0, max_retries=r)
+            rec = {"erasure": e, "max_retries": r,
+                   **_measure(tcfg, rounds)}
+            if save:
+                _save(rec, f"arq_e{str(e).replace('.', 'p')}_r{r}.json")
+            rows.append(
+                f"transport_arq_e{e}_r{r},0,"
+                f"delivered={rec['delivered_bytes_per_round']:g}B;"
+                f"offered={rec['offered_bytes_per_round']:g}B;"
+                f"airtime={rec['airtime_us_per_round']:.1f}us;"
+                f"retransmits={rec['retransmits_per_round']:g};"
+                f"delivered_frac={rec['delivered_frac']:.3f}")
     return rows
 
 
@@ -145,6 +185,7 @@ def run(quick: bool = False, tiny: bool = False) -> List[str]:
     """
     rounds = 4 if (tiny or quick) else 16
     rows = _erasure_rows(rounds, save=tiny)
+    rows += _arq_rows(rounds, save=tiny)
     rows += _overhead_rows(8 if (tiny or quick) else 32)
     return rows
 

@@ -65,7 +65,9 @@ BENCHES = {
 }
 
 THROUGHPUT_SUFFIX = "rounds_per_s"
-BYTES_TOKENS = ("bytes",)
+# exact-gated machine-independent columns: byte accounting and ARQ
+# retransmit counts (both threefry-deterministic integers in f32)
+BYTES_TOKENS = ("bytes", "retransmit")
 # informational keys never compared (timing-derived or environment-bound)
 SKIP_TOKENS = ("speedup", "overhead", "equiv", "_over_", "saving",
                "shard_vs_scan", "delta", "wall")

@@ -156,6 +156,33 @@ def wire_table(results_dir: str = None) -> str:
     return "\n".join(lines)
 
 
+def transport_table(results_dir: str = None) -> str:
+    """§Transport: erasure rows + the ARQ erasure×retries Pareto sweep."""
+    results_dir = results_dir or os.path.join(
+        os.path.dirname(__file__), "results", "transport")
+    lines = [
+        "| config | offered B | delivered B | frac | airtime us | "
+        "retransmits | abandoned B |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for fn in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        rec = json.load(open(fn))
+        retries = rec.get("max_retries")
+        label = (f"erasure {rec['erasure']:g}" if retries is None
+                 else f"erasure {rec['erasure']:g} × arq r={retries}")
+        lines.append(
+            f"| {label} | {rec['offered_bytes_per_round']:g} "
+            f"| {rec['delivered_bytes_per_round']:g} "
+            f"| {rec['delivered_frac']:.3f} "
+            f"| {rec['airtime_us_per_round']:.1f} "
+            f"| {rec.get('retransmits_per_round', 0.0):g} "
+            f"| {rec.get('abandoned_bytes_per_round', 0.0):g} |")
+    if len(lines) == 2:
+        lines.append("| _no records — run bench_transport first_ "
+                     "| | | | | | |")
+    return "\n".join(lines)
+
+
 def main():
     print("### §Dry-run results\n")
     print(dryrun_table())
@@ -169,6 +196,8 @@ def main():
     print(eval_engine_table())
     print("\n### §Wire accounting — measured payload vs formula\n")
     print(wire_table())
+    print("\n### §Transport — erasure + ARQ delivered/airtime Pareto\n")
+    print(transport_table())
     print("\n### §Roofline — single-pod 16×16\n")
     print(markdown_table(mesh="16x16"))
     print("\n### §Roofline — multi-pod 2×16×16\n")

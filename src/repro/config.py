@@ -143,12 +143,67 @@ class TransportConfig:
     # radio cost model (802.15.4-class defaults) for airtime/energy columns
     phy_rate_bps: float = 250_000.0
     tx_power_w: float = 0.1
+    # selective-repeat ARQ (DESIGN.md §12): lost frames are retransmitted
+    # up to ``max_retries`` extra attempts, each attempt drawing a fresh
+    # PRNG-pure keep mask (fold_in of the per-leaf transport key by the
+    # attempt index). ``arq_backoff_s`` is the wait before retransmit
+    # attempt a (doubling per attempt), charged against the round's
+    # airtime budget but not TX energy. arq=False keeps the single-shot
+    # path bitwise identical to the pre-ARQ transport.
+    arq: bool = False
+    max_retries: int = 2
+    arq_backoff_s: float = 0.0
+    # LoRa-style time-on-air accounting (DESIGN.md §12): per-frame airtime
+    # from the SX127x symbol-count formula at spreading factor ``sf`` over
+    # ``bw_hz`` with coding rate 4/(4+coding_rate), instead of the flat
+    # phy_rate_bps division. toa=False keeps the flat accounting (and the
+    # committed byte/airtime baselines) unchanged.
+    toa: bool = False
+    sf: int = 7                     # LoRa spreading factor (7..12)
+    bw_hz: float = 125_000.0        # LoRa channel bandwidth
+    coding_rate: int = 1            # CR index: 1..4 -> 4/5..4/8
+    preamble_syms: int = 8
+    # per-round airtime budget: duty_cycle × round_period_s seconds of
+    # airtime (plus ARQ backoff waits) per node per round; 0 period = no
+    # budget (∞). Frames that exhaust the budget are abandoned and their
+    # mass falls back to the CHOCO residual via error feedback.
+    duty_cycle: float = 1.0
+    round_period_s: float = 0.0
     # CHOCO error feedback: update the control sequence v with the
     # *delivered* delta only, so lost frames stay in the next residual
     error_feedback: bool = True
     seed: int = 0                   # SNR shadowing draw seed
 
     def replace(self, **kw) -> "TransportConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ParticipationConfig:
+    """Barrier-free round model (DESIGN.md §12): which nodes show up.
+
+    A node that does not participate in a round performs no local steps,
+    transmits nothing, and integrates nothing — its params/v/v̄ freeze
+    and the Metropolis-Hastings mixing row of every neighbor renormalizes
+    over the delivered neighbor set (the missing weight folds into the
+    self-loop, so the realized Ω stays doubly stochastic). Pure data;
+    ``repro.core.gossip.ParticipationSchedule`` interprets it.
+    """
+    # iid per-round straggler skips: each subject node misses a round
+    # with this probability (PRNG-pure from the round key)
+    straggler_prob: float = 0.0
+    # nodes subject to straggling; empty = every node
+    stragglers: Tuple[int, ...] = ()
+    # deterministic death/rejoin timelines: (node, die_round, rejoin_round)
+    # — the node is out for die_round <= t < rejoin_round; rejoin < 0
+    # means it never comes back
+    dead: Tuple[Tuple[int, int, int], ...] = ()
+
+    @property
+    def active(self) -> bool:
+        return self.straggler_prob > 0.0 or len(self.dead) > 0
+
+    def replace(self, **kw) -> "ParticipationConfig":
         return dataclasses.replace(self, **kw)
 
 
@@ -179,6 +234,9 @@ class FedConfig:
     control_dtype: str = "float32"  # v / v̄ storage (bfloat16 halves fed state)
     # lossy D2D frame transport (None = ideal links, today's teleport path)
     transport: Optional[TransportConfig] = None
+    # barrier-free participation (None = every node, every round — the
+    # global-barrier model, bitwise unchanged)
+    participation: Optional[ParticipationConfig] = None
     seed: int = 0
 
 

@@ -8,11 +8,14 @@ from repro.core.topology import (Topology, MixSchedule, build_topology,
                                  mixing_weights, resolve_topology)
 from repro.core.gossip import (dense_mix, schedule_mix, make_mixer,
                                ShardContext, ShardMixStats, make_shard_mixer,
-                               plan_shard_mix)
-from repro.core.transport import (BernoulliLoss, DeadNodeLoss, FixedMaskLoss,
+                               plan_shard_mix, participation_omega,
+                               ParticipationSchedule, resolve_participation)
+from repro.core.transport import (BernoulliLoss, DeadNodeLoss,
+                                  DropFirstAttemptLoss, FixedMaskLoss,
                                   GilbertElliottLoss, LossyTransport,
-                                  TransportMetrics, fragment, reassemble,
-                                  resolve_transport, serialize_payload)
+                                  TransportMetrics, fragment, lora_toa_s,
+                                  reassemble, resolve_transport,
+                                  serialize_payload)
 from repro.core.fed_state import FedState, init_fed_state
 from repro.core.algorithms import (
     make_cdbfl_round,
@@ -34,9 +37,10 @@ __all__ = [
     "build_schedule", "graph_adjacency", "mixing_weights",
     "resolve_topology", "dense_mix", "schedule_mix", "make_mixer",
     "ShardContext", "ShardMixStats", "make_shard_mixer", "plan_shard_mix",
-    "BernoulliLoss", "DeadNodeLoss", "FixedMaskLoss", "GilbertElliottLoss",
-    "LossyTransport", "TransportMetrics", "fragment", "reassemble",
-    "resolve_transport", "serialize_payload",
+    "participation_omega", "ParticipationSchedule", "resolve_participation",
+    "BernoulliLoss", "DeadNodeLoss", "DropFirstAttemptLoss", "FixedMaskLoss",
+    "GilbertElliottLoss", "LossyTransport", "TransportMetrics", "fragment",
+    "lora_toa_s", "reassemble", "resolve_transport", "serialize_payload",
     "FedState", "init_fed_state", "make_cdbfl_round",
     "make_dsgld_round", "make_cffl_round", "make_sgld_step", "make_round_fn",
     "RoundMetrics", "SampleBank", "DeviceSampleBank", "DeviceBankState",

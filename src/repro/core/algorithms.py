@@ -42,7 +42,8 @@ import jax.numpy as jnp
 
 from repro.core.compression import Compressor
 from repro.core.fed_state import FedState
-from repro.core.gossip import ShardContext, ShardMixStats
+from repro.core.gossip import (ShardContext, ShardMixStats,
+                               resolve_participation)
 from repro.core.transport import (TRANSPORT_SALT, LossyTransport,
                                   TransportMetrics, resolve_transport)
 from repro.utils.tree import tree_count, tree_random_normal
@@ -154,11 +155,20 @@ class RoundMetrics(NamedTuple):
                                # × row bytes); 0 off the shard path
     # lossy-transport accounting (0 when no transport is configured):
     offered_bytes: Any = 0.0   # scalar: on-air bytes/node/round offered to
-                               # the link (payload + frame headers)
+                               # the link (payload + frame headers,
+                               # retransmissions included under ARQ)
     delivered_bytes: Any = 0.0  # scalar: bytes/node/round whose frames
                                # survived the erasure draws
-    airtime_s: Any = 0.0       # scalar: TX airtime/node/round at phy_rate
+    airtime_s: Any = 0.0       # scalar: TX airtime/node/round (LoRa ToA
+                               # under cfg.toa, flat phy_rate otherwise)
     energy_j: Any = 0.0        # scalar: TX energy/node/round at tx_power
+    # reliability / barrier-free accounting (defaults = ideal barrier):
+    retransmits: Any = 0.0     # scalar: ARQ frame re-sends/node/round
+    abandoned_bytes: Any = 0.0  # scalar: bytes/node/round never delivered
+                               # after every ARQ attempt (ride the residual)
+    participation: Any = 1.0   # (K,) {0,1} participation vector of the
+                               # round (replicated across shards); scalar 1
+                               # when no participation model is configured
 
 
 def _node_ids(local_k: int, shard_ctx: Optional[ShardContext]) -> jax.Array:
@@ -232,7 +242,28 @@ def _reduce_transport(tx: Optional[TransportMetrics],
         delivered=_allsum(jnp.sum(tx.delivered), shard_ctx) / num_nodes,
         airtime_s=_allsum(jnp.sum(tx.airtime_s), shard_ctx) / num_nodes,
         energy_j=_allsum(jnp.sum(tx.energy_j), shard_ctx) / num_nodes,
+        retransmits=_allsum(jnp.sum(tx.retransmits), shard_ctx) / num_nodes,
+        abandoned=_allsum(jnp.sum(tx.abandoned), shard_ctx) / num_nodes,
     )
+
+
+def _mask_transport(tx: Optional[TransportMetrics], p_local):
+    """A non-participating node transmits nothing: zero its rows in the
+    per-node transport metric arrays before the global reduction."""
+    if tx is None or p_local is None:
+        return tx
+    return TransportMetrics(*(jnp.asarray(f) * p_local for f in tx))
+
+
+def _participation_freeze(p_local, new_tree, old_tree):
+    """Barrier-free round semantics for node state: a node that skipped
+    the round contributes nothing and absorbs nothing — its params and
+    control sequences carry over unchanged (stale state), exactly as if
+    the round never happened for it."""
+    def leaf(n, o):
+        m = p_local.reshape((p_local.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(m > 0.5, n, o.astype(n.dtype))
+    return jax.tree.map(leaf, new_tree, old_tree)
 
 
 def _check_transport(transport: Optional[LossyTransport], compressor):
@@ -325,12 +356,17 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
     _check_transport(transport, compressor)
     mixer, mix_stats = _resolve_mixer(omega, fed_cfg, mixer, shard_ctx,
                                       transport)
+    participation = resolve_participation(fed_cfg)
     prior_weight = 1.0 / K
 
     def round_fn(state: FedState, batches, key) -> Tuple[FedState, RoundMetrics]:
         kql, knoise = jax.random.split(key)
         kmix = jax.random.fold_in(key, 2)   # keeps kql/knoise streams stable
         ids = _node_ids(state.key.shape[0], shard_ctx)
+        p_full = p_local = None
+        if participation is not None:
+            p_full = participation.mask(key, state.round)
+            p_local = jnp.take(p_full, ids)
         node_keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
             state.key, state.round
         )
@@ -358,7 +394,8 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
         # always the delivered one — it is what the neighbors mix in.
         v_new = jax.tree.map(lambda v, d: (v + d.astype(v.dtype)), state.v,
                              delta_v)
-        mixed = mixer(delta, kmix)
+        mixed = mixer(delta, kmix) if p_full is None else mixer(
+            delta, kmix, p_full)
         v_bar_new = jax.tree.map(lambda vb, m: (vb + m.astype(vb.dtype)),
                                  state.v_bar, mixed)
 
@@ -372,8 +409,16 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
             ).astype(t.dtype),
             theta_L, v_bar_new, v_new, noise,
         )
+        if p_local is not None:
+            # barrier-free: a skipped round leaves the node's whole state
+            # stale — nothing sent (tx masked below), nothing absorbed
+            # (edges already dead in the mixer), local steps discarded.
+            v_new = _participation_freeze(p_local, v_new, state.v)
+            v_bar_new = _participation_freeze(p_local, v_bar_new, state.v_bar)
+            params_new = _participation_freeze(p_local, params_new,
+                                               state.params)
 
-        txm = _reduce_transport(tx, shard_ctx, K)
+        txm = _reduce_transport(_mask_transport(tx, p_local), shard_ctx, K)
         metrics = RoundMetrics(
             loss=losses,
             consensus_error=_consensus_error(params_new, shard_ctx, K) / K,
@@ -384,6 +429,9 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
             delivered_bytes=txm.delivered,
             airtime_s=txm.airtime_s,
             energy_j=txm.energy_j,
+            retransmits=txm.retransmits,
+            abandoned_bytes=txm.abandoned,
+            participation=p_full if p_full is not None else 1.0,
         )
         new_state = FedState(
             params=params_new, v=v_new, v_bar=v_bar_new,
@@ -421,11 +469,16 @@ def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0,
     transport = resolve_transport(fed_cfg, transport)
     mixer, mix_stats = _resolve_mixer(omega, fed_cfg, mixer, shard_ctx,
                                       transport)
+    participation = resolve_participation(fed_cfg)
     prior_weight = 1.0 / K
 
     def round_fn(state: FedState, batches, key) -> Tuple[FedState, RoundMetrics]:
         knoise, kmix = jax.random.split(key)
         ids = _node_ids(state.key.shape[0], shard_ctx)
+        p_full = p_local = None
+        if participation is not None:
+            p_full = participation.mask(key, state.round)
+            p_local = jnp.take(p_full, ids)
         batch0 = jax.tree.map(lambda b: b[:, 0], batches)  # (K, ...)
 
         def node_grad(p, b, k):
@@ -443,7 +496,9 @@ def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0,
         )
         losses, grads = jax.vmap(node_grad)(state.params, batch0, node_keys)
 
-        mixed = mixer(state.params, kmix)       # full θ exchange (uncompressed)
+        # full θ exchange (uncompressed)
+        mixed = mixer(state.params, kmix) if p_full is None else mixer(
+            state.params, kmix, p_full)
         noise = _langevin_noise(knoise, state.params, eta, fed_cfg.temperature,
                                 ids)
         params_new = jax.tree.map(
@@ -452,9 +507,17 @@ def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0,
             ).astype(m.dtype),
             mixed, grads, noise,
         )
+        if p_local is not None:
+            params_new = _participation_freeze(p_local, params_new,
+                                               state.params)
         dense_bytes = tree_count(state.params) // ids.shape[0] * 4
         txm = (transport.account_dense(dense_bytes)
                if transport is not None else TransportMetrics.zero())
+        if p_full is not None:
+            # static per-node accounting × the realized participation rate:
+            # a node that skipped the round never offered its dense θ
+            rate = jnp.mean(p_full)
+            txm = TransportMetrics(*(jnp.asarray(f) * rate for f in txm))
         metrics = RoundMetrics(
             loss=losses[:, None],
             consensus_error=_consensus_error(params_new, shard_ctx, K) / K,
@@ -466,6 +529,9 @@ def make_dsgld_round(loss_fn: LossFn, fed_cfg, omega, data_scale: float = 1.0,
             delivered_bytes=txm.delivered,
             airtime_s=txm.airtime_s,
             energy_j=txm.energy_j,
+            retransmits=txm.retransmits,
+            abandoned_bytes=txm.abandoned,
+            participation=p_full if p_full is not None else 1.0,
         )
         return (
             FedState(params_new, state.v, state.v_bar, state.opt_state,
@@ -494,12 +560,17 @@ def make_cffl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
     _check_transport(transport, compressor)
     mixer, mix_stats = _resolve_mixer(omega, fed_cfg, mixer, shard_ctx,
                                       transport)
+    participation = resolve_participation(fed_cfg)
 
     def round_fn(state: FedState, batches, key) -> Tuple[FedState, RoundMetrics]:
         # same key derivation as cdbfl so the compressor streams coincide
         kq, _ = jax.random.split(key)
         kmix = jax.random.fold_in(key, 2)
         ids = _node_ids(state.key.shape[0], shard_ctx)
+        p_full = p_local = None
+        if participation is not None:
+            p_full = participation.mask(key, state.round)
+            p_local = jnp.take(p_full, ids)
         node_keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
             state.key, state.round
         )
@@ -515,7 +586,8 @@ def make_cffl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
             compressor, residual, kq, ids, transport)
         v_new = jax.tree.map(lambda v, d: (v + d.astype(v.dtype)), state.v,
                              delta_v)
-        mixed = mixer(delta, kmix)
+        mixed = mixer(delta, kmix) if p_full is None else mixer(
+            delta, kmix, p_full)
         v_bar_new = jax.tree.map(lambda vb, m: (vb + m.astype(vb.dtype)),
                                  state.v_bar, mixed)
         params_new = jax.tree.map(
@@ -525,7 +597,12 @@ def make_cffl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
             ).astype(t.dtype),
             theta_L, v_bar_new, v_new,
         )
-        txm = _reduce_transport(tx, shard_ctx, K)
+        if p_local is not None:
+            v_new = _participation_freeze(p_local, v_new, state.v)
+            v_bar_new = _participation_freeze(p_local, v_bar_new, state.v_bar)
+            params_new = _participation_freeze(p_local, params_new,
+                                               state.params)
+        txm = _reduce_transport(_mask_transport(tx, p_local), shard_ctx, K)
         metrics = RoundMetrics(
             loss=losses,
             consensus_error=_consensus_error(params_new, shard_ctx, K) / K,
@@ -536,6 +613,9 @@ def make_cffl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
             delivered_bytes=txm.delivered,
             airtime_s=txm.airtime_s,
             energy_j=txm.energy_j,
+            retransmits=txm.retransmits,
+            abandoned_bytes=txm.abandoned,
+            participation=p_full if p_full is not None else 1.0,
         )
         return (
             FedState(params_new, v_new, v_bar_new, state.opt_state,

@@ -43,6 +43,12 @@ import numpy as np
 from repro.config import TopologyConfig
 from repro.core.topology import MixSchedule, build_schedule
 
+# Salt folding the round key into the straggler-draw stream. Distinct from
+# kql/knoise (split), kmix (fold_in 2) and the transport stream (fold_in 5),
+# so configuring participation never perturbs the other streams — a
+# participation=None run stays bitwise identical.
+PARTICIPATION_SALT = 11
+
 
 def dense_mix(omega, tree):
     om = jnp.asarray(omega)
@@ -84,6 +90,34 @@ def _roll_mix(schedule: MixSchedule, tree):
     return jax.tree.map(leaf, tree)
 
 
+def participation_omega(omega, node_mask):
+    """Stale-weighted Ω under a per-node participation mask (traced).
+
+    Edge (i, j) survives iff both endpoints participate (``p_i·p_j``); the
+    Metropolis-Hastings row then renormalizes over the delivered neighbor
+    set by absorbing every dead edge's weight into the diagonal — a missing
+    posterior degrades to self-reliance instead of silently mixing zeros.
+    The result stays symmetric row-stochastic for any {0,1} mask, and a
+    non-participant's row collapses to the identity (it keeps its value).
+    """
+    om = jnp.asarray(omega).astype(jnp.float32)
+    p = jnp.asarray(node_mask).astype(jnp.float32)
+    k = om.shape[0]
+    eye = jnp.eye(k, dtype=jnp.float32)
+    off = om * (p[:, None] * p[None, :]) * (1.0 - eye)
+    return off + jnp.diag(1.0 - jnp.sum(off, axis=1))
+
+
+def _participation_edge_mask(schedule: MixSchedule, node_mask):
+    """Per-matching (M, K) edge survival under a node mask: matching edge
+    (k, perm_m[k]) is active iff both endpoints participate. Applied as a
+    weight mask, the Laplacian form renormalizes automatically — a dead
+    edge leaves both endpoints holding their own value (same mechanism as
+    link dropout), which *is* the stale-weighted MH renormalization."""
+    p = jnp.asarray(node_mask).astype(jnp.float32)
+    return p[None, :] * p[jnp.asarray(schedule.perms)]
+
+
 def _p_active(link_failure_prob) -> bool:
     """Static host-side check: does this (scalar or per-edge array) dropout
     probability ever fire? Arrays come from the SNR-outage transport path."""
@@ -122,20 +156,25 @@ def _matching_masks(schedule: MixSchedule, key, link_failure_prob,
 
 
 def schedule_mix(schedule: MixSchedule, tree, key=None, *,
-                 link_failure_prob=0.0, gossip_pairs: int = 0):
+                 link_failure_prob=0.0, gossip_pairs: int = 0,
+                 node_mask=None):
     """Sparse Ω-mixing as a sum of matching permutations (Laplacian form).
 
     ``x + Σ_m mask_m·w_m·(x[perm_m] - x)`` is symmetric doubly stochastic
     for *any* symmetric edge mask, which is what makes per-round dropout
     safe: a dead link simply leaves both endpoints holding their own value.
-    Without a key (or with both knobs at 0) this is exactly Ω x.
+    ``node_mask`` is an optional per-node (K,) participation mask: an edge
+    survives only when both endpoints participate (the stale-weighted
+    renormalization of :func:`participation_omega`, realized as an edge
+    mask). Without a key (or with both knobs at 0) and no node mask this
+    is exactly Ω x.
     """
     m = schedule.num_perms
     if m == 0:
         return tree
     time_varying = key is not None and (_p_active(link_failure_prob)
                                         or 0 < gossip_pairs < m)
-    if not time_varying and schedule.shifts is not None:
+    if node_mask is None and not time_varying and schedule.shifts is not None:
         return _roll_mix(schedule, tree)
 
     perms = jnp.asarray(schedule.perms)
@@ -143,6 +182,8 @@ def schedule_mix(schedule: MixSchedule, tree, key=None, *,
     if time_varying:
         weights = weights * _matching_masks(schedule, key, link_failure_prob,
                                             gossip_pairs)
+    if node_mask is not None:
+        weights = weights * _participation_edge_mask(schedule, node_mask)
 
     def leaf(d):
         x = d.astype(jnp.float32)
@@ -233,15 +274,21 @@ def make_mixer(omega: np.ndarray, topology: Optional[str] = None,
     mode, schedule = plan_mixer(om, config, use_ring,
                                 force_tv=link_probs is not None)
     if mode == "identity":
-        return lambda tree, key=None: tree
+        return lambda tree, key=None, node_mask=None: tree
     if mode == "dense":
-        return lambda tree, key=None: dense_mix(om, tree)
+        def dense(tree, key=None, node_mask=None):
+            if node_mask is None:
+                return dense_mix(om, tree)
+            return dense_mix(participation_omega(om, node_mask), tree)
+        return dense
     if mode == "schedule_tv":
         p_drop = _tv_probs(schedule, config, link_probs)
         pairs = int(config.gossip_pairs) if config is not None else 0
-        return lambda tree, key=None: schedule_mix(
-            schedule, tree, key, link_failure_prob=p_drop, gossip_pairs=pairs)
-    return lambda tree, key=None: schedule_mix(schedule, tree)
+        return lambda tree, key=None, node_mask=None: schedule_mix(
+            schedule, tree, key, link_failure_prob=p_drop, gossip_pairs=pairs,
+            node_mask=node_mask)
+    return lambda tree, key=None, node_mask=None: schedule_mix(
+        schedule, tree, node_mask=node_mask)
 
 
 # --------------------------------------------------------------------------
@@ -434,27 +481,31 @@ def _shard_partner(x, ex: _MatchingExchange, r, ctx: ShardContext):
 
 def _shard_schedule_mix(schedule: MixSchedule, plan: ShardMixPlan, tree,
                         ctx: ShardContext, key=None, *,
-                        link_failure_prob=0.0, gossip_pairs: int = 0):
+                        link_failure_prob=0.0, gossip_pairs: int = 0,
+                        node_mask=None):
     """Sharded :func:`schedule_mix`, bitwise identical per node.
 
     The per-round dropout/pair masks are realized exactly as on the host —
-    the full (M, K) mask from the replicated key — then sliced to this
-    shard's columns, so masked weights match the host path bit for bit.
-    The ppermute pattern itself never changes: a dead link still has its
-    row moved, but weighted zero at both endpoints.
+    the full (M, K) mask from the replicated key (and the full replicated
+    participation ``node_mask``) — then sliced to this shard's columns, so
+    masked weights match the host path bit for bit. The ppermute pattern
+    itself never changes: a dead link or dead node still has its row
+    moved, but weighted zero at both endpoints.
     """
     m = schedule.num_perms
     if m == 0:
         return tree
     time_varying = key is not None and (_p_active(link_failure_prob)
                                         or 0 < gossip_pairs < m)
-    if not time_varying and schedule.shifts is not None:
+    if node_mask is None and not time_varying and schedule.shifts is not None:
         return _shard_roll_mix(schedule, tree, ctx)
 
     weights = jnp.asarray(schedule.weights)
     if time_varying:
         weights = weights * _matching_masks(schedule, key, link_failure_prob,
                                             gossip_pairs)
+    if node_mask is not None:
+        weights = weights * _participation_edge_mask(schedule, node_mask)
     r = jax.lax.axis_index(ctx.axis_name)
     lk = plan.local_k
     w_local = jax.lax.dynamic_slice(weights, (0, r * lk), (m, lk))
@@ -472,9 +523,14 @@ def _shard_schedule_mix(schedule: MixSchedule, plan: ShardMixPlan, tree,
     return jax.tree.map(leaf, tree)
 
 
-def _shard_dense_mix(omega, tree, ctx: ShardContext):
-    """Sharded dense oracle: all-gather the node axis, einsum local Ω rows."""
+def _shard_dense_mix(omega, tree, ctx: ShardContext, node_mask=None):
+    """Sharded dense oracle: all-gather the node axis, einsum local Ω rows.
+
+    Participation masks build the full stale-weighted Ω from the replicated
+    mask before slicing rows, so per-node results match the host path."""
     om = jnp.asarray(omega).astype(jnp.float32)
+    if node_mask is not None:
+        om = participation_omega(om, node_mask)
     k = om.shape[0]
     lk = k // ctx.num_shards
     r = jax.lax.axis_index(ctx.axis_name)
@@ -511,11 +567,13 @@ def make_shard_mixer(omega: np.ndarray, ctx: ShardContext, *,
     lk = k // ctx.num_shards
     mode, schedule = plan_mixer(om, config, force_tv=link_probs is not None)
     if mode == "identity":
-        return (lambda tree, key=None: tree), ShardMixStats("identity", 0, 0)
+        return ((lambda tree, key=None, node_mask=None: tree),
+                ShardMixStats("identity", 0, 0))
     if mode == "dense":
         stats = ShardMixStats("dense", float(ctx.num_shards - 1),
                               float(lk - 1))
-        return (lambda tree, key=None: _shard_dense_mix(om, tree, ctx)), stats
+        return (lambda tree, key=None, node_mask=None: _shard_dense_mix(
+            om, tree, ctx, node_mask)), stats
     plan = plan_shard_mix(schedule, ctx.num_shards)
     if mode == "schedule_tv":
         p_drop = _tv_probs(schedule, config, link_probs)
@@ -523,28 +581,116 @@ def make_shard_mixer(omega: np.ndarray, ctx: ShardContext, *,
         stats = ShardMixStats("schedule_tv",
                               plan.cross_rows_per_shard / lk,
                               plan.intra_rows_per_shard / lk)
-        return (lambda tree, key=None: _shard_schedule_mix(
+        return (lambda tree, key=None, node_mask=None: _shard_schedule_mix(
             schedule, plan, tree, ctx, key, link_failure_prob=p_drop,
-            gossip_pairs=pairs)), stats
+            gossip_pairs=pairs, node_mask=node_mask)), stats
     if schedule.shifts is not None:
         stats = _roll_stats(schedule, ctx.num_shards)
     else:
         stats = ShardMixStats("schedule",
                               plan.cross_rows_per_shard / lk,
                               plan.intra_rows_per_shard / lk)
-    return (lambda tree, key=None: _shard_schedule_mix(
-        schedule, plan, tree, ctx)), stats
+    return (lambda tree, key=None, node_mask=None: _shard_schedule_mix(
+        schedule, plan, tree, ctx, node_mask=node_mask)), stats
 
 
 def as_keyed_mixer(mixer: Callable) -> Callable:
-    """Adapt a legacy mix(tree) callable to the mix(tree, key) convention."""
+    """Adapt a legacy mix(tree) / mix(tree, key) callable to the full
+    mix(tree, key, node_mask) convention. Legacy mixers predate the
+    barrier-free round model, so handing them a participation mask is an
+    error rather than a silent drop."""
     try:
         params = inspect.signature(mixer).parameters
         n = len([p for p in params.values()
                  if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD,
                                p.VAR_POSITIONAL)])
+        if any(p.kind == p.VAR_POSITIONAL for p in params.values()):
+            n = 3
     except (TypeError, ValueError):
-        n = 2
-    if n >= 2:
+        n = 3
+    if n >= 3:
         return mixer
-    return lambda tree, key=None: mixer(tree)
+
+    def adapted(tree, key=None, node_mask=None):
+        if node_mask is not None:
+            raise ValueError(
+                "this mixer predates participation masks; build it with "
+                "make_mixer/make_shard_mixer to run barrier-free rounds")
+        return mixer(tree, key) if n >= 2 else mixer(tree)
+
+    return adapted
+
+
+# --------------------------------------------------------------------------
+# Barrier-free rounds: per-node participation masks (DESIGN.md §12)
+# --------------------------------------------------------------------------
+
+
+class ParticipationSchedule:
+    """PRNG-pure per-round node participation (stragglers, death/rejoin).
+
+    ``mask(key, round_idx)`` returns the full (K,) {0,1} f32 participation
+    vector for one round: stragglers skip a round with ``straggler_prob``
+    (drawn from ``fold_in(key, PARTICIPATION_SALT)`` — a stream separate
+    from kql/knoise/kmix/transport, so configuring participation never
+    perturbs them), restricted to ``cfg.stragglers`` when that tuple is
+    non-empty; ``cfg.dead`` entries ``(node, die_round, rejoin_round)``
+    take node offline for rounds ``[die, rejoin)`` (rejoin < 0 = forever).
+    The mask is a function of the replicated round key and the traced round
+    counter alone, so every shard realizes the same vector and the Host/
+    Scan/Shard engines agree bitwise.
+    """
+
+    def __init__(self, cfg, num_nodes: int):
+        self.cfg = cfg
+        self.num_nodes = int(num_nodes)
+        elig = np.ones(self.num_nodes, np.float32)
+        if cfg.stragglers:
+            elig = np.zeros(self.num_nodes, np.float32)
+            for n in cfg.stragglers:
+                if not 0 <= int(n) < self.num_nodes:
+                    raise ValueError(f"straggler node {n} outside "
+                                     f"0..{self.num_nodes - 1}")
+                elig[int(n)] = 1.0
+        for (n, die, rejoin) in cfg.dead:
+            if not 0 <= int(n) < self.num_nodes:
+                raise ValueError(f"dead node {n} outside "
+                                 f"0..{self.num_nodes - 1}")
+            if int(rejoin) >= 0 and int(rejoin) <= int(die):
+                raise ValueError(f"node {n}: rejoin round {rejoin} not "
+                                 f"after death round {die}")
+        self._eligible = elig
+
+    @property
+    def active(self) -> bool:
+        return bool(self.cfg.active)
+
+    def mask(self, key, round_idx) -> jax.Array:
+        """Full (K,) participation vector for the round (traced)."""
+        p = jnp.ones(self.num_nodes, jnp.float32)
+        prob = float(self.cfg.straggler_prob)
+        if prob > 0.0:
+            kp = jax.random.fold_in(key, PARTICIPATION_SALT)
+            u = jax.random.uniform(kp, (self.num_nodes,))
+            straggle = ((u < jnp.float32(prob)).astype(jnp.float32)
+                        * jnp.asarray(self._eligible))
+            p = p * (1.0 - straggle)
+        r = jnp.asarray(round_idx, jnp.int32)
+        for (n, die, rejoin) in self.cfg.dead:
+            onehot = np.zeros(self.num_nodes, np.float32)
+            onehot[int(n)] = 1.0
+            dead_now = r >= jnp.int32(int(die))
+            if int(rejoin) >= 0:
+                dead_now = dead_now & (r < jnp.int32(int(rejoin)))
+            p = p * (1.0 - jnp.asarray(onehot)
+                     * dead_now.astype(jnp.float32))
+        return p
+
+
+def resolve_participation(fed_cfg) -> Optional[ParticipationSchedule]:
+    """The participation schedule a round function should use: built from
+    ``fed_cfg.participation`` (None / inactive = today's global barrier)."""
+    pcfg = getattr(fed_cfg, "participation", None)
+    if pcfg is None or not pcfg.active:
+        return None
+    return ParticipationSchedule(pcfg, num_nodes=fed_cfg.num_nodes)

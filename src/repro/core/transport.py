@@ -46,6 +46,18 @@ convergent under loss. With ``error_feedback=False`` the sender's ``v``
 absorbs the full delta while the neighbors' ``v̄`` only saw the survivors;
 the control sequences desynchronize and accuracy measurably degrades
 (pinned in tests/test_transport.py).
+
+Reliability layer (DESIGN.md §12): with ``cfg.arq`` the transport runs
+selective-repeat ARQ over the same static frame layouts — each attempt
+``a`` draws a fresh PRNG-pure keep mask (``fold_in(kleaf, a)``; attempt 0
+reuses ``kleaf``, so the first-attempt loss realization matches the
+single-shot path), frames still missing after an attempt are re-sent up
+to ``max_retries`` times, and a per-round airtime budget
+(``duty_cycle × round_period_s``, LoRa time-on-air per frame when
+``cfg.toa``) abandons frames that exhaust it — their mass falls back to
+the CHOCO residual through error feedback, exactly like an erased frame.
+With ``arq=False`` (or budget ∞ and a lossless model) the paths above
+are untouched and bitwise identical to the pre-ARQ transport.
 """
 from __future__ import annotations
 
@@ -186,11 +198,14 @@ def serialize_payload(payload: WirePayload) -> bytes:
 
 class LossModel:
     """Per-frame keep-mask draw. Implementations must be PRNG-pure: the
-    mask is a function of ``(key, n_frames, node_id)`` alone."""
+    mask is a function of ``(key, n_frames, node_id, attempt)`` alone.
+    ``attempt`` is the static ARQ attempt index (0 = first transmission);
+    models that don't care about it simply ignore it — the ARQ layer
+    already folds the attempt into ``key``."""
 
     lossy: bool = True
 
-    def keep(self, key, n_frames: int, node_id) -> jax.Array:
+    def keep(self, key, n_frames: int, node_id, attempt: int = 0) -> jax.Array:
         raise NotImplementedError
 
 
@@ -205,7 +220,7 @@ class BernoulliLoss(LossModel):
     def lossy(self) -> bool:
         return bool(np.any(np.asarray(self.rate, np.float64) > 0.0))
 
-    def keep(self, key, n_frames: int, node_id) -> jax.Array:
+    def keep(self, key, n_frames: int, node_id, attempt: int = 0) -> jax.Array:
         r = np.asarray(self.rate, np.float32)
         p = jnp.asarray(r)[node_id] if r.ndim else jnp.float32(r)
         u = jax.random.uniform(key, (n_frames,))
@@ -232,7 +247,7 @@ class GilbertElliottLoss(LossModel):
         return (self.loss_good > 0.0
                 or (self.loss_bad > 0.0 and self.p_enter > 0.0))
 
-    def keep(self, key, n_frames: int, node_id) -> jax.Array:
+    def keep(self, key, n_frames: int, node_id, attempt: int = 0) -> jax.Array:
         k0, ktrans, kloss = jax.random.split(key, 3)
         pi_bad = self.p_enter / max(self.p_enter + self.p_exit, 1e-12)
         bad0 = (jax.random.uniform(k0, ()) < pi_bad).astype(jnp.float32)
@@ -263,7 +278,7 @@ class FixedMaskLoss(LossModel):
     def lossy(self) -> bool:
         return len(self.drop) > 0
 
-    def keep(self, key, n_frames: int, node_id) -> jax.Array:
+    def keep(self, key, n_frames: int, node_id, attempt: int = 0) -> jax.Array:
         mask = np.ones(n_frames, np.float32)
         for d in self.drop:
             if 0 <= d < n_frames:
@@ -282,12 +297,32 @@ class DeadNodeLoss(LossModel):
     def lossy(self) -> bool:
         return self.base.lossy or len(self.dead) > 0
 
-    def keep(self, key, n_frames: int, node_id) -> jax.Array:
-        keep = self.base.keep(key, n_frames, node_id)
+    def keep(self, key, n_frames: int, node_id, attempt: int = 0) -> jax.Array:
+        keep = self.base.keep(key, n_frames, node_id, attempt)
         alive = jnp.ones((), jnp.float32)
         for d in self.dead:
             alive = alive * (jnp.asarray(node_id) != d).astype(jnp.float32)
         return keep * alive
+
+
+@dataclass(frozen=True)
+class DropFirstAttemptLoss(LossModel):
+    """Erase *every* frame on the first ``attempts`` ARQ attempts, then
+    delegate to ``base`` — the deterministic fixture that forces the
+    retransmit path: with ``max_retries >= attempts`` (and base lossless)
+    everything arrives on the first retry; without ARQ nothing does."""
+
+    base: LossModel = BernoulliLoss(0.0)
+    attempts: int = 1
+
+    @property
+    def lossy(self) -> bool:
+        return True
+
+    def keep(self, key, n_frames: int, node_id, attempt: int = 0) -> jax.Array:
+        if attempt < self.attempts:
+            return jnp.zeros(n_frames, jnp.float32)
+        return self.base.keep(key, n_frames, node_id, attempt)
 
 
 def model_from_config(cfg) -> LossModel:
@@ -304,6 +339,38 @@ def model_from_config(cfg) -> LossModel:
 
 
 # --------------------------------------------------------------------------
+# LoRa time-on-air (DESIGN.md §12) — the per-frame airtime a duty-cycled
+# sub-GHz deployment actually pays, replacing the flat phy-rate division
+# --------------------------------------------------------------------------
+
+def lora_toa_s(frame_bytes, sf: int = 7, bw_hz: float = 125_000.0,
+               coding_rate: int = 1, preamble_syms: int = 8) -> np.ndarray:
+    """Per-frame LoRa time-on-air in seconds (Semtech SX127x formula).
+
+    ``T_sym = 2^SF / BW``; the payload symbol count is
+    ``8 + max(ceil((8·PL − 4·SF + 28 + 16) / (4·(SF − 2·DE))) · (CR+4), 0)``
+    with explicit header, CRC on, and low-data-rate optimization DE=1 when
+    a symbol exceeds 16 ms (SF11/SF12 at 125 kHz); the preamble costs
+    ``preamble_syms + 4.25`` symbols. ``frame_bytes`` (PL, header included)
+    may be an array — the result is elementwise, host-side numpy.
+    """
+    sf = int(sf)
+    cr = int(coding_rate)
+    if not 6 <= sf <= 12:
+        raise ValueError(f"LoRa spreading factor {sf} outside 6..12")
+    if not 1 <= cr <= 4:
+        raise ValueError(f"LoRa coding-rate index {cr} outside 1..4 "
+                         f"(4/5 .. 4/8)")
+    pl = np.asarray(frame_bytes, np.float64)
+    t_sym = float(2.0 ** sf) / float(bw_hz)
+    de = 1 if t_sym > 0.016 else 0
+    n_payload = 8.0 + np.maximum(
+        np.ceil((8.0 * pl - 4.0 * sf + 28.0 + 16.0)
+                / (4.0 * (sf - 2.0 * de))) * (cr + 4.0), 0.0)
+    return (float(preamble_syms) + 4.25 + n_payload) * t_sym
+
+
+# --------------------------------------------------------------------------
 # The transport: frame layouts, in-round erasure, byte/airtime accounting
 # --------------------------------------------------------------------------
 
@@ -317,18 +384,24 @@ class LeafFraming(NamedTuple):
 
 
 class TransportMetrics(NamedTuple):
-    """Per-node per-round accounting. ``offered``/``airtime``/``energy``
-    are static (every frame is transmitted regardless of its fate);
-    ``delivered`` is traced — the bytes whose frames survived."""
+    """Per-node per-round accounting. On the single-shot path ``offered``
+    /``airtime``/``energy`` are static (every frame is transmitted once,
+    whatever its fate) and ``delivered`` is traced; under ARQ all four are
+    traced — how much is re-sent depends on the loss draws. ``retransmits``
+    counts frame transmissions beyond each frame's first attempt;
+    ``abandoned`` is the bytes never delivered after every attempt (their
+    mass rides the CHOCO residual)."""
     offered: jax.Array
     delivered: jax.Array
     airtime_s: jax.Array
     energy_j: jax.Array
+    retransmits: jax.Array = 0.0
+    abandoned: jax.Array = 0.0
 
     @staticmethod
     def zero() -> "TransportMetrics":
         z = jnp.float32(0.0)
-        return TransportMetrics(z, z, z, z)
+        return TransportMetrics(z, z, z, z, z, z)
 
 
 def _record_layout(payload: WirePayload, i: int):
@@ -374,8 +447,39 @@ class LossyTransport:
     # -- static layout -----------------------------------------------------
     @property
     def lossy(self) -> bool:
-        """Frame-level loss active? False keeps the teleport path bitwise."""
-        return self.model.lossy
+        """Frame-level masking active? Loss draws, or an ARQ airtime budget
+        that can abandon frames even over a lossless channel. False keeps
+        the teleport path bitwise."""
+        return self.model.lossy or (self.arq and self.budgeted)
+
+    @property
+    def arq(self) -> bool:
+        """Selective-repeat retransmission enabled?"""
+        return bool(getattr(self.cfg, "arq", False))
+
+    @property
+    def max_attempts(self) -> int:
+        """Transmission attempts per frame (1 + max_retries under ARQ)."""
+        if not self.arq:
+            return 1
+        return 1 + max(0, int(getattr(self.cfg, "max_retries", 0)))
+
+    @property
+    def airtime_budget_s(self) -> float:
+        """Per-node per-round airtime budget (∞ when no round period)."""
+        period = float(getattr(self.cfg, "round_period_s", 0.0))
+        if period <= 0.0:
+            return float("inf")
+        return float(getattr(self.cfg, "duty_cycle", 1.0)) * period
+
+    @property
+    def budgeted(self) -> bool:
+        return np.isfinite(self.airtime_budget_s)
+
+    @property
+    def toa(self) -> bool:
+        """LoRa time-on-air accounting (flat phy-rate division otherwise)."""
+        return bool(getattr(self.cfg, "toa", False))
 
     @property
     def error_feedback(self) -> bool:
@@ -411,15 +515,47 @@ class LossyTransport:
     def energy_j(self, on_air_bytes: float) -> float:
         return self.airtime_s(on_air_bytes) * float(self.cfg.tx_power_w)
 
+    def frame_toa_s(self, frame_bytes) -> np.ndarray:
+        """Per-frame on-air seconds: LoRa ToA under ``cfg.toa``, flat
+        phy-rate division otherwise. Host-side numpy (layouts are static)."""
+        fb = np.asarray(frame_bytes, np.float64)
+        if self.toa:
+            return lora_toa_s(fb, sf=self.cfg.sf, bw_hz=self.cfg.bw_hz,
+                              coding_rate=self.cfg.coding_rate,
+                              preamble_syms=self.cfg.preamble_syms)
+        return fb * 8.0 / float(self.cfg.phy_rate_bps)
+
+    def duty_fraction(self, airtime_s: float) -> float:
+        """Fraction of the round period spent transmitting (0 when no
+        round period is configured — there is nothing to cap against)."""
+        period = float(getattr(self.cfg, "round_period_s", 0.0))
+        if period <= 0.0:
+            return 0.0
+        return float(airtime_s) / period
+
+    def _frames_airtime_s(self, sizes: np.ndarray, offered: float) -> float:
+        """Static airtime of a frame set: per-frame ToA sum under cfg.toa,
+        otherwise the original single flat division (bitwise unchanged)."""
+        if self.toa:
+            return float(np.sum(self.frame_toa_s(sizes)))
+        return self.airtime_s(offered)
+
     def account_dense(self, nbytes: int) -> TransportMetrics:
         """Static accounting for a dense (uncompressed) exchange — the
         dsgld baseline: frames offered and the airtime they cost, with no
-        frame-level erasure modeled (no codec, no error feedback)."""
-        offered = float(frame_sizes(nbytes, self.cfg.mtu).sum())
+        frame-level erasure modeled (no codec, no error feedback). Under
+        ``cfg.toa`` the airtime/energy columns switch to the per-frame
+        LoRa ToA sum, so the CD-BFL-vs-dsgld robustness gap stays
+        comparable under duty-cycle accounting."""
+        sizes = frame_sizes(nbytes, self.cfg.mtu)
+        offered = float(sizes.sum())
+        air = self._frames_airtime_s(sizes, offered)
+        z = jnp.float32(0.0)
         return TransportMetrics(
             offered=jnp.float32(offered), delivered=jnp.float32(offered),
-            airtime_s=jnp.float32(self.airtime_s(offered)),
-            energy_j=jnp.float32(self.energy_j(offered)))
+            airtime_s=jnp.float32(air),
+            energy_j=jnp.float32(air * float(self.cfg.tx_power_w)),
+            retransmits=z, abandoned=z)
 
     # -- the in-round erasure path ------------------------------------------
     def keep_masks(self, payload: WirePayload, key, node_id):
@@ -457,33 +593,139 @@ class LossyTransport:
         keep_tree = jax.tree.unflatten(payload.treedef, keep_leaves)
         return keep_tree, delivered, jnp.float32(offered)
 
+    # -- selective-repeat ARQ (DESIGN.md §12) -------------------------------
+    def arq_masks(self, payload: WirePayload, key, node_id):
+        """ARQ loss draws for one node's payload: ``(dense_keep, metrics)``.
+
+        Selective repeat over the concatenated static frame vector of all
+        leaves: attempt 0 transmits every frame (same per-leaf keys and
+        draws as :meth:`keep_masks`, so the first-attempt realization
+        matches the single-shot path); attempt ``a > 0`` re-sends only the
+        frames still missing, under keys ``fold_in(kleaf, a)``. Every
+        transmission is gated by the per-round airtime budget in frame
+        order (cumulative ToA, plus a doubling ``arq_backoff_s`` wait per
+        retry attempt while anything is pending); frames that exhaust the
+        budget are abandoned — never transmitted, so their mass falls back
+        to the CHOCO residual exactly like an erased frame. PRNG-pure and
+        shape-static: retransmit sets are identical across Host/Scan/Shard.
+        """
+        attempts = self.max_attempts
+        backoff = float(getattr(self.cfg, "arq_backoff_s", 0.0))
+        per_leaf_nbytes = payload.per_leaf_bytes()
+        leaf_ctx = []
+        fbytes_np, ftoa_np = [], []
+        keeps: List[List[jax.Array]] = [[] for _ in range(attempts)]
+        for i, (entry, spec) in enumerate(zip(payload.entries,
+                                              payload.specs)):
+            rec_shape, mode = _record_layout(payload, i)
+            fr = self.leaf_framing(per_leaf_nbytes[i], rec_shape)
+            kleaf = jax.random.fold_in(key, i)
+            for a in range(attempts):
+                ka = kleaf if a == 0 else jax.random.fold_in(kleaf, a)
+                keeps[a].append(self.model.keep(ka, fr.n_frames, node_id,
+                                                attempt=a))
+            leaf_ctx.append((fr, mode, entry, spec))
+            fbytes_np.append(np.asarray(fr.frame_bytes, np.float64))
+            ftoa_np.append(self.frame_toa_s(fr.frame_bytes))
+        fbytes = jnp.asarray(np.concatenate(fbytes_np), jnp.float32)
+        ftoa = jnp.asarray(np.concatenate(ftoa_np), jnp.float32)
+        keep_a = [jnp.concatenate(ks) for ks in keeps]
+
+        budget = jnp.float32(self.airtime_budget_s)
+        used = jnp.float32(0.0)          # budget consumed (TX + backoff)
+        got = jnp.zeros_like(fbytes)     # cumulative delivered frame mask
+        airtime = jnp.float32(0.0)
+        offered_b = jnp.float32(0.0)
+        retrans = jnp.float32(0.0)
+        for a in range(attempts):
+            want = jnp.ones_like(fbytes) if a == 0 else (1.0 - got)
+            if a > 0 and backoff > 0.0:
+                pending = (jnp.sum(want) > 0).astype(jnp.float32)
+                used = used + jnp.float32(backoff * 2.0 ** (a - 1)) * pending
+            cum = used + jnp.cumsum(want * ftoa)
+            tx = want * (cum <= budget).astype(jnp.float32)
+            cost = jnp.dot(tx, ftoa)
+            used = used + cost
+            airtime = airtime + cost
+            offered_b = offered_b + jnp.dot(tx, fbytes)
+            if a > 0:
+                retrans = retrans + jnp.sum(tx)
+            got = jnp.maximum(got, tx * keep_a[a])
+
+        keep_leaves = []
+        off = 0
+        for (fr, mode, entry, spec) in leaf_ctx:
+            keep_f = got[off:off + fr.n_frames]
+            off += fr.n_frames
+            keep_rec = keep_f[jnp.asarray(fr.record_frame)].reshape(
+                fr.record_shape)
+            if mode == "scatter":
+                stage0 = payload.stages[0]
+                keep_leaves.append(stage0.decode(keep_rec, entry.aux[0],
+                                                 spec.metas[0]))
+            else:
+                keep_leaves.append(keep_rec.reshape(spec.shape))
+        keep_tree = jax.tree.unflatten(payload.treedef, keep_leaves)
+        metrics = TransportMetrics(
+            offered=offered_b, delivered=jnp.dot(got, fbytes),
+            airtime_s=airtime,
+            energy_j=airtime * jnp.float32(self.cfg.tx_power_w),
+            retransmits=retrans, abandoned=jnp.dot(1.0 - got, fbytes))
+        return keep_tree, metrics
+
     def deliver(self, pipeline, payload: WirePayload, key, node_id):
         """decode + erase for one node: ``(delta_full, delta_delivered,
         TransportMetrics)``. ``delta_full`` is the lossless decode (what a
         feedback-less sender believes it sent); ``delta_delivered`` is
-        what actually landed on the neighbors."""
+        what actually landed on the neighbors (after retransmissions,
+        under ARQ)."""
         delta_full = pipeline.decode(payload)
         if not self.lossy:
             m = self._static_metrics(payload)
             return delta_full, delta_full, m
+        if self.arq:
+            keep, m = self.arq_masks(payload, key, node_id)
+            delta_del = jax.tree.map(
+                lambda x, k: (x.astype(jnp.float32) * k).astype(x.dtype),
+                delta_full, keep)
+            return delta_full, delta_del, m
         keep, delivered, offered = self.keep_masks(payload, key, node_id)
         delta_del = jax.tree.map(
             lambda x, k: (x.astype(jnp.float32) * k).astype(x.dtype),
             delta_full, keep)
-        airtime = self.airtime_s(1.0) * offered
+        if self.toa:
+            airtime = self._payload_airtime_s(payload)
+        else:
+            airtime = self.airtime_s(1.0) * offered
+        z = jnp.float32(0.0)
         return delta_full, delta_del, TransportMetrics(
             offered=offered, delivered=delivered,
             airtime_s=jnp.float32(airtime),
-            energy_j=jnp.float32(airtime * float(self.cfg.tx_power_w)))
+            energy_j=jnp.float32(airtime * float(self.cfg.tx_power_w)),
+            retransmits=z, abandoned=z)
+
+    def _payload_airtime_s(self, payload: WirePayload) -> float:
+        """Static single-shot airtime of the whole payload."""
+        air = 0.0
+        for nbytes in payload.per_leaf_bytes():
+            sizes = frame_sizes(nbytes, self.cfg.mtu)
+            air += self._frames_airtime_s(sizes, float(sizes.sum()))
+        return air
 
     def _static_metrics(self, payload: WirePayload) -> TransportMetrics:
         offered = 0.0
         for i, nbytes in enumerate(payload.per_leaf_bytes()):
             offered += float(frame_sizes(nbytes, self.cfg.mtu).sum())
+        if self.toa:
+            air = self._payload_airtime_s(payload)
+        else:
+            air = self.airtime_s(offered)
+        z = jnp.float32(0.0)
         return TransportMetrics(
             offered=jnp.float32(offered), delivered=jnp.float32(offered),
-            airtime_s=jnp.float32(self.airtime_s(offered)),
-            energy_j=jnp.float32(self.energy_j(offered)))
+            airtime_s=jnp.float32(air),
+            energy_j=jnp.float32(air * float(self.cfg.tx_power_w)),
+            retransmits=z, abandoned=z)
 
     # -- SNR-parameterized link outage (the gossip dropout seam) ------------
     def snr_per_node(self) -> np.ndarray:

@@ -14,6 +14,7 @@ and hard-fails when the paper's ordering claims break.
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -78,6 +79,22 @@ class MatrixSpec:
     arch: str = "lenet-radar"
 
 
+def _chaos_blocks(spec: MatrixSpec):
+    """``REPRO_CHAOS=1``: train every matrix cell under protocol-level
+    chaos — 20% frame erasure recovered by selective-repeat ARQ, 20%
+    stragglers, and one mid-run node death/rejoin (DESIGN.md §12). The
+    CI chaos job sets this to prove the calibration claims survive the
+    reliability layer, not just the clean channel."""
+    if os.environ.get("REPRO_CHAOS", "") in ("", "0"):
+        return None, None
+    from repro.config import ParticipationConfig, TransportConfig
+    transport = TransportConfig(mtu=64, erasure=0.2, arq=True, max_retries=2)
+    participation = ParticipationConfig(
+        straggler_prob=0.2,
+        dead=((spec.nodes - 1, spec.rounds // 3, 2 * spec.rounds // 3),))
+    return transport, participation
+
+
 def _train_one(spec: MatrixSpec, algorithm: str, pipeline: str):
     from repro.train import FedTrainer   # deferred: trainer imports eval
     cfg = get_arch(spec.arch).reduced
@@ -85,6 +102,7 @@ def _train_one(spec: MatrixSpec, algorithm: str, pipeline: str):
     train = make_dataset(spec.nodes * spec.per_node, hw=cfg.input_hw,
                          day=1, seed=spec.seed)
     shards = partition_iid(train, spec.nodes, seed=spec.seed)
+    transport, participation = _chaos_blocks(spec)
     fed = FedConfig(
         num_nodes=spec.nodes, local_steps=spec.local_steps, eta=spec.eta,
         zeta=spec.zeta, rounds=spec.rounds,
@@ -92,6 +110,7 @@ def _train_one(spec: MatrixSpec, algorithm: str, pipeline: str):
         compressor=spec.compressor, pipeline=pipeline,
         compress_ratio=spec.compress_ratio, topology=spec.topology,
         temperature=spec.temperature, algorithm=algorithm, seed=spec.seed,
+        transport=transport, participation=participation,
     )
     tr = FedTrainer(model, fed, shards, minibatch=spec.minibatch,
                     seed=spec.seed, eval_batch_size=spec.eval_batch_size)

@@ -82,6 +82,35 @@ def _parse_args():
     ap.add_argument("--no-error-feedback", action="store_true",
                     help="ablation: sender's control sequence absorbs the "
                          "full delta even when frames were lost")
+    ap.add_argument("--arq", action="store_true",
+                    help="selective-repeat retransmission of lost frames "
+                         "(implies --transport; see --max-retries)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="ARQ retransmit attempts per frame per round")
+    ap.add_argument("--arq-backoff", type=float, default=0.0,
+                    help="base retransmit backoff in seconds (doubles per "
+                         "attempt; charged against the airtime budget)")
+    ap.add_argument("--toa", action="store_true",
+                    help="LoRa time-on-air airtime accounting (SX127x "
+                         "formula) instead of the flat PHY rate "
+                         "(implies --transport)")
+    ap.add_argument("--sf", type=int, default=7,
+                    help="LoRa spreading factor 6-12 (with --toa)")
+    ap.add_argument("--duty-cycle", type=float, default=1.0,
+                    help="fraction of the round period the radio may "
+                         "transmit (budget = duty-cycle x round period)")
+    ap.add_argument("--round-period-s", type=float, default=0.0,
+                    help=">0: wall-clock round period bounding the ARQ "
+                         "airtime budget; frames over budget are abandoned "
+                         "to the CHOCO residual")
+    ap.add_argument("--straggler-prob", type=float, default=0.0,
+                    help=">0: barrier-free rounds — each node skips a "
+                         "round with this probability (stale-weighted "
+                         "mixing carries its last state)")
+    ap.add_argument("--dead-node", action="append", default=[],
+                    metavar="NODE:DIE[:REJOIN]",
+                    help="node death timeline, e.g. '2:30' (node 2 dies at "
+                         "round 30) or '2:30:60' (rejoins at 60); repeatable")
     ap.add_argument("--compressor", default="block_topk")
     ap.add_argument("--pipeline", default="",
                     help="codec pipeline DSL, e.g. 'block_topk|qsgd' "
@@ -149,12 +178,31 @@ def main():
         link_failure_prob=args.link_failure, gossip_pairs=args.gossip_pairs,
     )
     tcfg = None
-    if args.transport or args.erasure > 0 or args.snr_db is not None:
+    if (args.transport or args.erasure > 0 or args.snr_db is not None
+            or args.arq or args.toa):
         from repro.config import TransportConfig
         tcfg = TransportConfig(
             mtu=args.mtu, erasure=args.erasure, loss_model=args.loss_model,
             snr_db=args.snr_db, snr_spread_db=args.snr_spread_db,
-            error_feedback=not args.no_error_feedback)
+            error_feedback=not args.no_error_feedback,
+            arq=args.arq, max_retries=args.max_retries,
+            arq_backoff_s=args.arq_backoff,
+            toa=args.toa, sf=args.sf, duty_cycle=args.duty_cycle,
+            round_period_s=args.round_period_s)
+    pcfg = None
+    if args.straggler_prob > 0 or args.dead_node:
+        from repro.config import ParticipationConfig
+        dead = []
+        for spec_str in args.dead_node:
+            parts = [int(p) for p in spec_str.split(":")]
+            if len(parts) == 2:
+                parts.append(-1)
+            if len(parts) != 3:
+                raise SystemExit(f"--dead-node {spec_str!r}: want "
+                                 f"NODE:DIE[:REJOIN]")
+            dead.append(tuple(parts))
+        pcfg = ParticipationConfig(straggler_prob=args.straggler_prob,
+                                   dead=tuple(dead))
     fed = FedConfig(
         num_nodes=args.nodes, local_steps=args.local_steps,
         eta=args.eta, zeta=args.zeta, topology=args.topology,
@@ -163,6 +211,7 @@ def main():
         compress_ratio=args.ratio,
         algorithm=args.algorithm,
         transport=tcfg,
+        participation=pcfg,
     )
     topo = build_topology(topo_cfg, fed.num_nodes)
     omega = topo.omega
@@ -222,7 +271,22 @@ def main():
               f"loss={tcfg.loss_model}@{tcfg.erasure:g} "
               + (f"snr={tcfg.snr_db:g}±{tcfg.snr_spread_db:g}dB "
                  if tcfg.snr_db is not None else "")
-              + f"error_feedback={'on' if tcfg.error_feedback else 'OFF'}")
+              + f"error_feedback={'on' if tcfg.error_feedback else 'OFF'}"
+              + (f" arq=selective-repeat x{tcfg.max_retries}"
+                 + (f" backoff={tcfg.arq_backoff_s:g}s"
+                    if tcfg.arq_backoff_s else "")
+                 if tcfg.arq else "")
+              + (f" toa=SF{tcfg.sf}/{tcfg.bw_hz/1e3:g}kHz" if tcfg.toa
+                 else ""))
+        if tcfg.round_period_s > 0:
+            print(f"airtime budget: {tcfg.duty_cycle:g} duty x "
+                  f"{tcfg.round_period_s:g}s round = "
+                  f"{tcfg.duty_cycle * tcfg.round_period_s:g}s/node/round "
+                  f"(over-budget frames abandoned to the residual)")
+    if pcfg is not None:
+        print(f"participation: straggler_prob={pcfg.straggler_prob:g} "
+              f"dead={list(pcfg.dead) or 'none'} "
+              f"(barrier-free rounds, stale-weighted mixing)")
 
     # per-node synthetic pool, resident on device; rounds gather minibatch
     # index tensors from the round key inside the engine (no per-round H2D)
@@ -311,6 +375,18 @@ def main():
               f"{delivered:.0f}B ({100 * frac:.1f}%), airtime "
               f"{1e3 * float(engine.last_airtime_history[-1]):.2f}ms, "
               f"energy {1e3 * float(engine.last_energy_history[-1]):.2f}mJ")
+        retrans = getattr(engine, "last_retransmit_history", [])
+        if retrans and (tcfg is not None and tcfg.arq):
+            print(f"arq accounting: {float(retrans[-1]):.2f} "
+                  f"retransmits/node/round, "
+                  f"{float(engine.last_abandoned_history[-1]):.0f}B "
+                  f"abandoned at budget exhaustion")
+    part = getattr(engine, "last_participation_history", [])
+    if pcfg is not None and len(part):
+        rates = np.asarray(part, np.float64).mean(axis=0)
+        print("participation rates: "
+              + " ".join(f"n{i}={r:.2f}" for i, r in enumerate(rates))
+              + f" (mean {rates.mean():.2f})")
     cross = getattr(engine, "last_cross_history", [])
     if cross and cross[-1] > 0:
         # only the explicit-collective path accounts its ppermute traffic;

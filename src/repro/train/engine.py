@@ -73,24 +73,33 @@ class ChunkMetrics(NamedTuple):
     delivered: jax.Array          # (chunk,) bytes/node/round delivered
     airtime: jax.Array            # (chunk,) TX airtime s/node/round
     energy: jax.Array             # (chunk,) TX energy J/node/round
+    # reliability / barrier-free columns (0 / 1 when not configured):
+    retransmits: jax.Array        # (chunk,) ARQ frame re-sends/node/round
+    abandoned: jax.Array          # (chunk,) bytes/node/round abandoned
+    participation: jax.Array      # (chunk, K) per-node round participation
+                                  # ((chunk,) scalars when no model is set)
 
 
 LogCb = Callable[[int, float, float], None]
 
-# engine attribute -> ChunkMetrics field for the per-round histories every
-# engine exposes after run() (the trainer collects them by these names)
+# (engine attribute, ChunkMetrics field, RoundMetrics field) for the
+# per-round histories every engine exposes after run() (the trainer
+# collects them by the attribute names)
 _HISTORY_FIELDS = (
-    ("last_wire_history", "wire"),          # bytes/node/round
-    ("last_cross_history", "cross"),        # cross-shard bytes/node/round
-    ("last_offered_history", "offered"),    # transport on-air bytes offered
-    ("last_delivered_history", "delivered"),  # transport bytes delivered
-    ("last_airtime_history", "airtime"),    # transport TX airtime s
-    ("last_energy_history", "energy"),      # transport TX energy J
+    ("last_wire_history", "wire", "wire_bytes"),
+    ("last_cross_history", "cross", "cross_bytes"),
+    ("last_offered_history", "offered", "offered_bytes"),
+    ("last_delivered_history", "delivered", "delivered_bytes"),
+    ("last_airtime_history", "airtime", "airtime_s"),
+    ("last_energy_history", "energy", "energy_j"),
+    ("last_retransmit_history", "retransmits", "retransmits"),
+    ("last_abandoned_history", "abandoned", "abandoned_bytes"),
+    ("last_participation_history", "participation", "participation"),
 )
 
 
 def _init_histories(engine) -> None:
-    for attr, _ in _HISTORY_FIELDS:
+    for attr, _, _ in _HISTORY_FIELDS:
         setattr(engine, attr, [])
 
 
@@ -98,7 +107,7 @@ def _reset_histories(engine) -> dict:
     """Fresh per-run history lists, installed on the engine and returned
     keyed by ChunkMetrics field name for the run loop to extend."""
     out = {}
-    for attr, field in _HISTORY_FIELDS:
+    for attr, field, _ in _HISTORY_FIELDS:
         lst: List[float] = []
         setattr(engine, attr, lst)
         out[field] = lst
@@ -106,8 +115,17 @@ def _reset_histories(engine) -> dict:
 
 
 def _extend_histories(hists: dict, ms: ChunkMetrics) -> None:
+    """Append one entry per round: floats for scalar columns, a K-list per
+    round for the participation vector (``tolist`` handles both ranks)."""
     for field, lst in hists.items():
         lst.extend(np.asarray(getattr(ms, field), np.float64).tolist())
+
+
+def _append_round_histories(hists: dict, metrics) -> None:
+    """Host-loop variant of :func:`_extend_histories`: one RoundMetrics."""
+    for _, field, rfield in _HISTORY_FIELDS:
+        hists[field].append(
+            np.asarray(getattr(metrics, rfield), np.float64).tolist())
 
 
 class ScanRoundEngine:
@@ -146,6 +164,9 @@ class ScanRoundEngine:
             delivered=jnp.float32(metrics.delivered_bytes),
             airtime=jnp.float32(metrics.airtime_s),
             energy=jnp.float32(metrics.energy_j),
+            retransmits=jnp.float32(metrics.retransmits),
+            abandoned=jnp.float32(metrics.abandoned_bytes),
+            participation=jnp.asarray(metrics.participation, jnp.float32),
         )
         return EngineCarry(state, key, bank), ms
 
@@ -230,12 +251,7 @@ class HostRoundEngine:
             state, metrics = self.round_fn(state, batches, kround)
             losses.append(float(jnp.mean(metrics.loss)))
             cons.append(float(metrics.consensus_error))
-            hists["wire"].append(float(metrics.wire_bytes))
-            hists["cross"].append(float(metrics.cross_bytes))
-            hists["offered"].append(float(metrics.offered_bytes))
-            hists["delivered"].append(float(metrics.delivered_bytes))
-            hists["airtime"].append(float(metrics.airtime_s))
-            hists["energy"].append(float(metrics.energy_j))
+            _append_round_histories(hists, metrics)
             if self.bank is not None and bank_state is not None:
                 # same admit rule as DeviceSampleBank.admit_mask for rounds
                 # visited sequentially: t >= burn_in, (t - burn_in) % thin == 0
@@ -349,6 +365,11 @@ class ShardRoundEngine:
             delivered=jnp.float32(metrics.delivered_bytes),
             airtime=jnp.float32(metrics.airtime_s),
             energy=jnp.float32(metrics.energy_j),
+            retransmits=jnp.float32(metrics.retransmits),
+            abandoned=jnp.float32(metrics.abandoned_bytes),
+            # the full-K vector is derived from the replicated round key, so
+            # it is identical on every shard — a replicated out_spec
+            participation=jnp.asarray(metrics.participation, jnp.float32),
         )
         return EngineCarry(state, key, bank), ms
 

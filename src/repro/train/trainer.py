@@ -69,10 +69,19 @@ class TrainResult:
     delivered_bytes_per_round: float = 0.0
     airtime_s_per_round: float = 0.0
     energy_j_per_round: float = 0.0
+    # reliability / barrier-free accounting (DESIGN.md §12; 0 without ARQ):
+    # mean ARQ frame re-sends and bytes abandoned at budget exhaustion per
+    # node per round, and the per-node fraction of rounds participated in
+    retransmits_per_round: float = 0.0
+    abandoned_bytes_per_round: float = 0.0
+    participation_rates: Optional[np.ndarray] = None   # (K,) in [0, 1]
     wire_history: List[float] = field(default_factory=list)
     cross_history: List[float] = field(default_factory=list)
     offered_history: List[float] = field(default_factory=list)
     delivered_history: List[float] = field(default_factory=list)
+    # per-round (K,) participation vectors (empty without a participation
+    # model — every node is then in every round)
+    participation_history: List[Any] = field(default_factory=list)
     loss_history: List[float] = field(default_factory=list)
     consensus_history: List[float] = field(default_factory=list)
     probs: Optional[np.ndarray] = None
@@ -124,6 +133,10 @@ class FedTrainer:
         # None = ideal links (today's teleport path, bitwise unchanged)
         from repro.core import resolve_transport
         self.transport = resolve_transport(fed_cfg, transport)
+
+        # barrier-free rounds: stragglers/dead nodes from fed_cfg.participation
+        pcfg = getattr(fed_cfg, "participation", None)
+        self._participation_active = bool(pcfg is not None and pcfg.active)
 
         key = jax.random.PRNGKey(seed)
         params0 = model.init(key)
@@ -213,6 +226,9 @@ class FedTrainer:
         delivered_hist: List[float] = []
         airtime_hist: List[float] = []
         energy_hist: List[float] = []
+        retransmit_hist: List[float] = []
+        abandoned_hist: List[float] = []
+        participation_hist: List[Any] = []
         eval_history: List[Dict[str, float]] = []
         done = 0
         while done < rounds:
@@ -234,6 +250,12 @@ class FedTrainer:
                 getattr(self._engine, "last_airtime_history", []))
             energy_hist.extend(
                 getattr(self._engine, "last_energy_history", []))
+            retransmit_hist.extend(
+                getattr(self._engine, "last_retransmit_history", []))
+            abandoned_hist.extend(
+                getattr(self._engine, "last_abandoned_history", []))
+            participation_hist.extend(
+                getattr(self._engine, "last_participation_history", []))
             done += n
             if segment < rounds and done < rounds:
                 # in-training snapshot through the same fused eval path
@@ -265,10 +287,17 @@ class FedTrainer:
                                  if airtime_hist else 0.0),
             energy_j_per_round=(float(np.mean(energy_hist))
                                 if energy_hist else 0.0),
+            retransmits_per_round=(float(np.mean(retransmit_hist))
+                                   if retransmit_hist else 0.0),
+            abandoned_bytes_per_round=(float(np.mean(abandoned_hist))
+                                       if abandoned_hist else 0.0),
+            participation_rates=self._participation_rates(participation_hist),
             wire_history=wire_hist,
             cross_history=cross_hist,
             offered_history=offered_hist,
             delivered_history=delivered_hist,
+            participation_history=(
+                participation_hist if self._participation_active else []),
             loss_history=losses, consensus_history=cons, wall_s=wall,
             eval_history=eval_history,
         )
@@ -280,6 +309,14 @@ class FedTrainer:
                 "overconf_gap": res.overconf_gap,
             }]
         return res
+
+    # ------------------------------------------------------------------
+    def _participation_rates(self, hist: List[Any]) -> Optional[np.ndarray]:
+        """Per-node fraction of rounds participated in, (K,) in [0, 1];
+        None when no participation model is configured (always 1)."""
+        if not self._participation_active or not hist:
+            return None
+        return np.mean(np.asarray(hist, np.float64), axis=0)
 
     # ------------------------------------------------------------------
     def _apply_fn(self, batch: Dict[str, np.ndarray]):

@@ -8,6 +8,25 @@ import types
 # 512 devices. Keep hypothesis deterministic and CPU-friendly.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+import pytest
+
+
+@pytest.fixture(scope="session")
+def radar_world():
+    """Shared reduced lenet-radar federation (K=5) for the system-level
+    robustness acceptance tests (ARQ/ECE, straggler participation)."""
+    from repro.config import get_arch
+    from repro.data.partition import partition_iid
+    from repro.data.radar import make_dataset
+    from repro.models import get_model
+    cfg = get_arch("lenet-radar").reduced
+    model = get_model(cfg)
+    train = make_dataset(5 * 30, hw=cfg.input_hw, day=1, seed=0)
+    test = make_dataset(80, hw=cfg.input_hw, day=1, seed=99)
+    shards = partition_iid(train, 5)
+    return cfg, model, shards, test
+
+
 try:
     from hypothesis import settings
 except ImportError:

@@ -15,21 +15,26 @@ Patterns (constructors below build the loss models / link matrices):
 * ``dead_nodes(*nodes)``       — listed senders' broadcasts fully erased
 * ``dead_links(edges)``        — whole gossip edges out every round, via
   the ``link_probs`` seam the SNR outage model also uses
+* ``drop_first_attempts(n)``   — erase every frame on the first n ARQ
+  attempts (forces the retransmit path deterministically)
+* ``stragglers(prob, ...)`` / ``death_timeline(...)`` — barrier-free
+  participation schedules (DESIGN.md §12): nodes skip rounds / die and
+  later rejoin, passed to ``run_world(participation=...)``
 
 ``run_world`` executes one configuration and returns the trajectory plus
-the byte/airtime accounting histories the engines now record.
+the byte/airtime/retransmit accounting histories the engines now record.
 """
-from typing import List, NamedTuple, Optional
+from typing import List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import FedConfig, TransportConfig
-from repro.core import (BernoulliLoss, DeadNodeLoss, FixedMaskLoss,
-                        GilbertElliottLoss, LossyTransport, ShardContext,
-                        build_topology, init_fed_state, make_compressor,
-                        make_round_fn, resolve_topology)
+from repro.config import FedConfig, ParticipationConfig, TransportConfig
+from repro.core import (BernoulliLoss, DeadNodeLoss, DropFirstAttemptLoss,
+                        FixedMaskLoss, GilbertElliottLoss, LossyTransport,
+                        ShardContext, build_topology, init_fed_state,
+                        make_compressor, make_round_fn, resolve_topology)
 from repro.core.posterior import DeviceSampleBank
 from repro.data.partition import DeviceShards
 from repro.train.engine import make_engine
@@ -102,6 +107,42 @@ def dead_links(edges):
     return probs
 
 
+def drop_first_attempts(attempts: int = 1,
+                        base: Optional[object] = None) -> DropFirstAttemptLoss:
+    """Erase *everything* on the first ``attempts`` ARQ attempts, then
+    fall through to ``base`` — with ``max_retries >= attempts`` (and a
+    lossless base) every frame arrives exactly on retry ``attempts``."""
+    return DropFirstAttemptLoss(
+        base=base if base is not None else BernoulliLoss(0.0),
+        attempts=int(attempts))
+
+
+# --------------------------------------------------------------------------
+# participation-schedule constructors (barrier-free rounds)
+# --------------------------------------------------------------------------
+
+def stragglers(prob: float, nodes: Tuple[int, ...] = ()) -> ParticipationConfig:
+    """Nodes skip each round independently with ``prob`` (all nodes, or
+    only the listed ones)."""
+    return ParticipationConfig(straggler_prob=float(prob),
+                               stragglers=tuple(int(n) for n in nodes))
+
+
+def death_timeline(*entries, straggler_prob: float = 0.0
+                   ) -> ParticipationConfig:
+    """Dead-node timelines: each entry is ``(node, die_round)`` (never
+    rejoins) or ``(node, die_round, rejoin_round)``; optionally composed
+    with a straggler probability for the surviving nodes."""
+    dead = []
+    for e in entries:
+        if len(e) == 2:
+            dead.append((int(e[0]), int(e[1]), -1))
+        else:
+            dead.append((int(e[0]), int(e[1]), int(e[2])))
+    return ParticipationConfig(straggler_prob=float(straggler_prob),
+                               dead=tuple(dead))
+
+
 def make_transport(model=None, link_probs=None, num_nodes=K,
                    **cfg_kw) -> LossyTransport:
     """A transport with an injected loss model / link-outage matrix."""
@@ -124,6 +165,10 @@ class FaultRun(NamedTuple):
     delivered: List[float]   # bytes whose frames survived
     airtime: List[float]     # seconds on air per node per round
     energy: List[float]      # joules per node per round
+    retransmits: List[float]  # ARQ frame re-sends per node per round
+    abandoned: List[float]   # bytes abandoned at budget exhaustion
+    participation: np.ndarray  # (rounds, K) round participation vectors
+                               # ((rounds,) of ones when no model is set)
 
 
 def _mesh(s):
@@ -178,4 +223,8 @@ def run_world(engine_name="host", algorithm="cdbfl", transport=None,
                     offered=_hist("last_offered_history"),
                     delivered=_hist("last_delivered_history"),
                     airtime=_hist("last_airtime_history"),
-                    energy=_hist("last_energy_history"))
+                    energy=_hist("last_energy_history"),
+                    retransmits=_hist("last_retransmit_history"),
+                    abandoned=_hist("last_abandoned_history"),
+                    participation=np.asarray(
+                        eng.last_participation_history, np.float64))

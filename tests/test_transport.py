@@ -43,8 +43,8 @@ from repro.core.compression import parse_pipeline
 from repro.core.gossip import make_mixer
 from repro.core.topology import build_schedule
 from repro.core.transport import (HEADER_BYTES, frame_sizes, fragment,
-                                  model_from_config, num_frames, parse_frame,
-                                  reassemble, serialize_payload)
+                                  lora_toa_s, model_from_config, num_frames,
+                                  parse_frame, reassemble, serialize_payload)
 import faults
 
 NDEV = len(jax.devices())
@@ -619,3 +619,224 @@ def test_error_feedback_keeps_losses_finite_under_heavy_burst():
     run = faults.run_world("scan", "cdbfl", transport=t, rounds=12, chunk=4)
     assert np.isfinite(run.losses).all()
     assert 0 < run.delivered[-1] <= run.offered[-1]
+
+
+# --------------------------------------------------------------------------
+# LoRa time-on-air: the budget currency (DESIGN.md §12)
+# --------------------------------------------------------------------------
+
+def test_lora_toa_reference_values():
+    """SX127x datasheet arithmetic, pinned: SF7/125kHz/CR4-5 and SF12
+    (which crosses the 16 ms symbol threshold -> low-data-rate optimize)."""
+    np.testing.assert_allclose(float(lora_toa_s(25)), 0.061696, rtol=1e-9)
+    np.testing.assert_allclose(float(lora_toa_s(25, sf=12)), 1.482752,
+                               rtol=1e-9)
+    # vectorized over frame sizes, monotone in payload and SF
+    toa = lora_toa_s(np.array([10, 25, 100]))
+    assert toa.shape == (3,) and np.all(np.diff(toa) > 0)
+    assert float(lora_toa_s(25, sf=9)) > float(lora_toa_s(25, sf=7))
+    # doubling bandwidth exactly halves airtime
+    np.testing.assert_allclose(float(lora_toa_s(25, bw_hz=250_000.0)),
+                               0.5 * float(lora_toa_s(25)), rtol=1e-12)
+
+
+def test_lora_toa_validation():
+    for sf in (5, 13):
+        with pytest.raises(ValueError):
+            lora_toa_s(25, sf=sf)
+    for cr in (0, 5):
+        with pytest.raises(ValueError):
+            lora_toa_s(25, coding_rate=cr)
+
+
+def test_arq_transport_properties():
+    # no period -> unbounded budget; arq alone doesn't make the wire lossy
+    t = faults.make_transport(arq=True, max_retries=3, erasure=0.0)
+    assert t.max_attempts == 4 and not t.lossy
+    assert t.airtime_budget_s == float("inf") and not t.budgeted
+    # a finite duty-cycled budget can abandon frames even at erasure=0
+    tb = faults.make_transport(arq=True, toa=True, duty_cycle=0.01,
+                               round_period_s=10.0)
+    assert tb.budgeted and tb.lossy
+    np.testing.assert_allclose(tb.airtime_budget_s, 0.1)
+    # arq off clamps to single-shot regardless of max_retries
+    assert faults.make_transport(arq=False, max_retries=5).max_attempts == 1
+
+
+# --------------------------------------------------------------------------
+# ARQ: selective-repeat retransmission under a round-time budget (§12)
+# --------------------------------------------------------------------------
+
+@pytest.mark.faults
+@pytest.mark.parametrize("engine", ["host", "scan"])
+def test_arq_lossless_unbudgeted_is_bitwise_teleport(engine):
+    """ARQ on + erasure=0 + budget=inf must not perturb a single bit —
+    the acceptance criterion for the reliability retrofit."""
+    plain = faults.run_world(engine, "cdbfl", transport=None)
+    arq = faults.run_world(engine, "cdbfl",
+                           transport=TransportConfig(mtu=32, erasure=0.0,
+                                                     arq=True, max_retries=2))
+    _tree_equal(plain.state.params, arq.state.params)
+    _tree_equal(plain.state.v, arq.state.v)
+    np.testing.assert_array_equal(plain.losses, arq.losses)
+    assert arq.retransmits == [0.0] * len(arq.retransmits)
+    assert arq.abandoned == [0.0] * len(arq.abandoned)
+
+
+@pytest.mark.faults
+def test_arq_recovers_delivered_bytes_under_erasure():
+    """30% frame erasure, max_retries=2: delivered bytes strictly
+    increase over the single-shot run (the ISSUE acceptance gate), at
+    the cost of real retransmit airtime."""
+    base = TransportConfig(mtu=32, erasure=0.3)
+    arq = TransportConfig(mtu=32, erasure=0.3, arq=True, max_retries=2)
+    r0 = faults.run_world("scan", "cdbfl", transport=base)
+    r2 = faults.run_world("scan", "cdbfl", transport=arq)
+    assert sum(r2.delivered) > sum(r0.delivered)
+    assert sum(r2.retransmits) > 0 and sum(r0.retransmits) == 0
+    assert sum(r2.offered) > sum(r0.offered)       # retries hit the air
+    assert sum(r2.airtime) > sum(r0.airtime)
+    # and the retry schedule is seed-deterministic
+    again = faults.run_world("scan", "cdbfl", transport=arq)
+    assert r2.retransmits == again.retransmits
+    assert r2.delivered == again.delivered
+    _tree_equal(r2.state.params, again.state.params)
+
+
+@pytest.mark.faults
+def test_arq_host_and_scan_agree():
+    spec = TransportConfig(mtu=16, erasure=0.3, arq=True, max_retries=2)
+    h = faults.run_world("host", "cdbfl", transport=spec)
+    s = faults.run_world("scan", "cdbfl", transport=spec)
+    assert h.delivered == s.delivered
+    assert h.retransmits == s.retransmits
+    assert h.abandoned == s.abandoned
+    _tree_close(h.state.params, s.state.params, atol=5e-7)
+
+
+@needs2
+@pytest.mark.faults
+def test_arq_scan_and_shard_agree_bitwise():
+    """Per-attempt keep masks key off (global node id, leaf, attempt), so
+    the sharded run realizes the identical retransmit sets: bit-for-bit
+    state and identical retransmit histories."""
+    spec = TransportConfig(mtu=16, erasure=0.3, arq=True, max_retries=2)
+    s_c = faults.run_world("scan", "cdbfl", transport=spec)
+    s_s = faults.run_world("shard", "cdbfl", transport=spec, s=2)
+    _tree_equal(s_c.state.params, s_s.state.params)
+    _tree_equal(s_c.state.v, s_s.state.v)
+    assert s_c.delivered == s_s.delivered
+    assert s_c.retransmits == s_s.retransmits
+    assert s_c.abandoned == s_s.abandoned
+
+
+@pytest.mark.faults
+def test_drop_first_attempt_forces_retransmit_path():
+    """Deterministic ARQ exercise: every frame dies on attempt 0 and
+    arrives on attempt 1. Without ARQ nothing is ever delivered; with
+    one retry everything is, at exactly 2x the offered traffic."""
+    model = faults.drop_first_attempts(1)
+    dead = faults.make_transport(model=model, mtu=32)
+    run0 = faults.run_world("scan", "cdbfl", transport=dead, rounds=4)
+    assert run0.delivered == [0.0] * 4
+    arq = faults.make_transport(model=model, mtu=32, arq=True, max_retries=1)
+    run1 = faults.run_world("scan", "cdbfl", transport=arq, rounds=4)
+    assert run1.delivered == [26.0] * 4       # 18B topk payload + header
+    assert run1.offered == [52.0] * 4         # every frame sent twice
+    assert run1.retransmits == [1.0] * 4      # one frame per node per round
+    assert run1.abandoned == [0.0] * 4
+
+
+@pytest.mark.faults
+def test_budget_exhaustion_abandons_to_residual():
+    """A starved duty-cycle budget abandons every frame: nothing is
+    delivered, the abandoned mass is accounted, and CHOCO error feedback
+    keeps the run finite (mass rides the residual, DESIGN.md §11)."""
+    t = faults.make_transport(mtu=32, erasure=0.0, arq=True, max_retries=2,
+                              toa=True, duty_cycle=0.01, round_period_s=0.001)
+    run = faults.run_world("scan", "cdbfl", transport=t, rounds=6)
+    assert run.delivered == [0.0] * 6
+    assert run.abandoned == [26.0] * 6
+    assert run.airtime == [0.0] * 6           # nothing cleared the budget
+    assert np.isfinite(run.losses).all()
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(run.state.params))
+
+
+@pytest.mark.faults
+def test_partial_budget_delivers_prefix_and_abandons_rest():
+    """A budget that fits only part of the payload transmits a frame
+    prefix and abandons the tail — delivered + abandoned == payload."""
+    toa_frame = float(lora_toa_s(16))
+    # three frames of the mtu=16 layout are (16, 16, 10) bytes; budget
+    # covers roughly the first two
+    t = faults.make_transport(mtu=16, erasure=0.0, arq=True, max_retries=0,
+                              toa=True, duty_cycle=1.0,
+                              round_period_s=2.1 * toa_frame)
+    run = faults.run_world("scan", "cdbfl", transport=t, rounds=4)
+    assert run.offered == [32.0] * 4          # frames 0+1 fit the budget
+    assert run.delivered == [32.0] * 4
+    assert run.abandoned == [10.0] * 4        # the 10-byte tail never flies
+    assert all(a > 0 for a in run.airtime)
+
+
+@pytest.mark.faults
+def test_toa_airtime_accounting_matches_formula():
+    """With toa=on the per-round airtime equals the SX127x ToA of the
+    actual frame layout, not the flat PHY-rate estimate."""
+    t = faults.make_transport(mtu=32, erasure=0.0, toa=True)
+    run = faults.run_world("scan", "cdbfl", transport=t, rounds=4)
+    want = float(lora_toa_s(26))              # one 26-byte frame per node
+    np.testing.assert_allclose(run.airtime, [want] * 4, rtol=1e-6)
+
+
+@pytest.mark.faults
+def test_dsgld_dense_accounting_reports_toa():
+    """The frequentist baseline's static accounting carries the same ToA
+    columns, keeping the robustness-gap comparison fair under the new
+    accounting."""
+    t = faults.make_transport(mtu=32, erasure=0.0, toa=True)
+    run = faults.run_world("scan", "dsgld", transport=t, rounds=4)
+    assert run.wire == [24.0] * 4             # 6 f32 dense
+    assert run.offered == [32.0] * 4
+    want = float(lora_toa_s(32))              # one 32-byte dense frame
+    np.testing.assert_allclose(run.airtime, [want] * 4, rtol=1e-6)
+    assert run.retransmits == [0.0] * 4 and run.abandoned == [0.0] * 4
+
+
+# --------------------------------------------------------------------------
+# calibration survives ARQ-recovered loss: the ISSUE 7 acceptance run
+# --------------------------------------------------------------------------
+
+@pytest.mark.faults
+def test_arq_holds_calibration_under_30pct_erasure(radar_world):
+    """30% frame erasure with max_retries=2 on the radar task: delivered
+    bytes strictly increase over single-shot, and the final ECE stays
+    within 0.02 of the lossless run (ISSUE 7 acceptance)."""
+    from repro.train import FedTrainer
+    cfg, model, shards, test = radar_world
+
+    def _fed(transport=None):
+        return FedConfig(num_nodes=5, local_steps=4, eta=3e-3, zeta=0.3,
+                         rounds=50, burn_in=30, compressor="block_topk",
+                         compress_ratio=0.05, topology="full",
+                         algorithm="cdbfl", transport=transport)
+
+    lossless = FedTrainer(model, _fed(), shards, minibatch=8)
+    res_clean = lossless.run(rounds=50, eval_batch=test)
+    arq = FedTrainer(model, _fed(TransportConfig(mtu=64, erasure=0.3,
+                                                 arq=True, max_retries=2)),
+                     shards, minibatch=8)
+    res_arq = arq.run(rounds=50, eval_batch=test)
+    single = FedTrainer(model, _fed(TransportConfig(mtu=64, erasure=0.3)),
+                        shards, minibatch=8)
+    res_single = single.run(rounds=50, eval_batch=test)
+    # retransmissions recover real bytes the single-shot run loses
+    assert res_arq.delivered_bytes_per_round > \
+        res_single.delivered_bytes_per_round
+    assert res_arq.retransmits_per_round > 0
+    # and calibration survives the recovered channel
+    assert np.isfinite(res_arq.ece) and np.isfinite(res_clean.ece)
+    assert abs(res_arq.ece - res_clean.ece) < 0.02, \
+        f"ECE drift {res_arq.ece:.4f} vs lossless {res_clean.ece:.4f}"
+    assert res_arq.accuracy > 0.4
