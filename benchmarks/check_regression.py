@@ -2,7 +2,8 @@
 
 The smoke benches (``bench_round_engine --tiny``, ``bench_wire --tiny``,
 ``bench_shard_engine --tiny``, ``bench_eval_engine --tiny``,
-``bench_transport --tiny``) write JSON records under
+``bench_transport --tiny``, ``bench_kernels --tiny``,
+``bench_fused_compress --tiny``) write JSON records under
 ``benchmarks/results/<bench>/``. Two kinds of reference
 exist, because the two kinds of metric have different portability:
 
@@ -62,12 +63,15 @@ BENCHES = {
     "shard_engine": "SPMD shard engine smoke (shard_map + ppermute)",
     "eval_engine": "fused BMA eval engine smoke (vs legacy host loop)",
     "transport": "lossy D2D transport: offered/delivered framed bytes",
+    "kernels": "Pallas kernel parity bits + fused-update traffic model",
+    "fused_compress": "fused encode HBM ledger + bitwise-vs-two-pass bit",
 }
 
 THROUGHPUT_SUFFIX = "rounds_per_s"
-# exact-gated machine-independent columns: byte accounting and ARQ
-# retransmit counts (both threefry-deterministic integers in f32)
-BYTES_TOKENS = ("bytes", "retransmit")
+# exact-gated machine-independent columns: byte accounting, ARQ
+# retransmit counts (both threefry-deterministic integers in f32), and
+# the kernels' bitwise-parity bits (1 iff Pallas == reference under jit)
+BYTES_TOKENS = ("bytes", "retransmit", "bitwise")
 # informational keys never compared (timing-derived or environment-bound)
 SKIP_TOKENS = ("speedup", "overhead", "equiv", "_over_", "saving",
                "shard_vs_scan", "delta", "wall")

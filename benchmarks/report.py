@@ -183,6 +183,49 @@ def transport_table(results_dir: str = None) -> str:
     return "\n".join(lines)
 
 
+def kernels_table(results_dir: str = None) -> str:
+    """§Kernels: bitwise-parity bits between Pallas and the references."""
+    results_dir = results_dir or os.path.join(
+        os.path.dirname(__file__), "results", "kernels")
+    lines = [
+        "| check | value |",
+        "|---|---|",
+    ]
+    for fn in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        rec = json.load(open(fn))
+        for key in sorted(rec):
+            if key == "n":
+                continue
+            lines.append(f"| `{key}` | {rec[key]} |")
+    if len(lines) == 2:
+        lines.append("| _no records — run bench_kernels --tiny first_ | |")
+    return "\n".join(lines)
+
+
+def fused_compress_table(results_dir: str = None) -> str:
+    """§Fused compression: per-encode HBM ledger, fused vs two-pass."""
+    results_dir = results_dir or os.path.join(
+        os.path.dirname(__file__), "results", "fused_compress")
+    lines = [
+        "| pipeline | fused HBM B | two-pass HBM B | reduction | "
+        "of lower bound | wire B | bitwise |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for fn in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        rec = json.load(open(fn))
+        lines.append(
+            f"| `{rec['pipeline']}` | {rec['fused_hbm_bytes']} "
+            f"| {rec['two_pass_hbm_bytes']} "
+            f"| {rec['reduction_x']:.2f}× "
+            f"| {rec['bound_ratio']:.3f}× "
+            f"| {rec['wire_bytes']} "
+            f"| {rec.get('bitwise_match', '—')} |")
+    if len(lines) == 2:
+        lines.append("| _no records — run bench_fused_compress --tiny "
+                     "first_ | | | | | | |")
+    return "\n".join(lines)
+
+
 def main():
     print("### §Dry-run results\n")
     print(dryrun_table())
@@ -198,6 +241,11 @@ def main():
     print(wire_table())
     print("\n### §Transport — erasure + ARQ delivered/airtime Pareto\n")
     print(transport_table())
+    print("\n### §Kernels — Pallas vs reference parity bits\n")
+    print(kernels_table())
+    print("\n### §Fused compression — per-encode HBM ledger "
+          "(DESIGN.md §13)\n")
+    print(fused_compress_table())
     print("\n### §Roofline — single-pod 16×16\n")
     print(markdown_table(mesh="16x16"))
     print("\n### §Roofline — multi-pod 2×16×16\n")

@@ -230,6 +230,14 @@ class FedConfig:
     qsgd_levels: int = 16
     block_size: int = 1024          # block-local top-k granularity
     min_dense_size: int = 0         # leaves smaller than this sent dense
+    # fused compress-in-update (DESIGN.md §13): encode Q(θ − v) straight
+    # from (θ, v) in Pallas so the dense residual never hits HBM. False
+    # keeps the two-pass materialize-then-encode path (bitwise reference).
+    fused_compress: bool = False
+    # per-layer pipeline overrides: (path_substring, pipeline_spec) pairs,
+    # first match wins, "*" matches everything (à la sharding_hints.py).
+    # e.g. (("embed", "block_topk"), ("*", "block_topk|qsgd")).
+    layer_pipelines: Tuple[Tuple[str, str], ...] = ()
     algorithm: str = "cdbfl"        # cdbfl | dsgld | cffl | sgld
     control_dtype: str = "float32"  # v / v̄ storage (bfloat16 halves fed state)
     # lossy D2D frame transport (None = ideal links, today's teleport path)

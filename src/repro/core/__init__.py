@@ -1,7 +1,9 @@
 """Core: the paper's contribution — CD-BFL and its baselines."""
 from repro.core.compression import (Compressor, CompressionPipeline,
-                                    WirePayload, make_compressor,
-                                    parse_pipeline)
+                                    FusedCodec, PerLayerPipeline,
+                                    WirePayload, encode_hbm_bytes,
+                                    leaf_stages, make_compressor,
+                                    parse_layer_rules, parse_pipeline)
 from repro.core.mixing import mixing_matrix, adjacency, spectral_gap
 from repro.core.topology import (Topology, MixSchedule, build_topology,
                                  build_schedule, graph_adjacency,
@@ -31,8 +33,9 @@ from repro.core.posterior import (SampleBank, DeviceSampleBank,
 from repro.core import calibration
 
 __all__ = [
-    "Compressor", "CompressionPipeline", "WirePayload", "make_compressor",
-    "parse_pipeline", "mixing_matrix", "adjacency",
+    "Compressor", "CompressionPipeline", "FusedCodec", "PerLayerPipeline",
+    "WirePayload", "encode_hbm_bytes", "leaf_stages", "make_compressor",
+    "parse_layer_rules", "parse_pipeline", "mixing_matrix", "adjacency",
     "spectral_gap", "Topology", "MixSchedule", "build_topology",
     "build_schedule", "graph_adjacency", "mixing_weights",
     "resolve_topology", "dense_mix", "schedule_mix", "make_mixer",

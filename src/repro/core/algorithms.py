@@ -183,10 +183,19 @@ def _node_keys_for(key, node_ids) -> jax.Array:
     return jax.vmap(lambda i: jax.random.fold_in(key, i))(node_ids)
 
 
-def _compress_exchange(compressor, residual, key, node_ids,
+def _compress_exchange(compressor, theta, v, key, node_ids,
                        transport: Optional[LossyTransport] = None):
-    """Run Q per node over the residual tree, optionally through the lossy
-    frame transport; return ``(delta_v, delta_mix, bytes/node, tx)``.
+    """Run Q per node over the residual ``theta - v``, optionally through
+    the lossy frame transport; return ``(delta_v, delta_mix, bytes/node,
+    tx)``.
+
+    The residual is handed to the compressor as its two operands rather
+    than precomputed: pipelines encode via ``encode_pair(theta, v, key)``,
+    so a :class:`~repro.core.compression.FusedCodec` can form the delta
+    tile-locally inside the pack kernel and the dense residual never
+    reaches HBM (DESIGN.md §13). The base pipeline's ``encode_pair``
+    materializes ``t - v.astype(t.dtype)`` per leaf — bitwise-identical
+    to the old precomputed-delta call on every engine.
 
     Node k's rows are encoded under ``fold_in(key, k)`` — its compression
     (top-k selection, QSGD norm, rand-k index set) depends only on its own
@@ -210,8 +219,8 @@ def _compress_exchange(compressor, residual, key, node_ids,
     """
     keys = _node_keys_for(key, node_ids)
     local_k = node_ids.shape[0]
-    if hasattr(compressor, "encode"):
-        payload = jax.vmap(compressor.encode)(residual, keys)
+    if hasattr(compressor, "encode_pair"):
+        payload = jax.vmap(compressor.encode_pair)(theta, v, keys)
         wire = jnp.float32(payload.measured_bytes() / local_k)
         if transport is None:
             delta = jax.vmap(compressor.decode)(payload)
@@ -222,6 +231,7 @@ def _compress_exchange(compressor, residual, key, node_ids,
             partial(transport.deliver, compressor))(payload, tkeys, node_ids)
         delta_v = delta_del if transport.error_feedback else delta_full
         return delta_v, delta_del, wire, tx
+    residual = jax.tree.map(lambda t, vv: t - vv.astype(t.dtype), theta, v)
     delta = jax.vmap(compressor)(residual, keys)
     wire = compressor.wire_bytes(jax.tree.map(lambda x: x[0], residual))
     return delta, delta, jnp.float32(wire), None
@@ -382,11 +392,11 @@ def make_cdbfl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
         # -- Eq. 6: compressed residual vs control sequence ------------------
         # encode -> wire payload -> decode: the packed (values, indices)
         # representation is what a real transport would ship; the mixer
-        # consumes the decoded dense delta (DESIGN.md §2).
-        residual = jax.tree.map(lambda t, v: t - v.astype(t.dtype), theta_L,
-                                state.v)
+        # consumes the decoded dense delta (DESIGN.md §2). theta and v go
+        # in as separate operands so a fused codec never materializes the
+        # dense residual (DESIGN.md §13).
         delta_v, delta, wire, tx = _compress_exchange(
-            compressor, residual, kql, ids, transport)
+            compressor, theta_L, state.v, kql, ids, transport)
 
         # -- Eq. 7 / Eq. 8: control sequences (stored in control_dtype) ------
         # under a lossy transport, v absorbs the *delivered* delta (error
@@ -580,10 +590,8 @@ def make_cffl_round(loss_fn: LossFn, fed_cfg, omega, compressor: Compressor,
         )
         theta_L, losses = jax.vmap(local)(state.params, batches, node_keys)
 
-        residual = jax.tree.map(lambda t, v: t - v.astype(t.dtype), theta_L,
-                                state.v)
         delta_v, delta, wire, tx = _compress_exchange(
-            compressor, residual, kq, ids, transport)
+            compressor, theta_L, state.v, kq, ids, transport)
         v_new = jax.tree.map(lambda v, d: (v + d.astype(v.dtype)), state.v,
                              delta_v)
         mixed = mixer(delta, kmix) if p_full is None else mixer(

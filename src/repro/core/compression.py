@@ -30,7 +30,7 @@ same contraction bound with delta = ratio.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from functools import partial
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
@@ -598,6 +598,14 @@ class LeafSpec(NamedTuple):
     dtype: str
     passthrough: bool                 # min_dense_size leaves ride dense
     metas: Tuple[Any, ...] = ()       # per-stage static metas
+    stages: Tuple[Any, ...] = ()      # per-leaf stage override (layer
+    #                                   pipelines); () -> payload.stages
+
+
+def leaf_stages(payload: "WirePayload", i: int) -> Tuple[Any, ...]:
+    """The codec stages that encoded leaf ``i`` — per-leaf override when a
+    :class:`PerLayerPipeline` routed the leaf, else the pipeline default."""
+    return payload.specs[i].stages or payload.stages
 
 
 def _buffer_bytes(buf) -> int:
@@ -672,36 +680,70 @@ class CompressionPipeline:
     def spec(self) -> str:
         return "|".join(s.name for s in self.stages)
 
+    # -- per-leaf routing hooks (overridden by PerLayerPipeline) -----------
+    def _resolve_stages(self, path_str: str) -> Tuple[Codec, ...]:
+        """Stages for the leaf at ``path_str`` (keystr of its tree path)."""
+        return self.stages
+
     # -- encode / decode ---------------------------------------------------
-    def encode(self, tree, key) -> WirePayload:
-        leaves, treedef = jax.tree.flatten(tree)
-        keys = jax.random.split(key, len(leaves))
+    def _encode_leaf(self, stages, x, v, leaf_key):
+        """Encode one leaf through ``stages``. ``v`` is None for plain
+        ``encode``; otherwise the residual ``x - v`` is the stage-0 input
+        (materialized here — :class:`FusedCodec` overrides this seam)."""
+        src = x if v is None else x - v.astype(x.dtype)
+        carrier, auxes, metas = src, [], []
+        for si, stage in enumerate(stages):
+            carrier, aux, meta = stage.encode(carrier,
+                                              _stage_key(leaf_key, si))
+            auxes.append(aux)
+            metas.append(meta)
+        return carrier, tuple(auxes), tuple(metas)
+
+    def _encode_impl(self, tree, vtree, key) -> WirePayload:
+        leaves_p, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        vleaves = (jax.tree.leaves(vtree) if vtree is not None
+                   else [None] * len(leaves_p))
+        keys = jax.random.split(key, len(leaves_p))
         entries, specs = [], []
-        for x, leaf_key in zip(leaves, keys):
+        for (path, x), v, leaf_key in zip(leaves_p, vleaves, keys):
+            stages = self._resolve_stages(jax.tree_util.keystr(path))
+            per_leaf = () if stages is self.stages else tuple(stages)
             if self.min_dense_size and x.size <= self.min_dense_size:
-                entries.append(LeafPayload(wire=x, aux=()))
+                wire = x if v is None else x - v.astype(x.dtype)
+                entries.append(LeafPayload(wire=wire, aux=()))
                 specs.append(LeafSpec(tuple(x.shape), str(x.dtype), True))
                 continue
-            carrier, auxes, metas = x, [], []
-            for si, stage in enumerate(self.stages):
-                carrier, aux, meta = stage.encode(carrier,
-                                                  _stage_key(leaf_key, si))
-                auxes.append(aux)
-                metas.append(meta)
-            entries.append(LeafPayload(wire=carrier, aux=tuple(auxes)))
+            carrier, auxes, metas = self._encode_leaf(stages, x, v, leaf_key)
+            entries.append(LeafPayload(wire=carrier, aux=auxes))
             specs.append(LeafSpec(tuple(x.shape), str(x.dtype), False,
-                                  tuple(metas)))
+                                  metas, per_leaf))
         return WirePayload(entries, treedef, specs, self.stages)
+
+    def encode(self, tree, key) -> WirePayload:
+        return self._encode_impl(tree, None, key)
+
+    def encode_pair(self, theta, v, key) -> WirePayload:
+        """Encode the residual ``theta - v`` handed as its two operands.
+
+        The round functions call this instead of materializing the delta
+        themselves (DESIGN.md §13): the base pipeline forms the residual
+        per leaf here (two-pass path, bitwise-identical to
+        ``encode(tree_map(lambda t, v: t - v.astype(t.dtype), ...))``);
+        :class:`FusedCodec` lowers eligible leaves to the fused Pallas
+        kernels so the dense residual never reaches HBM.
+        """
+        return self._encode_impl(theta, v, key)
 
     def decode(self, payload: WirePayload):
         leaves = []
-        for entry, spec in zip(payload.entries, payload.specs):
+        for i, (entry, spec) in enumerate(zip(payload.entries,
+                                              payload.specs)):
             if spec.passthrough:
                 leaves.append(entry.wire)
                 continue
             carrier = entry.wire
             for stage, aux, meta in reversed(list(zip(
-                    payload.stages, entry.aux, spec.metas))):
+                    leaf_stages(payload, i), entry.aux, spec.metas))):
                 carrier = stage.decode(carrier, aux, meta)
             leaves.append(carrier)
         return jax.tree.unflatten(payload.treedef, leaves)
@@ -721,14 +763,15 @@ class CompressionPipeline:
 
     def delta_for(self, tree) -> float:
         """Shape-aware composed delta: min over leaves of the product of
-        per-stage contractions on the carrier sizes actually seen."""
+        per-stage contractions on the carrier sizes actually seen (each
+        leaf through the stages that actually encode it)."""
         deltas = [1.0]
-        for x in jax.tree.leaves(tree):
+        for path, x in jax.tree_util.tree_flatten_with_path(tree)[0]:
             n = int(np.prod(x.shape))
             if self.min_dense_size and n <= self.min_dense_size:
                 continue
             d = 1.0
-            for stage in self.stages:
+            for stage in self._resolve_stages(jax.tree_util.keystr(path)):
                 d *= stage.delta_for_n(n)
                 n = stage.out_size(n)
             deltas.append(d)
@@ -755,18 +798,142 @@ class CompressionPipeline:
         cross-check for :meth:`wire_bytes`: sidecars per stage plus the
         final carrier at the last stage's encoding."""
         total = 0
-        for x in jax.tree.leaves(tree):
+        for path, x in jax.tree_util.tree_flatten_with_path(tree)[0]:
             n = int(np.prod(x.shape))
             if self.min_dense_size and n <= self.min_dense_size:
                 total += n * elem_bytes
                 continue
             carrier_bytes = n * elem_bytes      # stage-less: dense
-            for stage in self.stages:
+            for stage in self._resolve_stages(jax.tree_util.keystr(path)):
                 total += stage.sidecar_formula_bytes(n)
                 carrier_bytes = stage.carrier_formula_bytes(n, elem_bytes)
                 n = stage.out_size(n)
             total += carrier_bytes
         return total
+
+
+# ==========================================================================
+# Fused compress-in-update (DESIGN.md §13)
+# ==========================================================================
+
+def _lower_stage0(stages: Tuple[Codec, ...]) -> Tuple[Codec, ...]:
+    """Normalize a leading block-top-k stage onto the Pallas pack path.
+
+    The jnp encode emits survivors in ``top_k`` descending-magnitude slot
+    order while the pack kernel emits two-tier prefix-rank order — the
+    same *set*, different slot permutation. Later stochastic stages bind
+    uniforms to slot positions, so the fused path and its ``fused=False``
+    oracle must share the kernel's ordering for bitwise equality: both
+    run stage 0 with ``use_pallas=True``.
+    """
+    if stages and isinstance(stages[0], BlockTopKCodec):
+        return (replace(stages[0], use_pallas=True),) + tuple(stages[1:])
+    return tuple(stages)
+
+
+def _qsgd_encode_pallas(stage: QSGDCodec, x, key, interpret: bool = True):
+    """`QSGDCodec.encode` with the grid arithmetic in the Pallas kernel
+    (bitwise-identical carrier/scale under a common jit context)."""
+    from repro.kernels import ops as kops
+    n = int(np.prod(x.shape))
+    grid, norm = kops.qsgd_quantize_carrier(
+        x, key, levels=stage.levels, out_dtype=stage._wire_dtype(),
+        interpret=interpret)
+    meta = _QuantMeta(tuple(x.shape), n, str(x.dtype), levels=stage.levels,
+                      omega=_qsgd_omega(n, stage.levels))
+    return grid, {"scale": norm.reshape(1)}, meta
+
+
+@dataclass(frozen=True)
+class FusedCodec(CompressionPipeline):
+    """Compress-in-update lowering of a codec pipeline (DESIGN.md §13).
+
+    ``encode_pair(theta, v, key)`` lowers eligible leaves to the
+    ``repro.kernels.fused_compress`` family: the residual is formed
+    tile-locally inside the pack kernel (one read of theta and v, wire-
+    sized writes — the dense delta never reaches HBM), and a trailing
+    QSGD stage quantizes the packed carrier in a second wire-sized
+    kernel. Eligibility is per leaf: stage 0 must be the Pallas
+    block-top-k codec; anything else (passthrough leaves, exotic stage
+    orders) falls back transparently to the two-pass encode. With
+    ``fused=False`` the same object IS the two-pass bitwise reference
+    oracle — identical stages, identical keys, residual materialized.
+    """
+
+    fused: bool = True
+    interpret: bool = True
+
+    @classmethod
+    def wrap(cls, pipeline: CompressionPipeline, fused: bool = True,
+             **kw) -> "FusedCodec":
+        return cls(stages=_lower_stage0(pipeline.stages),
+                   min_dense_size=pipeline.min_dense_size,
+                   fused=fused, **kw)
+
+    def _encode_leaf(self, stages, x, v, leaf_key):
+        s0 = stages[0] if stages else None
+        eligible = (v is not None and self.fused
+                    and isinstance(s0, BlockTopKCodec) and s0.use_pallas)
+        if not eligible:
+            return super()._encode_leaf(stages, x, v, leaf_key)
+        from repro.kernels import ops as kops
+        vals, idx = kops.fused_delta_pack(
+            x, v, ratio=s0.ratio, block_size=s0.block_size,
+            interpret=self.interpret)
+        carrier = vals
+        auxes = [{"idx": idx}]
+        metas = [_SparseMeta(tuple(x.shape), x.size, vals.shape[1],
+                             "pallas", nb=vals.shape[0], bs=s0.block_size)]
+        for si in range(1, len(stages)):
+            stage = stages[si]
+            skey = _stage_key(leaf_key, si)
+            if isinstance(stage, QSGDCodec):
+                carrier, aux, meta = _qsgd_encode_pallas(
+                    stage, carrier, skey, interpret=self.interpret)
+            else:
+                carrier, aux, meta = stage.encode(carrier, skey)
+            auxes.append(aux)
+            metas.append(meta)
+        return carrier, tuple(auxes), tuple(metas)
+
+
+@dataclass(frozen=True)
+class PerLayerPipeline(FusedCodec):
+    """Per-layer adaptive pipelines (``FedConfig.layer_pipelines``).
+
+    ``rules`` is an ordered tuple of ``(pattern, pipeline)`` pairs; the
+    first pattern that substring-matches the leaf's tree path (the
+    ``jax.tree_util.keystr`` form, e.g. ``"['embed_tokens']['kernel']"``
+    — same path-matching style as ``models/sharding_hints.py``) routes
+    that leaf through its pipeline's stages; ``"*"`` (or ``""``) matches
+    everything. Unmatched leaves use the base ``stages``. Decode reads
+    the per-leaf stage tuple recorded in each :class:`LeafSpec`, so
+    payloads stay self-describing (transport keep-masks included).
+    """
+
+    rules: Tuple[Tuple[str, CompressionPipeline], ...] = ()
+
+    def _resolve_stages(self, path_str: str) -> Tuple[Codec, ...]:
+        for pat, pipe in self.rules:
+            if pat in ("*", "") or pat in path_str:
+                return pipe.stages
+        return self.stages
+
+
+def parse_layer_rules(spec: str) -> Tuple[Tuple[str, str], ...]:
+    """Parse the ``"pattern=pipeline;pattern=pipeline"`` CLI DSL, e.g.
+    ``"embed=qsgd;attn=block_topk|qsgd"``, into (pattern, spec) pairs."""
+    rules = []
+    for part in spec.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        pat, eq, sub = part.partition("=")
+        if not eq or not sub.strip():
+            raise ValueError(
+                f"layer rule {part!r} is not 'pattern=pipeline'")
+        rules.append((pat.strip(), sub.strip()))
+    return tuple(rules)
 
 
 _CODEC_FACTORIES: Dict[str, Callable[..., Codec]] = {
@@ -813,6 +980,134 @@ def parse_pipeline(spec: str, *, ratio: float = 0.01, block_size: int = 1024,
                                min_dense_size=min_dense_size)
 
 
+# --------------------------------------------------------------------------
+# HBM-traffic ledger for one encode (DESIGN.md §13)
+# --------------------------------------------------------------------------
+#
+# Counts the logical HBM traffic of the lowered encode program from static
+# shapes alone (machine-independent python ints, so the numbers are
+# exact-gateable in check_regression): every materialized intermediate
+# costs one write of its bytes plus one read per consumer; Pallas kernels
+# cost reads of their inputs and writes of their outputs. Register-tile
+# temporaries inside a kernel (the fused path's residual) cost nothing —
+# that is the whole point.
+
+def _pad_rows(nb: int, mult: int = 8) -> int:
+    return -(-nb // mult) * mult
+
+
+def _qsgd_stage_traffic(nb: int, k: int, esize: int, wbytes: int):
+    """(reads, writes) of one carrier-level QSGD stage — identical terms
+    for the fused kernel and the two-pass codec stage (both O(wire))."""
+    c = nb * k
+    pr = _pad_rows(nb)
+    r = c * esize                       # norm reduction over the carrier
+    w = c * 4                           # materialized uniforms (f32)
+    r += c * (esize + 4)                # row-pad reads carrier + uniforms
+    w += pr * k * (esize + 4)           # padded tiles
+    r += pr * k * (esize + 4) + 4       # kernel reads tiles + the norm
+    w += pr * k * wbytes                # integer grid out
+    r += c * wbytes                     # [:nb] slice
+    w += c * wbytes + 4                 # sliced grid + the f32 scale
+    return r, w
+
+
+def encode_hbm_bytes(pipeline: CompressionPipeline, theta, v=None) -> dict:
+    """Static per-encode HBM-byte ledger for ``encode_pair(theta, v)``.
+
+    ``theta``/``v`` may be concrete trees or ``ShapeDtypeStruct`` trees.
+    Returns reads/writes/total for the pipeline as configured, plus the
+    ``2p reads + wire writes`` lower bound (one read of theta and v, the
+    payload's measured bytes written) the tentpole is judged against.
+    """
+    from repro.kernels.pack import ROWS_PER_TILE
+    fused = bool(getattr(pipeline, "fused", False))
+    tleaves = jax.tree_util.tree_flatten_with_path(theta)[0]
+    vleaves = (jax.tree.leaves(v) if v is not None else
+               [x for _, x in tleaves])
+    reads = writes = lb_reads = lb_writes = 0
+    for (path, x), vx in zip(tleaves, vleaves):
+        n = int(np.prod(x.shape))
+        esize = np.dtype(x.dtype).itemsize
+        vsize = np.dtype(vx.dtype).itemsize
+        stages = pipeline._resolve_stages(jax.tree_util.keystr(path))
+        s0 = stages[0] if stages else None
+        lb_reads += n * (esize + vsize)
+        if pipeline.min_dense_size and n <= pipeline.min_dense_size:
+            # passthrough: delta materializes at wire size either way
+            reads += n * (esize + vsize)
+            writes += n * esize
+            lb_writes += n * esize
+            continue
+        eligible = isinstance(s0, BlockTopKCodec) and s0.use_pallas
+        bs = s0.block_size if eligible else 0
+        k = max(1, int(np.ceil(s0.ratio * bs))) if eligible else 0
+        nb = max(1, -(-n // bs)) if eligible else 0
+        if eligible and fused:
+            tile = ROWS_PER_TILE * bs
+            n_head = (n // tile) * tile
+            # aligned prefix: a pure reshape — the kernel's read of theta
+            # and v is the only O(p) traffic
+            reads += n_head * (esize + vsize)
+            writes += (n_head // bs) * k * (esize + 4)
+            if n_head < n or n_head == 0:
+                tail = n - n_head
+                reads += tail * (esize + vsize)      # build padded tiles
+                writes += tile * (esize + vsize)
+                reads += tile * (esize + vsize)      # kernel reads them
+                writes += ROWS_PER_TILE * k * (esize + 4)
+            rows = (n_head // bs) + (ROWS_PER_TILE if (n_head < n or
+                                                       n_head == 0) else 0)
+            reads += rows * k * (esize + 4)          # concat + [:nb] slice
+            writes += nb * k * (esize + 2)           # vals + uint16 idx
+        elif eligible:
+            # two-pass: materialize delta, pad-copy, pack kernel
+            reads += n * (esize + vsize)             # delta read
+            writes += n * esize                      # delta write
+            pr = _pad_rows(-(-n // bs), ROWS_PER_TILE)
+            pp = pr * bs
+            reads += n * esize                       # _pad_to_2d copy
+            writes += pp * esize
+            reads += pp * esize                      # pack kernel read
+            writes += pr * k * (esize + 4)           # vals + int32 idx
+            reads += nb * k * (esize + 4)            # slice + narrow
+            writes += nb * k * (esize + 2)
+        else:
+            # ineligible stage 0 (both modes fall back identically):
+            # delta + one read/write per stage at its carrier size
+            reads += n * (esize + vsize)
+            writes += n * esize
+            cn, ce = n, esize
+            for stage in stages:
+                reads += cn * ce
+                cn = stage.out_size(cn)
+                ce = ce if stage.kind != "quantize" else 1
+                writes += cn * ce + stage.sidecar_formula_bytes(n)
+            stages = ()
+        for stage in stages[1:] if eligible else ():
+            if isinstance(stage, QSGDCodec):
+                wb = np.dtype(stage._wire_dtype()).itemsize
+                r, w = _qsgd_stage_traffic(nb, k, esize, wb)
+            else:   # e.g. sign: one pass over the carrier, packed out
+                r = nb * k * esize
+                w = stage.carrier_formula_bytes(nb * k) + \
+                    stage.sidecar_formula_bytes(nb * k)
+            reads += r
+            writes += w
+    # wire-writes term of the bound: the payload's measured bytes
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    spec_tree = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), theta)
+    lb_writes += jax.eval_shape(pipeline.encode, spec_tree,
+                                key).measured_bytes()
+    return {
+        "read_bytes": int(reads),
+        "write_bytes": int(writes),
+        "hbm_bytes": int(reads + writes),
+        "lower_bound_bytes": int(lb_reads + lb_writes),
+    }
+
+
 def make_compressor(fed_cfg):
     """Build the compression object from a FedConfig.
 
@@ -821,6 +1116,12 @@ def make_compressor(fed_cfg):
     bitwise-identical output, but with a real wire format. The dense
     Pallas variants keep the legacy :class:`Compressor` path (they
     exercise the masked kernels end to end).
+
+    ``fed_cfg.fused_compress`` wraps the pipeline in a :class:`FusedCodec`
+    (stage 0 normalized to the Pallas pack path — see
+    :func:`_lower_stage0`); ``fed_cfg.layer_pipelines`` builds a
+    :class:`PerLayerPipeline` routing leaves by path pattern. The two
+    compose.
     """
     spec = getattr(fed_cfg, "pipeline", "") or ""
     if not spec and fed_cfg.compressor.endswith("_pallas"):
@@ -831,10 +1132,24 @@ def make_compressor(fed_cfg):
             qsgd_levels=fed_cfg.qsgd_levels,
             min_dense_size=fed_cfg.min_dense_size,
         )
-    return parse_pipeline(
-        spec or fed_cfg.compressor,
+    kw = dict(
         ratio=fed_cfg.compress_ratio,
         block_size=fed_cfg.block_size,
         qsgd_levels=fed_cfg.qsgd_levels,
         min_dense_size=fed_cfg.min_dense_size,
     )
+    base = parse_pipeline(spec or fed_cfg.compressor, **kw)
+    fused = bool(getattr(fed_cfg, "fused_compress", False))
+    raw_rules = tuple(getattr(fed_cfg, "layer_pipelines", ()) or ())
+    if raw_rules:
+        rules = tuple(
+            (pat, parse_pipeline(sub, **kw)) for pat, sub in raw_rules)
+        if fused:
+            rules = tuple((pat, replace(p, stages=_lower_stage0(p.stages)))
+                          for pat, p in rules)
+        return PerLayerPipeline(
+            stages=_lower_stage0(base.stages) if fused else base.stages,
+            min_dense_size=base.min_dense_size, fused=fused, rules=rules)
+    if fused:
+        return FusedCodec.wrap(base, fused=True)
+    return base

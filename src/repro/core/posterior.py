@@ -48,10 +48,15 @@ class DeviceBankState(NamedTuple):
     ``slots`` mirrors the params pytree with a leading capacity axis
     ``(C, ...)``; ``count`` is the number of samples ever admitted (the
     write pointer is ``count % C``, so eviction drops the oldest — exactly
-    the host :class:`SampleBank`'s pop-front behavior).
+    the host :class:`SampleBank`'s pop-front behavior). Under the int8
+    storage mode ``slots`` holds the quantized grid and ``scales`` the
+    per-(slot, row) f32 dequantization scales; ``None`` (an empty pytree)
+    in the default f32 mode, so the state stays scan/donation compatible
+    either way.
     """
     slots: Any           # leaves (C, ...) — params with capacity axis
     count: jax.Array     # scalar int32, total samples admitted
+    scales: Any = None   # int8 mode: f32 leaves (C, *leaf.shape[:1])
 
 
 class DeviceSampleBank:
@@ -62,19 +67,63 @@ class DeviceSampleBank:
     full, the oldest sample is evicted. The admit decision is realized with
     ``lax.select`` on the round counter, so update cost is one slot write
     per round regardless of the branch taken (donation keeps it in place).
+
+    ``store_dtype="int8"`` stores each admitted sample as a symmetric
+    absmax-quantized int8 grid with per-(slot, leading-row) f32 scales —
+    4× less device memory per slot, so a multi-sample posterior fits
+    on-device at 100M+ params (ROADMAP item 5). The leading row axis of a
+    leaf is the node axis under the trainer's layout, so the scales shard
+    over ``fed_axis`` exactly like the slots and quantization stays a
+    node-local op. The f32 default path is bitwise-untouched.
     """
 
-    def __init__(self, burn_in: int, capacity: int = 40, thin: int = 1):
+    def __init__(self, burn_in: int, capacity: int = 40, thin: int = 1,
+                 store_dtype: str = "float32"):
         self.burn_in = int(burn_in)
         self.capacity = int(capacity)
         self.thin = max(1, int(thin))
+        self.store_dtype = str(store_dtype)
+        if self.store_dtype not in ("float32", "int8"):
+            raise ValueError(f"store_dtype must be float32|int8, "
+                             f"got {store_dtype!r}")
 
     def init(self, params) -> DeviceBankState:
+        if self.store_dtype == "int8":
+            slots = jax.tree.map(
+                lambda x: jnp.zeros((self.capacity,) + x.shape, jnp.int8),
+                params,
+            )
+            scales = jax.tree.map(
+                lambda x: jnp.ones((self.capacity,) + x.shape[:1],
+                                   jnp.float32),
+                params,
+            )
+            return DeviceBankState(slots=slots,
+                                   count=jnp.zeros((), jnp.int32),
+                                   scales=scales)
         slots = jax.tree.map(
             lambda x: jnp.zeros((self.capacity,) + x.shape, jnp.float32),
             params,
         )
         return DeviceBankState(slots=slots, count=jnp.zeros((), jnp.int32))
+
+    # -- int8 storage helpers ---------------------------------------------
+    @staticmethod
+    def _leaf_scale(x) -> jnp.ndarray:
+        """Per-leading-row absmax/127 scale (node-local under the trainer
+        layout); 1.0 where the row is all zero, so dequant stays exact."""
+        x32 = x.astype(jnp.float32)
+        red = tuple(range(1, x32.ndim))
+        amax = jnp.max(jnp.abs(x32), axis=red) if red else jnp.abs(x32)
+        return jnp.where(amax > 0, amax / 127.0, 1.0)
+
+    @classmethod
+    def _quantize_leaf(cls, x) -> jnp.ndarray:
+        scale = cls._leaf_scale(x)
+        x32 = x.astype(jnp.float32)
+        s = scale.reshape(scale.shape + (1,) * (x32.ndim - scale.ndim))
+        q = jnp.round(x32 / s)
+        return jnp.clip(q, -127, 127).astype(jnp.int8)
 
     def admit_mask(self, round_idx) -> jax.Array:
         """Whether round ``round_idx``'s params enter the bank (traceable)."""
@@ -95,6 +144,13 @@ class DeviceSampleBank:
             )
             return jax.lax.dynamic_update_index_in_dim(slot_leaf, new, ptr, 0)
 
+        if bank.scales is not None:
+            qtree = jax.tree.map(self._quantize_leaf, params)
+            stree = jax.tree.map(self._leaf_scale, params)
+            return DeviceBankState(
+                slots=jax.tree.map(write, bank.slots, qtree),
+                count=bank.count + add.astype(jnp.int32),
+                scales=jax.tree.map(write, bank.scales, stree))
         slots = jax.tree.map(write, bank.slots, params)
         return DeviceBankState(slots=slots,
                                count=bank.count + add.astype(jnp.int32))
@@ -110,6 +166,9 @@ class DeviceSampleBank:
         return DeviceBankState(
             slots=jax.tree.map(lambda _: P(None, fed_axis), bank.slots),
             count=P(),
+            scales=(None if bank.scales is None else jax.tree.map(
+                lambda s: P(None, fed_axis) if s.ndim > 1 else P(None),
+                bank.scales)),
         )
 
     # -- host-side views -------------------------------------------------
@@ -122,8 +181,16 @@ class DeviceSampleBank:
         return (ptr + np.arange(self.capacity)) % self.capacity
 
     def stacked(self, bank: DeviceBankState):
-        """(S, ...) stacked samples in insertion order (S = len(bank))."""
+        """(S, ...) stacked samples in insertion order (S = len(bank)),
+        dequantized to f32 under the int8 storage mode."""
         order = jnp.asarray(self.order(bank))
+        if bank.scales is not None:
+            def deq(s, sc):
+                rows = s[order].astype(jnp.float32)
+                scr = sc[order]
+                return rows * scr.reshape(
+                    scr.shape + (1,) * (rows.ndim - scr.ndim))
+            return jax.tree.map(deq, bank.slots, bank.scales)
         return jax.tree.map(lambda s: s[order], bank.slots)
 
     def samples_list(self, bank: DeviceBankState) -> List[Any]:

@@ -70,7 +70,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compression import WirePayload
+from repro.core.compression import WirePayload, leaf_stages
 
 # Frame header: LEN (uint16, payload bytes) | SEQ (uint16) | CRC32 (uint32),
 # little-endian. 8 bytes on the air in front of every fragment.
@@ -417,7 +417,7 @@ def _record_layout(payload: WirePayload, i: int):
     spec = payload.specs[i]
     if spec.passthrough:
         return tuple(spec.shape), "dense"
-    stage0 = payload.stages[0]
+    stage0 = leaf_stages(payload, i)[0]
     meta0 = spec.metas[0]
     if stage0.kind == "sparsify" and meta0.mode != "dense":
         if meta0.mode in ("block", "pallas"):
@@ -585,7 +585,7 @@ class LossyTransport:
             keep_rec = keep_f[jnp.asarray(fr.record_frame)].reshape(
                 fr.record_shape)
             if mode == "scatter":
-                stage0 = payload.stages[0]
+                stage0 = leaf_stages(payload, i)[0]
                 keep_leaves.append(stage0.decode(keep_rec, entry.aux[0],
                                                  spec.metas[0]))
             else:
@@ -654,13 +654,13 @@ class LossyTransport:
 
         keep_leaves = []
         off = 0
-        for (fr, mode, entry, spec) in leaf_ctx:
+        for i, (fr, mode, entry, spec) in enumerate(leaf_ctx):
             keep_f = got[off:off + fr.n_frames]
             off += fr.n_frames
             keep_rec = keep_f[jnp.asarray(fr.record_frame)].reshape(
                 fr.record_shape)
             if mode == "scatter":
-                stage0 = payload.stages[0]
+                stage0 = leaf_stages(payload, i)[0]
                 keep_leaves.append(stage0.decode(keep_rec, entry.aux[0],
                                                  spec.metas[0]))
             else:

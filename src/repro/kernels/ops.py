@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.block_topk import ROWS_PER_TILE, block_topk_pallas
+from repro.kernels.fused_compress import delta_pack_pallas, grid_quant_pallas
 from repro.kernels.fused_update import TILE_C, TILE_R, fused_update_pallas
 from repro.kernels.pack import pack_topk_pallas, unpack_topk_pallas
 from repro.kernels.qsgd import qsgd_pallas
@@ -97,6 +98,8 @@ def block_topk_unpack(vals: jnp.ndarray, idx: jnp.ndarray, n: int, shape,
 @functools.partial(jax.jit, static_argnames=("zeta", "noise_scale", "interpret"))
 def fused_update(theta, vbar, v, noise, zeta: float, noise_scale: float,
                  interpret: bool = True):
+    if theta.size == 0:      # zero-size leaf: a (0,)-grid pallas_call is
+        return theta         # ill-formed, and the update is vacuous anyway
     t2, n = _pad_to_2d(theta, TILE_C, TILE_R)
     vb2, _ = _pad_to_2d(vbar, TILE_C, TILE_R)
     v2, _ = _pad_to_2d(v, TILE_C, TILE_R)
@@ -112,14 +115,85 @@ def fused_update(theta, vbar, v, noise, zeta: float, noise_scale: float,
 
 @functools.partial(jax.jit, static_argnames=("levels", "interpret"))
 def qsgd(x, key, levels: int = 16, interpret: bool = True):
+    """Bitwise-identical to the ``_qsgd_leaf`` codec stage: eps-included
+    norm, uniforms drawn at ``x.shape`` (not the padded tile shape), and
+    the codec's ``lower + (u < prob)`` rounding inside the kernel."""
     from repro.core.compression import _qsgd_omega
-    norm = jnp.linalg.norm(x.reshape(-1).astype(jnp.float32)).reshape(1, 1)
+    if x.size == 0:
+        return x
+    norm = (jnp.linalg.norm(x.reshape(-1).astype(jnp.float32))
+            + 1e-12).reshape(1, 1)
     x2d, n = _pad_to_2d(x, TILE_C, TILE_R)
-    u = jax.random.uniform(key, x2d.shape, jnp.float32)
-    out = qsgd_pallas(x2d, u, norm, levels,
+    u2d, _ = _pad_to_2d(jax.random.uniform(key, x.shape, jnp.float32),
+                        TILE_C, TILE_R)
+    out = qsgd_pallas(x2d, u2d, norm, levels,
                       omega=_qsgd_omega(int(np.prod(x.shape)), levels),
                       interpret=interpret)
     return _unpad(out, n, x.shape)
+
+
+# --------------------------------------------------------------------------
+# fused compress-in-update (DESIGN.md §13): delta never materializes
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("ratio", "block_size",
+                                             "interpret"))
+def fused_delta_pack(theta: jnp.ndarray, v: jnp.ndarray, ratio: float = 0.01,
+                     block_size: int = 1024, interpret: bool = True):
+    """``block_topk_pack(theta - v.astype(theta.dtype))`` without ever
+    writing the dense residual (or a padded copy of it) to HBM.
+
+    The leaf is split at the largest multiple of the kernel tile
+    (``ROWS_PER_TILE * block_size`` elements): the aligned prefix is a
+    pure reshape of ``theta``/``v`` — no copy, the kernel's two reads are
+    the only O(p) traffic — and only the ragged tail (< one tile) is
+    zero-padded, an O(tile) cost. Blocks are independent and the split
+    point is a block boundary, so the result is bitwise-identical to the
+    two-pass path, which pads the whole leaf via ``_pad_to_2d``.
+    """
+    assert block_size <= 65536, "uint16 block-local indices"
+    k = max(1, int(np.ceil(ratio * block_size)))
+    n = theta.size
+    nb = max(1, -(-n // block_size))
+    tile = ROWS_PER_TILE * block_size
+    tf, vf = theta.reshape(-1), v.reshape(-1)
+    n_head = (n // tile) * tile
+    parts = []
+    if n_head:
+        parts.append(delta_pack_pallas(
+            tf[:n_head].reshape(-1, block_size),
+            vf[:n_head].reshape(-1, block_size), k, interpret=interpret))
+    if n_head < n or not parts:
+        tpad = jnp.zeros((tile,), tf.dtype).at[:n - n_head].set(tf[n_head:])
+        vpad = jnp.zeros((tile,), vf.dtype).at[:n - n_head].set(vf[n_head:])
+        parts.append(delta_pack_pallas(
+            tpad.reshape(ROWS_PER_TILE, block_size),
+            vpad.reshape(ROWS_PER_TILE, block_size), k, interpret=interpret))
+    vals = jnp.concatenate([p[0] for p in parts])[:nb]
+    idx = jnp.concatenate([p[1] for p in parts])[:nb].astype(jnp.uint16)
+    return vals, idx
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "out_dtype",
+                                             "interpret"))
+def qsgd_quantize_carrier(x: jnp.ndarray, key, levels: int = 16,
+                          out_dtype=jnp.int8, interpret: bool = True):
+    """QSGD-quantize a packed ``(nb, k)`` carrier onto the signed integer
+    wire grid: returns ``(grid (nb, k) out_dtype, norm () f32)``.
+
+    Bitwise-identical to ``QSGDCodec.encode``'s carrier/scale pair: the
+    eps-included norm, the uniforms drawn at ``x.shape`` with ``key``, and
+    the grid arithmetic all match the codec. O(wire) traffic only.
+    """
+    nb, k = x.shape
+    norm = jnp.linalg.norm(x.astype(jnp.float32).reshape(-1)) + 1e-12
+    u = jax.random.uniform(key, x.shape)
+    nb_pad = -(-nb // ROWS_PER_TILE) * ROWS_PER_TILE
+    xp = jnp.pad(x, ((0, nb_pad - nb), (0, 0)))
+    up = jnp.pad(u, ((0, nb_pad - nb), (0, 0)))
+    grid = grid_quant_pallas(xp, up, norm.reshape(1, 1), levels, out_dtype,
+                             interpret=interpret)
+    return grid[:nb], norm
 
 
 # --------------------------------------------------------------------------

@@ -36,8 +36,14 @@ ROWS_PER_TILE = 8
 BISECT_ITERS = 40
 
 
-def _pack_kernel(x_ref, vals_ref, idx_ref, *, k: int):
-    x = x_ref[...]                                     # (rows, bs)
+def _pack_tile(x, *, k: int):
+    """Tile-local pack of one ``(rows, bs)`` block batch.
+
+    Shared by :func:`_pack_kernel` and the fused delta-pack kernel in
+    ``fused_compress.py`` — both paths run this exact arithmetic, so the
+    fused encode is bitwise-identical to pack-after-materialize by
+    construction. Returns ``(vals_f32, idx_i32)`` before the output cast.
+    """
     rows, bs = x.shape
     mag = jnp.abs(x.astype(jnp.float32))
     hi = jnp.max(mag, axis=1, keepdims=True) + 1.0     # P(hi) = False
@@ -69,9 +75,15 @@ def _pack_kernel(x_ref, vals_ref, idx_ref, *, k: int):
     onehot = ((pos[:, :, None] == slots[None, None, :]) & mask[:, :, None]
               ).astype(jnp.float32)
     cols = jax.lax.broadcasted_iota(jnp.float32, (rows, bs), 1)
-    vals_ref[...] = jnp.einsum(
-        "rb,rbk->rk", x.astype(jnp.float32), onehot).astype(vals_ref.dtype)
-    idx_ref[...] = jnp.einsum("rb,rbk->rk", cols, onehot).astype(jnp.int32)
+    vals = jnp.einsum("rb,rbk->rk", x.astype(jnp.float32), onehot)
+    idx = jnp.einsum("rb,rbk->rk", cols, onehot).astype(jnp.int32)
+    return vals, idx
+
+
+def _pack_kernel(x_ref, vals_ref, idx_ref, *, k: int):
+    vals, idx = _pack_tile(x_ref[...], k=k)
+    vals_ref[...] = vals.astype(vals_ref.dtype)
+    idx_ref[...] = idx
 
 
 def _unpack_kernel(vals_ref, idx_ref, o_ref):

@@ -117,6 +117,18 @@ def _parse_args():
                          "(overrides --compressor; stages from "
                          "core/compression.py)")
     ap.add_argument("--ratio", type=float, default=0.01)
+    ap.add_argument("--fused-compress", action="store_true",
+                    help="fuse compress-encode into the update: Q(θ−v) is "
+                         "computed straight from (θ, v) in Pallas so the "
+                         "dense residual never materializes in HBM "
+                         "(DESIGN.md §13); bitwise-equal to the two-pass "
+                         "path under jit")
+    ap.add_argument("--layer-pipelines", default="",
+                    help="per-layer codec overrides, "
+                         "'pattern=pipeline;pattern=pipeline' — first "
+                         "substring match on the param path wins, '*' "
+                         "matches all, e.g. 'embed=block_topk;"
+                         "*=block_topk|qsgd'")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--engine", default="scan",
@@ -161,7 +173,8 @@ def main():
     from repro.checkpoint import save_checkpoint
     from repro.config import FedConfig, TopologyConfig, get_arch
     from repro.core import (ShardContext, build_topology, init_fed_state,
-                            make_compressor, make_round_fn)
+                            make_compressor, make_round_fn,
+                            parse_layer_rules)
     from repro.core.gossip import plan_mixer
     from repro.core.topology import dense_wire_bytes
     from repro.data.partition import DeviceShards
@@ -209,6 +222,8 @@ def main():
         topology_cfg=topo_cfg,
         compressor=args.compressor, pipeline=args.pipeline,
         compress_ratio=args.ratio,
+        fused_compress=args.fused_compress,
+        layer_pipelines=parse_layer_rules(args.layer_pipelines),
         algorithm=args.algorithm,
         transport=tcfg,
         participation=pcfg,

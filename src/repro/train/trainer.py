@@ -110,7 +110,8 @@ class FedTrainer:
                  minibatch: int = 10, data_scale: Optional[float] = None,
                  seed: int = 0, engine: str = "scan",
                  chunk: Optional[int] = None, bank_capacity: int = 40,
-                 bank_thin: int = 2, mesh=None, fed_axis: str = "fed",
+                 bank_thin: int = 2, bank_dtype: str = "float32",
+                 mesh=None, fed_axis: str = "fed",
                  eval_batch_size: int = 64, transport=None):
         assert len(shards) == fed_cfg.num_nodes, "one shard per node"
         self.model = model
@@ -152,7 +153,8 @@ class FedTrainer:
         # posterior bank: Bayesian algorithms only (cffl is a point learner)
         self.bank_cfg = DeviceSampleBank(burn_in=fed_cfg.burn_in,
                                          capacity=bank_capacity,
-                                         thin=bank_thin)
+                                         thin=bank_thin,
+                                         store_dtype=bank_dtype)
         bank_enabled = fed_cfg.algorithm in ("cdbfl", "dsgld")
         self.device_shards = DeviceShards.from_shards(shards)
         engine_round_fn = round_fn

@@ -147,6 +147,46 @@ def test_fused_update_sweep(shape, dtype):
                                atol=1e-2 if dtype == jnp.bfloat16 else 1e-6)
 
 
+def test_tree_fused_update_ragged_leaves():
+    """Satellite: pytree entry point on leaves that stress the padding
+    wrappers — non-multiples of the (256, 128) tile, 1-element and scalar
+    leaves, and a zero-size leaf (which must pass through untouched: a
+    zero-row pallas grid is ill-formed)."""
+    shapes = [(4097,), (3, 5), (1,), (), (0,), (128, 130), (7, 0, 3)]
+    ks = jax.random.split(KEY, 4)
+    trees = [
+        {f"leaf{i}": jax.random.normal(jax.random.fold_in(k, i), s)
+         for i, s in enumerate(shapes)}
+        for k in ks
+    ]
+    th, vb, v, xi = trees
+    got = ops.tree_fused_update(th, vb, v, xi, zeta=0.03, noise_scale=0.014)
+    for i, s in enumerate(shapes):
+        leaf = f"leaf{i}"
+        want = ref.fused_update_ref(th[leaf], vb[leaf], v[leaf], xi[leaf],
+                                    0.03, 0.014)
+        assert got[leaf].shape == s and got[leaf].dtype == th[leaf].dtype
+        np.testing.assert_allclose(np.asarray(got[leaf]), np.asarray(want),
+                                   atol=1e-6)
+
+
+def test_tree_fused_update_mixed_dtype_leaves():
+    """bfloat16 leaves ride the same pytree as f32 leaves; each matches
+    the reference at its own dtype."""
+    shapes = [((513,), jnp.bfloat16), ((130,), jnp.float32)]
+    ks = jax.random.split(KEY, 4)
+    trees = [[jax.random.normal(jax.random.fold_in(k, i), s, d)
+              for i, (s, d) in enumerate(shapes)] for k in ks]
+    th, vb, v, xi = trees
+    got = ops.tree_fused_update(th, vb, v, xi, zeta=0.5, noise_scale=0.01)
+    for i, (s, d) in enumerate(shapes):
+        want = ref.fused_update_ref(th[i], vb[i], v[i], xi[i], 0.5, 0.01)
+        assert got[i].dtype == d
+        np.testing.assert_allclose(
+            np.asarray(got[i], np.float32), np.asarray(want, np.float32),
+            atol=1e-2 if d == jnp.bfloat16 else 1e-6)
+
+
 @given(zeta=st.floats(0.0, 1.0), ns=st.floats(0.0, 0.1))
 @settings(max_examples=10)
 def test_fused_update_params(zeta, ns):
@@ -167,12 +207,29 @@ def test_qsgd_sweep(shape, levels):
     from repro.core.compression import _qsgd_omega
     x = jax.random.normal(KEY, shape)
     got = ops.qsgd(x, KEY, levels=levels)
-    norm = jnp.linalg.norm(x.reshape(-1)).reshape(1, 1)
+    norm = (jnp.linalg.norm(x.reshape(-1)) + 1e-12).reshape(1, 1)
     x2d, n = ops._pad_to_2d(x, 128, 256)
-    u = jax.random.uniform(KEY, x2d.shape)
+    u2d, _ = ops._pad_to_2d(jax.random.uniform(KEY, shape), 128, 256)
     omega = _qsgd_omega(int(np.prod(shape)), levels)
-    want = ops._unpad(ref.qsgd_ref(x2d, u, norm, levels, omega), n, shape)
+    want = ops._unpad(ref.qsgd_ref(x2d, u2d, norm, levels, omega), n, shape)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_qsgd_kernel_bitwise_vs_codec_stage(shape, dtype):
+    """Satellite: the Pallas QSGD kernel and the codec's `_qsgd_leaf` run
+    the same arithmetic bit for bit (under a common jit context — eager
+    codec calls differ in the last ulp because XLA folds the constant
+    divisors differently outside jit)."""
+    from functools import partial
+    from repro.core.compression import _qsgd_leaf
+    x = jax.random.normal(KEY, shape, dtype)
+    got = ops.qsgd(x, KEY, levels=16)
+    want = jax.jit(partial(_qsgd_leaf, levels=16))(x, KEY)
+    assert got.dtype == want.dtype
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
 
 
 def test_qsgd_quantization_grid():
