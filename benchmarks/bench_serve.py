@@ -1,0 +1,230 @@
+"""Serving-engine benchmark: open-loop load on the BMA serving plane.
+
+Drives ``repro.serve`` the way a deployment would: a Poisson arrival
+stream admitted into the fixed-shape slot table while earlier requests
+are still in flight (continuous batching), measuring request throughput
+and tail latency. Before any timing, every invocation proves the
+engine's contracts:
+
+* ``serve_vs_eval_bitwise`` — BMA probabilities from the serving path
+  are bitwise-equal to a :class:`ScanEvalEngine` pass over the same
+  bank (gated exactly: 1.0 or the serving plane lies about uncertainty);
+* ``swap_cache_leak_bytes`` — device bytes after N posterior hot swaps
+  minus steady state (gated exactly: 0.0; the pre-PR9 serve demo's
+  per-sample cache list re-allocated on every bank change);
+* zero recompiles after warmup (asserted inline — continuous batching
+  must never change a traced shape).
+
+``*_requests_per_s`` rows are throughput-gated like ``rounds_per_s``
+(same-runner merge-base reference hard gate, cross-machine warn);
+``p50_ms``/``p99_ms``/``abstain_rate`` are informational.
+
+    PYTHONPATH=src python benchmarks/bench_serve.py [--tiny|--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ServeConfig, get_arch
+from repro.data.radar import make_dataset
+from repro.eval import ScanEvalEngine
+from repro.models import get_model
+from repro.serve import (ClassifyEngine, DecodeEngine, ServeRequest,
+                         live_device_bytes)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "serve")
+
+
+def _bank(model, s: int, k: int = 0):
+    """Synthetic stacked posterior: (S, K, ...) or (S, ...) when k=0."""
+    key = jax.random.PRNGKey(0)
+
+    def node_stack(i):
+        if k == 0:
+            return model.init(jax.random.fold_in(key, i))
+        ps = [model.init(jax.random.fold_in(key, i * k + j))
+              for j in range(k)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+    return jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[node_stack(i) for i in range(s)])
+
+
+def _open_loop(make_engine, make_request, n_requests: int, lam: float):
+    """Poisson arrivals against a live engine; returns (resps, dt, eng)."""
+    eng = make_engine()
+    eng.run([make_request(0)])                        # warmup (compiles)
+    c0 = eng.compile_count()
+    rng = np.random.default_rng(0)
+    resps, submitted = [], 0
+    t0 = time.perf_counter()
+    while submitted < n_requests or eng.pending():
+        k = int(rng.poisson(lam))
+        for _ in range(min(k, n_requests - submitted)):
+            eng.submit(make_request(1 + submitted))
+            submitted += 1
+        if eng.pending():
+            resps.extend(eng.step())
+    dt = max(time.perf_counter() - t0, 1e-9)
+    assert eng.compile_count() == c0, (
+        f"recompiled under open-loop load: {eng.compile_count()} vs {c0}")
+    assert len(resps) == n_requests
+    return resps, dt, eng
+
+
+def _swap_leak(eng, stacked, make_request) -> int:
+    """Device-byte delta across posterior hot swaps, after steady state."""
+    def swap_and_serve(i):
+        eng.install_bank(
+            jax.tree.map(lambda x: x + 0.01 * (i + 1), stacked))
+        eng.run([make_request(900 + i)])
+
+    swap_and_serve(0)                                 # reach steady state
+    gc.collect()
+    b0 = live_device_bytes()
+    for i in range(1, 5):
+        swap_and_serve(i)
+    gc.collect()
+    return live_device_bytes() - b0
+
+
+def measure_classify(hw, n_requests: int, s: int, k: int, slots: int,
+                     lam: float) -> Dict:
+    cfg = get_arch("lenet-radar").reduced.replace(input_hw=hw)
+    model = get_model(cfg)
+    stacked = _bank(model, s, k)
+    ds = make_dataset(max(n_requests, slots * 2), hw=hw, day=2, seed=7)
+    apply = lambda p, b: model.logits(p, b)
+    scfg = ServeConfig(slots=slots, entropy_threshold=float(np.log(9)))
+
+    def mk_engine():
+        return ClassifyEngine(apply, scfg, input_shape=ds["x"].shape[1:],
+                              stacked=stacked, node_axis=1)
+
+    def mk_request(i):
+        return ServeRequest(x=ds["x"][i % len(ds["y"])])
+
+    # -- contract proofs before timing ------------------------------------
+    eng = mk_engine()
+    m = slots * 2
+    probe = eng.run([ServeRequest(x=ds["x"][i]) for i in range(m)])
+    sub = {f: v[:m] for f, v in ds.items()}
+    _, eval_probs = ScanEvalEngine(apply, batch_size=slots).evaluate(
+        stacked, sub, node_axis=1, return_probs=True)
+    bitwise = float(np.array_equal(np.stack([r.probs for r in probe]),
+                                   eval_probs))
+    leak = _swap_leak(eng, stacked, mk_request)
+
+    resps, dt, eng = _open_loop(mk_engine, mk_request, n_requests, lam)
+    lat = np.asarray([r.latency_s for r in resps]) * 1e3
+    return {
+        "mode": "classify", "hw": f"{hw[0]}x{hw[1]}", "bank_s": s,
+        "nodes": k, "slots": slots, "n_requests": n_requests,
+        "classify_requests_per_s": n_requests / dt,
+        "p50_ms": float(np.percentile(lat, 50)),
+        "p99_ms": float(np.percentile(lat, 99)),
+        "abstain_rate": eng.stats()["abstain_rate"],
+        "serve_vs_eval_bitwise": bitwise,
+        "swap_cache_leak_bytes": float(leak),
+    }
+
+
+def measure_decode(n_requests: int, m: int, slots: int, new_tokens: int,
+                   lam: float) -> Dict:
+    cfg = get_arch("smollm-135m").reduced
+    model = get_model(cfg)
+    stacked = _bank(model, m)
+    scfg = ServeConfig(slots=slots, max_len=4 * new_tokens,
+                       max_new_tokens=new_tokens)
+
+    def mk_engine():
+        return DecodeEngine(model, scfg, stacked=stacked)
+
+    def mk_request(i):
+        return ServeRequest(prompt_token=1 + i % (cfg.vocab_size - 1),
+                            seed=i)
+
+    leak = _swap_leak(mk_engine(), stacked, mk_request)
+    resps, dt, eng = _open_loop(mk_engine, mk_request, n_requests, lam)
+    lat = np.asarray([r.latency_s for r in resps]) * 1e3
+    toks = sum(len(r.tokens) for r in resps)
+    return {
+        "mode": "decode", "arch": cfg.name, "bank_s": m, "slots": slots,
+        "n_requests": n_requests, "new_tokens": new_tokens,
+        "decode_requests_per_s": n_requests / dt,
+        "tok_per_s": toks / dt,
+        "p50_ms": float(np.percentile(lat, 50)),
+        "p99_ms": float(np.percentile(lat, 99)),
+        "swap_cache_leak_bytes": float(leak),
+    }
+
+
+def _row(rec: Dict) -> str:
+    key = f"{rec['mode']}_requests_per_s"
+    us = 1e6 / rec[key]
+    name = (f"serve_{rec['mode']}_s{rec['bank_s']}_slots{rec['slots']}"
+            f"_n{rec['n_requests']}")
+    extra = (f"bitwise={rec['serve_vs_eval_bitwise']:.0f};"
+             if "serve_vs_eval_bitwise" in rec else "")
+    return (f"{name},{us:.1f},"
+            f"req_per_s={rec[key]:.1f};p50_ms={rec['p50_ms']:.2f};"
+            f"p99_ms={rec['p99_ms']:.2f};{extra}"
+            f"leak_B={rec['swap_cache_leak_bytes']:.0f}")
+
+
+def _save(rec: Dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    name = (f"{rec['mode']}_s{rec['bank_s']}_slots{rec['slots']}"
+            f"_n{rec['n_requests']}.json")
+    with open(os.path.join(RESULTS_DIR, name), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def run(quick: bool = False, tiny: bool = False) -> List[str]:
+    if tiny:
+        plan_c = [((16, 16), 48, 4, 2, 8, 4.0)]
+        plan_d = [(16, 3, 4, 4, 2.0)]
+    elif quick:
+        plan_c = [((16, 16), 128, 8, 3, 8, 6.0)]
+        plan_d = [(32, 4, 4, 8, 2.0)]
+    else:
+        plan_c = [((16, 16), 256, 12, 5, 8, 6.0),
+                  ((32, 16), 256, 12, 5, 16, 8.0)]
+        plan_d = [(64, 4, 8, 16, 2.0)]
+    rows = []
+    for hw, n, s, k, slots, lam in plan_c:
+        rec = measure_classify(hw, n, s, k, slots, lam)
+        assert rec["serve_vs_eval_bitwise"] == 1.0, rec
+        assert rec["swap_cache_leak_bytes"] == 0.0, rec
+        _save(rec)
+        rows.append(_row(rec))
+    for n, m, slots, new_tokens, lam in plan_d:
+        rec = measure_decode(n, m, slots, new_tokens, lam)
+        assert rec["swap_cache_leak_bytes"] == 0.0, rec
+        _save(rec)
+        rows.append(_row(rec))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: one small config per mode, ~seconds")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(quick=args.quick, tiny=args.tiny):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

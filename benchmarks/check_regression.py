@@ -65,9 +65,10 @@ BENCHES = {
     "transport": "lossy D2D transport: offered/delivered framed bytes",
     "kernels": "Pallas kernel parity bits + fused-update traffic model",
     "fused_compress": "fused encode HBM ledger + bitwise-vs-two-pass bit",
+    "serve": "uncertainty-aware serving engine (bitwise + swap leak + req/s)",
 }
 
-THROUGHPUT_SUFFIX = "rounds_per_s"
+THROUGHPUT_SUFFIX = ("rounds_per_s", "requests_per_s")
 # exact-gated machine-independent columns: byte accounting, ARQ
 # retransmit counts (both threefry-deterministic integers in f32), and
 # the kernels' bitwise-parity bits (1 iff Pallas == reference under jit)

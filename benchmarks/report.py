@@ -226,6 +226,35 @@ def fused_compress_table(results_dir: str = None) -> str:
     return "\n".join(lines)
 
 
+def serve_table(results_dir: str = None) -> str:
+    """§Serving: open-loop throughput/latency on the BMA serving plane."""
+    results_dir = results_dir or os.path.join(
+        os.path.dirname(__file__), "results", "serve")
+    lines = [
+        "| mode | bank S | slots | requests | req/s | p50 ms | p99 ms | "
+        "abstain | bitwise vs eval | swap leak B |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for fn in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        rec = json.load(open(fn))
+        rps = rec.get("classify_requests_per_s",
+                      rec.get("decode_requests_per_s", 0.0))
+        abstain = (f"{rec['abstain_rate']:.3f}"
+                   if "abstain_rate" in rec else "—")
+        bitwise = (f"{rec['serve_vs_eval_bitwise']:.0f}"
+                   if "serve_vs_eval_bitwise" in rec else "—")
+        lines.append(
+            f"| {rec['mode']} | {rec['bank_s']} | {rec['slots']} "
+            f"| {rec['n_requests']} | {rps:.1f} "
+            f"| {rec['p50_ms']:.2f} | {rec['p99_ms']:.2f} "
+            f"| {abstain} | {bitwise} "
+            f"| {rec['swap_cache_leak_bytes']:.0f} |")
+    if len(lines) == 2:
+        lines.append("| _no records — run bench_serve --tiny first_ "
+                     "| | | | | | | | | |")
+    return "\n".join(lines)
+
+
 def main():
     print("### §Dry-run results\n")
     print(dryrun_table())
@@ -246,6 +275,8 @@ def main():
     print("\n### §Fused compression — per-encode HBM ledger "
           "(DESIGN.md §13)\n")
     print(fused_compress_table())
+    print("\n### §Serving — uncertainty-aware BMA serving plane\n")
+    print(serve_table())
     print("\n### §Roofline — single-pod 16×16\n")
     print(markdown_table(mesh="16x16"))
     print("\n### §Roofline — multi-pod 2×16×16\n")

@@ -24,8 +24,9 @@ def main() -> None:
                             bench_eval_engine, bench_fig3_l_sweep,
                             bench_fig4_reliability, bench_fused_compress,
                             bench_kernels, bench_round_engine,
-                            bench_shard_engine, bench_topology_sweep,
-                            bench_transport, bench_wire, roofline)
+                            bench_serve, bench_shard_engine,
+                            bench_topology_sweep, bench_transport,
+                            bench_wire, roofline)
     suites = {
         "fig3_l_sweep": bench_fig3_l_sweep.run,
         "fig4_reliability": bench_fig4_reliability.run,
@@ -38,6 +39,7 @@ def main() -> None:
         "transport": bench_transport.run,
         "kernels": bench_kernels.run,
         "fused_compress": bench_fused_compress.run,
+        "serve": bench_serve.run,
         "roofline": roofline.run,
     }
     # beyond-paper sweeps, opt-in (heavier): --only ablation

@@ -1,24 +1,85 @@
-"""Uncertainty-aware serving: posterior-sample (BMA) batched decoding.
+"""Uncertainty-aware serving: continuous-batching BMA over a posterior bank.
 
-Wraps repro.launch.serve: decodes with multiple posterior samples and shows
-the predictive-entropy safety signal — high entropy -> abstain/escalate,
-the serving-side counterpart of the paper's calibration claim.
+Drives the ``repro.serve`` engine API directly (the CLI equivalent is
+``python -m repro.launch.serve``): builds a small posterior bank, submits
+requests into the slot table while earlier ones are still decoding, and
+reads the predictive-entropy safety signal off each response — high
+entropy -> ``abstain=True`` -> route to a human, the serving-side
+counterpart of the paper's calibration claim (DESIGN.md §14).
 
-    PYTHONPATH=src python examples/bayesian_serving.py --arch qwen2.5-14b
+    PYTHONPATH=src python examples/bayesian_serving.py                # decode
+    PYTHONPATH=src python examples/bayesian_serving.py --mode classify
 """
 import argparse
-import sys
 
-from repro.launch import serve
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ServeConfig, get_arch
+from repro.models import get_model
+from repro.serve import ClassifyEngine, DecodeEngine, ServeRequest
+
+
+def synthetic_bank(model, samples, key):
+    """Jittered inits standing in for an SGLD chain (see launch.train
+    --bank-capacity for the real train -> snapshot -> serve pipeline)."""
+    ps = [model.init(jax.random.fold_in(key, i)) for i in range(samples)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2.5-14b")
-    args, _ = ap.parse_known_args()
-    sys.argv = [sys.argv[0], "--arch", args.arch, "--trim", "--batch", "4",
-                "--steps", "16", "--samples", "3"]
-    serve.main()
+    ap.add_argument("--mode", default="decode",
+                    choices=["decode", "classify"])
+    ap.add_argument("--arch", default=None,
+                    help="default: smollm-135m (decode) / lenet-radar")
+    ap.add_argument("--samples", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=12)
+    args = ap.parse_args()
+
+    arch = args.arch or ("lenet-radar" if args.mode == "classify"
+                         else "smollm-135m")
+    cfg = get_arch(arch).reduced
+    model = get_model(cfg)
+    stacked = synthetic_bank(model, args.samples, jax.random.PRNGKey(0))
+
+    if args.mode == "classify":
+        from repro.data.radar import make_dataset
+        ds = make_dataset(args.requests, hw=cfg.input_hw, seed=7)
+        scfg = ServeConfig(slots=4, entropy_threshold=1.2)
+        eng = ClassifyEngine(lambda p, b: model.logits(p, b), scfg,
+                             input_shape=ds["x"].shape[1:], stacked=stacked)
+        reqs = [ServeRequest(x=ds["x"][i]) for i in range(args.requests)]
+    else:
+        scfg = ServeConfig(slots=4, max_len=32, max_new_tokens=8,
+                           entropy_threshold=0.8 * np.log(cfg.vocab_size))
+        eng = DecodeEngine(model, scfg, stacked=stacked)
+        reqs = [ServeRequest(prompt_token=1 + i % (cfg.vocab_size - 1),
+                             seed=i)
+                for i in range(args.requests)]
+
+    # continuous batching: submit everything, drain step by step — the
+    # engine admits/retires per decode step against the fixed slot table
+    for r in reqs:
+        eng.submit(r)
+    resps = []
+    while eng.pending():
+        resps.extend(eng.step())
+    resps.sort(key=lambda r: r.request_id)
+
+    for r in resps:
+        verdict = "ABSTAIN -> human" if r.abstain else "serve"
+        tail = (f" tokens={r.tokens.tolist()}" if r.tokens is not None
+                else f" pred={int(np.argmax(r.probs))}")
+        print(f"req {r.request_id:2d}: entropy={r.entropy:.3f} nats "
+              f"[{verdict}] latency_ms={1e3 * r.latency_s:.1f}{tail}")
+    st = eng.stats()
+    print(f"\nserved={int(st['served'])} "
+          f"abstain_rate={st['abstain_rate']:.2f} "
+          f"p50_ms={st['p50_ms']:.1f} p99_ms={st['p99_ms']:.1f} "
+          f"(bank S={eng.num_samples()}, {eng.compile_count()} compiles "
+          f"for {int(st['steps'])} steps)")
 
 
 if __name__ == "__main__":

@@ -1,2 +1,4 @@
 from repro.checkpoint.checkpoint import (save_checkpoint, load_checkpoint,  # noqa: F401
-                                         load_checkpoint_tree, latest_step)
+                                         load_checkpoint_tree, latest_step,
+                                         save_bank, load_bank,
+                                         latest_bank_step)

@@ -108,6 +108,88 @@ def load_checkpoint_tree(ckpt_dir: str, step: Optional[int] = None) -> Any:
     return tree
 
 
+# --------------------------------------------------------------------------
+# Posterior-bank snapshots: the train -> serve pipeline (DESIGN.md §14)
+# --------------------------------------------------------------------------
+
+BANK_PREFIX = "bank_"
+
+
+def save_bank(ckpt_dir: str, step: int, stacked: Any,
+              metadata: Optional[Dict] = None) -> str:
+    """Snapshot a stacked posterior bank for the serving plane.
+
+    ``stacked`` is the ``(S, ...)`` (or ``(S, K, ...)``) pytree that
+    :meth:`DeviceSampleBank.stacked` / ``as_stacked`` produce — params
+    with leading ensemble axes. Same sharded-npz format as
+    :func:`save_checkpoint` under a ``bank_`` prefix, so training can
+    interleave plain-params and bank snapshots in one directory. The
+    manifest records the ensemble shape so ``load_bank`` can validate
+    hot-swap compatibility before installing.
+    """
+    meta = dict(metadata or {})
+    lead = np.shape(jax.tree.leaves(stacked)[0])
+    meta.setdefault("bank_samples", int(lead[0]))
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = save_checkpoint(os.path.join(ckpt_dir, ".bank_tmp"), step,
+                           stacked, metadata=meta)
+    # atomic publish: write under a temp dir, then rename into place so a
+    # concurrently polling server never loads a half-written snapshot
+    final = os.path.join(ckpt_dir, f"{BANK_PREFIX}{step:08d}")
+    for ext in (".npz", ".json"):
+        os.replace(path + ext, final + ext)
+    try:
+        os.rmdir(os.path.join(ckpt_dir, ".bank_tmp"))
+    except OSError:
+        pass
+    return final
+
+
+def load_bank(ckpt_dir: str, step: Optional[int] = None,
+              like: Any = None) -> Any:
+    """Restore a stacked posterior bank saved by :func:`save_bank`.
+
+    ``like`` provides the treedef (any params pytree of the same model —
+    leaf shapes are ignored, only the structure is used); without it the
+    manifest key paths rebuild a nested dict (dict-keyed trees only).
+    """
+    if step is None:
+        step = latest_bank_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no bank snapshots in {ckpt_dir}")
+    base = os.path.join(ckpt_dir, f"{BANK_PREFIX}{step:08d}")
+    data = np.load(base + ".npz")
+    with open(base + ".json") as f:
+        manifest = json.load(f)
+    leaves = []
+    for e in manifest["leaves"]:
+        arr = data[e["name"]]
+        if e["dtype"] == "bfloat16":
+            arr = arr.view(jax.numpy.bfloat16)
+        leaves.append(arr)
+    if like is not None:
+        return jax.tree.unflatten(jax.tree.structure(like), leaves)
+    tree: Dict = {}
+    for e, arr in zip(manifest["leaves"], leaves):
+        parts = e["path"].split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return tree
+
+
+def latest_bank_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for fn in os.listdir(ckpt_dir):
+        m = re.match(rf"{BANK_PREFIX}(\d+)\.npz", fn)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
     if not os.path.isdir(ckpt_dir):
         return None

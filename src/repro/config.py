@@ -208,6 +208,36 @@ class ParticipationConfig:
 
 
 @dataclass(frozen=True)
+class ServeConfig:
+    """Uncertainty-aware serving plane (DESIGN.md §14).
+
+    Pure data, mirroring :class:`TransportConfig` / :class:`ParticipationConfig`
+    — ``repro.serve.engine`` interprets it and ``launch/serve.py`` is a thin
+    argparse shim over it. The slot table is the fixed compiled shape:
+    requests are admitted into / retired from ``slots`` lanes per engine
+    step with zero recompiles after warmup.
+    """
+    slots: int = 8                  # fixed-shape request slot table size
+    max_len: int = 128              # decode KV-cache capacity per slot
+    max_new_tokens: int = 16        # decode generation budget per request
+    temperature: float = 1.0        # decode softmax temperature
+    # entropy-gated selective prediction: abstain (route-to-human) when the
+    # predictive entropy exceeds this many nats; inf = always answer. The
+    # rule is shared with the eval engine's selective accounting, so a
+    # threshold tuned on an EvalReport transfers to serving unchanged.
+    entropy_threshold: float = float("inf")
+    # >0: the serving CLI polls the checkpoint dir at this period and
+    # hot-swaps newly landed posterior banks into the running engine
+    hot_swap_poll_s: float = 0.0
+    # mesh axis name to shard the bank's sample axis over ("" = replicated);
+    # BMA then scales with devices (core.posterior.place_ensemble)
+    ensemble_axis: str = ""
+
+    def replace(self, **kw) -> "ServeConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
 class FedConfig:
     num_nodes: int = 10             # K
     topology: str = "full"          # legacy string: full | ring | grid | star

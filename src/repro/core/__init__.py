@@ -27,9 +27,11 @@ from repro.core.algorithms import (
     make_round_fn,
     RoundMetrics,
 )
-from repro.core.posterior import (SampleBank, DeviceSampleBank,
-                                  DeviceBankState, bma_predict,
-                                  bma_predict_stacked, point_predict)
+from repro.core.posterior import (BankPredictor, SampleBank,
+                                  DeviceSampleBank, DeviceBankState,
+                                  PosteriorPredictor, bma_predict,
+                                  bma_predict_stacked, place_ensemble,
+                                  point_predict, predictive_entropy)
 from repro.core import calibration
 
 __all__ = [
@@ -47,5 +49,7 @@ __all__ = [
     "FedState", "init_fed_state", "make_cdbfl_round",
     "make_dsgld_round", "make_cffl_round", "make_sgld_step", "make_round_fn",
     "RoundMetrics", "SampleBank", "DeviceSampleBank", "DeviceBankState",
-    "bma_predict", "bma_predict_stacked", "point_predict", "calibration",
+    "BankPredictor", "PosteriorPredictor", "bma_predict",
+    "bma_predict_stacked", "place_ensemble", "point_predict",
+    "predictive_entropy", "calibration",
 ]

@@ -7,7 +7,8 @@ predictive distribution that gives the calibration gains the paper measures.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, List, NamedTuple, Optional
+import warnings
+from typing import Any, Callable, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -221,15 +222,137 @@ def bma_predict_stacked(apply_fn: Callable, stacked, batch,
     return jnp.mean(probs, axis=axes)
 
 
+def predictive_entropy(probs: jnp.ndarray) -> jnp.ndarray:
+    """Entropy of the predictive distribution, nats, last axis reduced.
+
+    The paper's serving-time uncertainty signal — high entropy means the
+    posterior disagrees and the prediction should not be trusted. This is
+    the *one* entropy formula: the eval accumulators, the serving engine's
+    abstain gate and the CLI all route through it, so an entropy threshold
+    tuned on an eval report transfers to serving unchanged.
+    """
+    p = probs.astype(jnp.float32)
+    return -jnp.sum(p * jnp.log(jnp.maximum(p, 1e-12)), axis=-1)
+
+
+class PosteriorPredictor:
+    """The one way to get predictions out of a posterior (DESIGN.md §14).
+
+    ``predict(batch) -> (probs, entropy)`` — BMA probabilities plus the
+    predictive-entropy uncertainty signal, whatever holds the samples.
+    Eval engines, the serving plane and the examples all consume this
+    protocol; the legacy per-sample loops (:func:`bma_predict`, serve.py's
+    ad-hoc softmax loop) are deprecated in its favor.
+    """
+
+    def predict(self, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        raise NotImplementedError
+
+
+class BankPredictor(PosteriorPredictor):
+    """Compiled-once facade over a resident stacked sample bank.
+
+    ``stacked`` carries a leading sample axis ``(S, ...)`` (and with
+    ``node_axis=1`` a node-chain axis ``(S, K, ...)``) — the layout
+    :meth:`DeviceSampleBank.stacked` produces. The BMA kernel is jitted
+    once per batch shape; :meth:`install` atomically swaps in a new bank
+    between calls without touching the compiled path (same sample-axis
+    shape → zero recompiles, the serving engine's hot-swap contract).
+
+    With ``mesh``/``ensemble_axis`` the sample axis is sharded over the
+    mesh (:func:`place_ensemble`), so BMA cost scales down with devices —
+    the ensemble dimension is a parallel axis, not a loop.
+    """
+
+    def __init__(self, apply_fn: Callable, stacked: Any = None,
+                 node_axis: Optional[int] = None, mesh=None,
+                 ensemble_axis: str = ""):
+        self.apply_fn = apply_fn
+        self.node_axis = node_axis
+        self.mesh = mesh
+        self.ensemble_axis = ensemble_axis
+        self._fn = jax.jit(self._predict)
+        self._stacked = None
+        if stacked is not None:
+            self.install(stacked)
+
+    def _predict(self, stacked, batch):
+        probs = bma_predict_stacked(self.apply_fn, stacked, batch,
+                                    node_axis=self.node_axis)
+        return probs, predictive_entropy(probs)
+
+    # -- bank lifecycle ----------------------------------------------------
+    def install(self, stacked) -> None:
+        """Atomically install a new bank (posterior hot swap).
+
+        The reference swap is a single Python assignment, so concurrent
+        ``predict`` calls see either the old bank or the new one, never a
+        mix. Keeping the sample-axis length constant keeps the compiled
+        kernel valid (no recompile, no cache realloc downstream).
+        """
+        if self.mesh is not None and self.ensemble_axis:
+            stacked = place_ensemble(stacked, self.mesh, self.ensemble_axis)
+        self._stacked = stacked
+
+    @property
+    def stacked(self):
+        return self._stacked
+
+    def num_samples(self) -> int:
+        if self._stacked is None:
+            return 0
+        return int(jax.tree.leaves(self._stacked)[0].shape[0])
+
+    def compile_count(self) -> int:
+        """Entries in the predict kernel's jit cache (zero-recompile gate)."""
+        return self._fn._cache_size()
+
+    def predict(self, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        if self._stacked is None:
+            raise ValueError("no bank installed; call install(stacked)")
+        return self._fn(self._stacked, batch)
+
+
+def place_ensemble(stacked, mesh, axis: str):
+    """Shard the leading (sample) axis of a stacked bank over ``mesh[axis]``.
+
+    Serving's BMA vmap then runs S/num_devices samples per device and the
+    probability mean lowers to one all-reduce — the ensemble dimension is
+    the natural serving-scale axis because samples never communicate
+    until the final average. The sample count must divide the axis size.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    n = int(mesh.shape[axis])
+
+    def put(x):
+        if x.shape[0] % n:
+            raise ValueError(
+                f"sample axis {x.shape[0]} does not divide over "
+                f"mesh axis {axis!r} ({n} devices)")
+        spec = P(*((axis,) + (None,) * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, stacked)
+
+
 def bma_predict(apply_fn: Callable, samples: List[Any], batch,
                 node_axis: Optional[int] = None) -> jnp.ndarray:
     """Average softmax probabilities over posterior samples.
+
+    .. deprecated:: PR 9
+        One traced dispatch per sample; kept only as the legacy reference
+        oracle. Use :class:`BankPredictor` (or the stacked kernel
+        :func:`bma_predict_stacked`) — one vmap over the whole bank.
 
     ``apply_fn(params, batch) -> logits``. If params carry a leading node
     axis (decentralized setting), ``node_axis=0`` additionally averages over
     nodes — each node's chain contributes samples, as in the paper's
     evaluation of the device consensus model.
     """
+    warnings.warn(
+        "bma_predict (per-sample dispatch loop) is deprecated; use "
+        "repro.core.posterior.BankPredictor / bma_predict_stacked",
+        DeprecationWarning, stacklevel=2)
     probs = None
     n = 0
     for params in samples:

@@ -1,11 +1,12 @@
 """Device-resident evaluation: fused BMA metrics + scenario matrix."""
 from repro.eval.engine import (EvalAccum, EvalReport, HostEvalEngine,
-                               ScanEvalEngine, ShardEvalEngine, as_stacked,
-                               finalize, init_accum, make_eval_engine,
-                               stack_eval_batches, update_accum)
+                               ScanEvalEngine, ShardEvalEngine, abstain_mask,
+                               as_stacked, finalize, init_accum,
+                               make_eval_engine, stack_eval_batches,
+                               update_accum)
 
 __all__ = [
     "EvalAccum", "EvalReport", "HostEvalEngine", "ScanEvalEngine",
-    "ShardEvalEngine", "as_stacked", "finalize", "init_accum",
-    "make_eval_engine", "stack_eval_batches", "update_accum",
+    "ShardEvalEngine", "abstain_mask", "as_stacked", "finalize",
+    "init_accum", "make_eval_engine", "stack_eval_batches", "update_accum",
 ]

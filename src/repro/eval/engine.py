@@ -43,7 +43,18 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.calibration import ReliabilityBins
-from repro.core.posterior import bma_predict_stacked
+from repro.core.posterior import bma_predict_stacked, predictive_entropy
+
+
+def abstain_mask(entropy: jnp.ndarray, threshold: float) -> jnp.ndarray:
+    """Entropy-gated selective prediction: True = abstain/route-to-human.
+
+    The one abstain rule (DESIGN.md §14), shared between the serving
+    engine's per-request gate and the eval accumulators' selective
+    accounting — a threshold tuned on an :class:`EvalReport` transfers to
+    serving unchanged.
+    """
+    return entropy > threshold
 
 
 class EvalAccum(NamedTuple):
@@ -56,6 +67,9 @@ class EvalAccum(NamedTuple):
     bin_counts: jax.Array    # (O,) f32 — reliability-bin occupancy
     bin_conf: jax.Array      # (O,) f32 — summed confidence per bin
     bin_acc: jax.Array       # (O,) f32 — summed accuracy per bin
+    # entropy-gated selective prediction (0-valued at threshold = inf)
+    abstained: jax.Array     # () f32 — examples over the entropy threshold
+    kept_correct: jax.Array  # () f32 — argmax hits among answered examples
 
 
 class EvalReport(NamedTuple):
@@ -71,22 +85,29 @@ class EvalReport(NamedTuple):
     overconf_gap: float
     count: float
     bins: ReliabilityBins
+    # selective prediction under the entropy gate (abstain_mask): the
+    # fraction routed to a human, and accuracy over the answered rest
+    # (degenerates to 0 / accuracy at the default threshold = inf)
+    abstain_rate: float = 0.0
+    kept_accuracy: float = float("nan")
 
 
 def init_accum(num_bins: int) -> EvalAccum:
     z = jnp.zeros((), jnp.float32)
     zb = jnp.zeros((num_bins,), jnp.float32)
-    return EvalAccum(z, z, z, z, z, zb, zb, zb)
+    return EvalAccum(z, z, z, z, z, zb, zb, zb, z, z)
 
 
 def update_accum(accum: EvalAccum, probs: jnp.ndarray, labels: jnp.ndarray,
-                 mask: jnp.ndarray, num_bins: int) -> EvalAccum:
+                 mask: jnp.ndarray, num_bins: int,
+                 entropy_threshold: float = float("inf")) -> EvalAccum:
     """Fold one (B, C) probability batch into the accumulators.
 
     ``mask`` (B,) zeroes padded tail examples. The bin rule matches
     ``core.calibration.reliability_bins`` (right-inclusive, Guo et al.
     '17), so finalized ECE/MCE agree with the host formulas up to batch
-    summation order.
+    summation order. ``entropy_threshold`` feeds the selective-prediction
+    accumulators only; every other statistic still scores all examples.
     """
     probs = probs.astype(jnp.float32)
     mask = mask.astype(jnp.float32)
@@ -106,7 +127,9 @@ def update_accum(accum: EvalAccum, probs: jnp.ndarray, labels: jnp.ndarray,
     nll = -jnp.log(jnp.maximum(p_label, 1e-12)) * mask
     onehot = jax.nn.one_hot(labels, probs.shape[-1], dtype=jnp.float32)
     brier = jnp.sum(jnp.square(probs - onehot), axis=-1) * mask
-    ent = -jnp.sum(probs * jnp.log(jnp.maximum(probs, 1e-12)), axis=-1) * mask
+    ent_raw = predictive_entropy(probs)
+    ent = ent_raw * mask
+    abstain = abstain_mask(ent_raw, entropy_threshold).astype(jnp.float32)
     idx = jnp.clip(jnp.ceil(conf * num_bins).astype(jnp.int32) - 1,
                    0, num_bins - 1)
     return EvalAccum(
@@ -118,6 +141,8 @@ def update_accum(accum: EvalAccum, probs: jnp.ndarray, labels: jnp.ndarray,
         bin_counts=accum.bin_counts.at[idx].add(mask),
         bin_conf=accum.bin_conf.at[idx].add(conf * mask),
         bin_acc=accum.bin_acc.at[idx].add(correct),
+        abstained=accum.abstained + jnp.sum(abstain * mask),
+        kept_correct=accum.kept_correct + jnp.sum(correct * (1.0 - abstain)),
     )
 
 
@@ -149,6 +174,9 @@ def finalize(accum: EvalAccum) -> EvalReport:
                            / max(int(occ.sum()), 1)),
         count=float(accum.n),
         bins=bins,
+        abstain_rate=float(accum.abstained / n),
+        kept_accuracy=float(accum.kept_correct
+                            / max(float(accum.n - accum.abstained), 1.0)),
     )
 
 
@@ -215,10 +243,12 @@ class ScanEvalEngine:
     name = "scan"
 
     def __init__(self, apply_fn: Callable, num_bins: int = 10,
-                 batch_size: int = 64):
+                 batch_size: int = 64,
+                 entropy_threshold: float = float("inf")):
         self.apply_fn = apply_fn
         self.num_bins = int(num_bins)
         self.batch_size = int(batch_size)
+        self.entropy_threshold = float(entropy_threshold)
         self._fns = {}
 
     def _fn(self, node_axis: Optional[int], with_probs: bool):
@@ -230,7 +260,8 @@ class ScanEvalEngine:
                     probs = bma_predict_stacked(self.apply_fn, stacked,
                                                 batch, node_axis=node_axis)
                     acc = update_accum(acc, probs, batch["y"], mask,
-                                      self.num_bins)
+                                      self.num_bins,
+                                      self.entropy_threshold)
                     return acc, (probs if with_probs else None)
                 return jax.lax.scan(body, accum0, (batches, masks))
             # the scan carry (the accumulators) updates in place inside the
@@ -268,10 +299,12 @@ class HostEvalEngine:
     name = "host"
 
     def __init__(self, apply_fn: Callable, num_bins: int = 10,
-                 batch_size: int = 64):
+                 batch_size: int = 64,
+                 entropy_threshold: float = float("inf")):
         self.apply_fn = apply_fn
         self.num_bins = int(num_bins)
         self.batch_size = int(batch_size)
+        self.entropy_threshold = float(entropy_threshold)
         self._fns = {}
 
     def _step(self, node_axis: Optional[int]):
@@ -280,7 +313,8 @@ class HostEvalEngine:
                 probs = bma_predict_stacked(self.apply_fn, stacked, batch,
                                             node_axis=node_axis)
                 return update_accum(acc, probs, batch["y"], mask,
-                                    self.num_bins), probs
+                                    self.num_bins,
+                                    self.entropy_threshold), probs
             self._fns[node_axis] = jax.jit(step)
         return self._fns[node_axis]
 
@@ -320,12 +354,14 @@ class ShardEvalEngine:
     name = "shard"
 
     def __init__(self, apply_fn: Callable, mesh, fed_axis: str = "fed",
-                 num_bins: int = 10, batch_size: int = 64):
+                 num_bins: int = 10, batch_size: int = 64,
+                 entropy_threshold: float = float("inf")):
         self.apply_fn = apply_fn
         self.mesh = mesh
         self.fed_axis = fed_axis
         self.num_shards = int(mesh.shape[fed_axis])
         self.num_bins = int(num_bins)
+        self.entropy_threshold = float(entropy_threshold)
         # per-shard batch slices must tile the batch exactly
         self.batch_size = -(-int(batch_size) // self.num_shards
                             ) * self.num_shards
@@ -350,6 +386,7 @@ class ShardEvalEngine:
         key = k_total
         if key not in self._fns:
             axis, num_bins = self.fed_axis, self.num_bins
+            ent_thr = self.entropy_threshold
             slice_b = self.batch_size // self.num_shards
 
             def local(stacked_l, batches, masks):
@@ -367,7 +404,7 @@ class ShardEvalEngine:
                     probs = jax.lax.psum(p_sum, axis) / (
                         logits.shape[0] * k_total)
                     acc = update_accum(acc, probs, batch["y"], mask * own,
-                                      num_bins)
+                                      num_bins, ent_thr)
                     return acc, None
 
                 acc, _ = jax.lax.scan(body, init_accum(num_bins),
@@ -394,17 +431,21 @@ class ShardEvalEngine:
 
 
 def make_eval_engine(name: str, apply_fn: Callable, num_bins: int = 10,
-                     batch_size: int = 64, mesh=None, fed_axis: str = "fed"):
+                     batch_size: int = 64, mesh=None, fed_axis: str = "fed",
+                     entropy_threshold: float = float("inf")):
     """Factory mirroring ``train.engine.make_engine``."""
     if name == "scan":
-        return ScanEvalEngine(apply_fn, num_bins, batch_size)
+        return ScanEvalEngine(apply_fn, num_bins, batch_size,
+                              entropy_threshold)
     if name == "host":
-        return HostEvalEngine(apply_fn, num_bins, batch_size)
+        return HostEvalEngine(apply_fn, num_bins, batch_size,
+                              entropy_threshold)
     if name == "shard":
         if mesh is None:
             from repro.launch.mesh import make_fed_mesh
             mesh = make_fed_mesh(fed_axis=fed_axis)
         return ShardEvalEngine(apply_fn, mesh, fed_axis, num_bins,
-                               batch_size)
+                               batch_size,
+                               entropy_threshold=entropy_threshold)
     raise ValueError(f"unknown eval engine {name!r}; "
                      f"use 'scan', 'host' or 'shard'")

@@ -130,6 +130,16 @@ def _parse_args():
                          "matches all, e.g. 'embed=block_topk;"
                          "*=block_topk|qsgd'")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--bank-capacity", type=int, default=0,
+                    help=">0: keep a device-resident posterior sample bank "
+                         "of this capacity (cdbfl/dsgld) and snapshot it to "
+                         "--ckpt-dir at every --eval-every boundary — the "
+                         "train -> serve pipeline (launch.serve hot-swaps "
+                         "the snapshots in)")
+    ap.add_argument("--burn-in", type=int, default=-1,
+                    help="rounds before bank admission (-1: rounds // 2)")
+    ap.add_argument("--thin", type=int, default=1,
+                    help="bank admission stride after burn-in")
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--engine", default="scan",
                     choices=["scan", "host", "shard"],
@@ -170,7 +180,7 @@ def main():
     import jax
     import numpy as np
 
-    from repro.checkpoint import save_checkpoint
+    from repro.checkpoint import save_bank, save_checkpoint
     from repro.config import FedConfig, TopologyConfig, get_arch
     from repro.core import (ShardContext, build_topology, init_fed_state,
                             make_compressor, make_round_fn,
@@ -324,10 +334,26 @@ def main():
         from repro.launch.sharding import place_fed_state
         state = place_fed_state(state, mesh, args.fed_axis)
         dshards = dshards.with_sharding(mesh, args.fed_axis)
+    # posterior bank: the serving plane's sample source (DESIGN.md §14)
+    bank_cfg = bank_state = None
+    if args.bank_capacity > 0 and args.algorithm in ("cdbfl", "dsgld"):
+        from repro.core.posterior import DeviceSampleBank
+        burn = args.burn_in if args.burn_in >= 0 else args.rounds // 2
+        bank_cfg = DeviceSampleBank(burn_in=burn,
+                                    capacity=args.bank_capacity,
+                                    thin=args.thin)
     engine = make_engine(args.engine, round_fn, dshards, fed.local_steps,
-                         args.batch, bank=None,
+                         args.batch, bank=bank_cfg,
                          chunk=args.log_every or 64,
                          mesh=mesh, fed_axis=args.fed_axis)
+    if bank_cfg is not None:
+        # host engine keeps the mutable list bank; scan/shard carry the
+        # device ring buffer through the fused rounds
+        bank_state = (engine.make_bank() if args.engine == "host"
+                      else bank_cfg.init(state.params))
+        print(f"posterior bank: capacity={args.bank_capacity} "
+              f"burn_in={bank_cfg.burn_in} thin={bank_cfg.thin}"
+              + (f" snapshots -> {args.ckpt_dir}" if args.ckpt_dir else ""))
     if args.mesh > 1:
         sub = ("shard_map + ppermute collectives" if args.engine == "shard"
                else "GSPMD-auto (sharded placement)")
@@ -363,24 +389,53 @@ def main():
         f"round {t:4d} loss={loss:.4f} consensus={cons:.3e} "
         f"({(time.time()-t0)/max(t, 1):.2f}s/round)")
     key = jax.random.fold_in(key, 1)
+
+    def bank_stacked():
+        """(S, K, ...) posterior samples, or None while still empty."""
+        if bank_cfg is None or bank_state is None:
+            return None
+        if hasattr(bank_state, "samples"):          # host SampleBank
+            if not bank_state.samples:
+                return None
+            import jax.numpy as jnp
+            return jax.tree.map(lambda *xs: jnp.stack(xs),
+                                *bank_state.samples)
+        if not bank_cfg.length(bank_state):
+            return None
+        return bank_cfg.stacked(bank_state)
+
     segment = args.eval_every if args.eval_every > 0 else args.rounds
     done = 0
     while done < args.rounds:
         n = min(segment, args.rounds - done)
-        state, key, _, losses, _ = engine.run(
-            state, key, None, n, t0=done,
+        state, key, bank_state, losses, _ = engine.run(
+            state, key, bank_state, n, t0=done,
             log_every=args.log_every, log_cb=log_cb)
         done += n
+        stacked_bank = bank_stacked()
         if eval_engine is not None:
-            stacked = as_stacked(state.params)
+            # BMA over the posterior bank once it has samples; the
+            # consensus point model before burn-in
+            stacked = (stacked_bank if stacked_bank is not None
+                       else as_stacked(state.params))
             if args.engine == "shard":
                 rep = eval_engine.evaluate(stacked, eval_ds)
             else:
                 rep = eval_engine.evaluate(stacked, eval_ds, node_axis=1)
+            s = jax.tree.leaves(stacked)[0].shape[0]
             print(f"eval  round {done:4d} [{args.eval_scenario}"
-                  f"@{args.eval_severity:g}] acc={rep.accuracy:.4f} "
+                  f"@{args.eval_severity:g}] S={s} acc={rep.accuracy:.4f} "
                   f"ece={rep.ece:.4f} nll={rep.nll:.4f} "
                   f"gap={rep.overconf_gap:+.4f}")
+        if args.ckpt_dir and stacked_bank is not None:
+            # atomic publish: a concurrently polling server (launch.serve
+            # --poll-s) hot-swaps this snapshot in without ever seeing a
+            # half-written file
+            path = save_bank(args.ckpt_dir, done,
+                             jax.tree.map(np.asarray, stacked_bank),
+                             metadata={"arch": cfg.name, "round": done})
+            print(f"bank snapshot: {path} "
+                  f"(S={jax.tree.leaves(stacked_bank)[0].shape[0]})")
     offered = getattr(engine, "last_offered_history", [])
     if offered and float(offered[-1]) > 0:
         delivered = float(engine.last_delivered_history[-1])

@@ -1,0 +1,9 @@
+"""Serving plane: uncertainty-aware engine over a resident posterior bank."""
+from repro.serve.engine import (ClassifyEngine, DecodeEngine, ServeRequest,
+                                ServeResponse, ServingEngine,
+                                live_device_bytes)
+
+__all__ = [
+    "ClassifyEngine", "DecodeEngine", "ServeRequest", "ServeResponse",
+    "ServingEngine", "live_device_bytes",
+]

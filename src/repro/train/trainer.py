@@ -357,6 +357,19 @@ class FedTrainer:
             self._eval_engines[kind] = eng
         return eng
 
+    def predictor(self):
+        """:class:`~repro.core.posterior.BankPredictor` over the current
+        posterior bank — the serving-side view of this trainer
+        (DESIGN.md §14): hand it to :class:`repro.serve.ClassifyEngine`
+        or call ``predict(batch)`` for (BMA probs, predictive entropy).
+        Falls back to the point estimate while the bank is empty."""
+        from repro.core.posterior import BankPredictor
+        stacked = self._stacked_bank()
+        if stacked is None:
+            stacked = as_stacked(self.state.params)    # (1, K, ...)
+        return BankPredictor(lambda p, b: self.model.logits(p, b),
+                             stacked=stacked, node_axis=1)
+
     def eval_report(self, batch: Dict[str, np.ndarray],
                     return_probs: bool = False):
         """Evaluate the current model through the fused eval engine

@@ -1,0 +1,390 @@
+"""Serving-engine contracts (DESIGN.md §14).
+
+The load-bearing guarantees of ``repro.serve``:
+
+* serving BMA probabilities are **bitwise-equal** to the eval engines'
+  (same kernel, same shapes — an entropy threshold tuned offline means
+  the same thing online);
+* continuous batching never recompiles after warmup (fixed-shape slot
+  table, traced indices only);
+* a posterior hot swap mid-stream leaves completed outputs untouched,
+  keeps in-flight requests alive, and neither recompiles nor grows
+  device memory (the old serve demo's per-sample cache list leaked);
+* abstain decisions are a pure function of the request — independent
+  of what else shares the batch;
+* bank snapshots round-trip through the checkpoint layer.
+"""
+import gc
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_bank_step, load_bank, save_bank
+from repro.config import ServeConfig, get_arch
+from repro.core.posterior import (BankPredictor, bma_predict_stacked,
+                                  place_ensemble, predictive_entropy)
+from repro.data.radar import make_dataset
+from repro.eval import ScanEvalEngine, abstain_mask
+from repro.models import get_model
+from repro.serve import (ClassifyEngine, DecodeEngine, ServeRequest,
+                         live_device_bytes)
+
+NDEV = jax.device_count()
+HW = (16, 16)
+S, K = 3, 2
+
+
+@pytest.fixture(scope="module")
+def radar():
+    cfg = get_arch("lenet-radar").reduced.replace(input_hw=HW)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+
+    def node_stack(i):
+        ps = [model.init(jax.random.fold_in(key, i * K + j))
+              for j in range(K)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[node_stack(i) for i in range(S)])
+    ds = make_dataset(24, hw=HW, day=2, seed=5)
+    apply = lambda p, b: model.logits(p, b)
+    return model, apply, stacked, ds
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_arch("smollm-135m").reduced
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(1)
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[model.init(jax.random.fold_in(key, i)) for i in range(S)])
+    return model, stacked
+
+
+def _classify_engine(apply, stacked, ds, **kw):
+    scfg = ServeConfig(slots=8, **kw)
+    return ClassifyEngine(apply, scfg, input_shape=ds["x"].shape[1:],
+                          stacked=stacked, node_axis=1)
+
+
+# -------------------------------------------------------------------------
+# bitwise parity with the eval plane
+# -------------------------------------------------------------------------
+
+def test_classify_bitwise_equals_scan_eval(radar):
+    _, apply, stacked, ds = radar
+    eng = _classify_engine(apply, stacked, ds)
+    resps = eng.run([ServeRequest(x=ds["x"][i]) for i in range(24)])
+    serve_probs = np.stack([r.probs for r in resps])
+
+    rep, eval_probs = ScanEvalEngine(apply, batch_size=8).evaluate(
+        stacked, ds, node_axis=1, return_probs=True)
+    assert np.array_equal(serve_probs, eval_probs)      # bitwise
+    # and the entropies are the shared formula over those probs (up to
+    # XLA fusion order: the engine computes entropy inside its own
+    # compiled program, so allow 1-ulp reassociation)
+    ent = np.asarray(predictive_entropy(jnp.asarray(serve_probs)))
+    np.testing.assert_allclose(
+        np.asarray([r.entropy for r in resps], np.float32), ent,
+        rtol=1e-6, atol=0)
+
+
+def test_bank_predictor_matches_stacked_kernel(radar):
+    _, apply, stacked, ds = radar
+    pred = BankPredictor(apply, stacked=stacked, node_axis=1)
+    probs, ent = pred.predict({"x": jnp.asarray(ds["x"][:8])})
+    ref = bma_predict_stacked(apply, stacked, {"x": jnp.asarray(ds["x"][:8])},
+                              node_axis=1)
+    assert np.array_equal(np.asarray(probs), np.asarray(ref))
+    np.testing.assert_allclose(np.asarray(ent),
+                               np.asarray(predictive_entropy(ref)),
+                               rtol=1e-6, atol=0)
+    assert pred.num_samples() == S
+    assert pred.compile_count() == 1
+
+
+def test_bma_predict_deprecated(radar):
+    from repro.core.posterior import bma_predict
+    model, apply, stacked, ds = radar
+    sample = jax.tree.map(lambda x: x[0, 0], stacked)
+    with pytest.warns(DeprecationWarning):
+        bma_predict(apply, [sample], {"x": jnp.asarray(ds["x"][:4])})
+
+
+# -------------------------------------------------------------------------
+# continuous batching: zero recompiles, composition-independence
+# -------------------------------------------------------------------------
+
+def test_classify_zero_recompiles_across_occupancy(radar):
+    _, apply, stacked, ds = radar
+    eng = _classify_engine(apply, stacked, ds)
+    eng.run([ServeRequest(x=ds["x"][0])])               # warmup: 1/8 slots
+    c0 = eng.compile_count()
+    # full slots, partial slots, single request — every occupancy level
+    eng.run([ServeRequest(x=ds["x"][i]) for i in range(17)])
+    eng.run([ServeRequest(x=ds["x"][3])])
+    assert eng.compile_count() == c0
+    assert c0 == 2                                      # predict + slot write
+
+
+def test_decode_zero_recompiles_mixed_lengths(lm):
+    model, stacked = lm
+    scfg = ServeConfig(slots=4, max_len=16, max_new_tokens=4)
+    eng = DecodeEngine(model, scfg, stacked=stacked)
+    eng.run([ServeRequest(prompt_token=1, seed=0)])     # warmup
+    c0 = eng.compile_count()
+    reqs = [ServeRequest(prompt_token=i + 1, max_new_tokens=2 + (i % 3),
+                         seed=i) for i in range(9)]
+    resps = eng.run(reqs)
+    assert len(resps) == 9
+    assert eng.compile_count() == c0 == 2               # step + admit
+    for r, q in zip(resps, reqs):
+        assert len(r.tokens) == (q.max_new_tokens or scfg.max_new_tokens)
+        assert len(r.token_entropy) == len(r.tokens)
+
+
+def test_decode_tokens_independent_of_batch_composition(lm):
+    model, stacked = lm
+    scfg = ServeConfig(slots=4, max_len=16, max_new_tokens=5)
+    batched = DecodeEngine(model, scfg, stacked=stacked).run(
+        [ServeRequest(prompt_token=i + 1, seed=10 + i) for i in range(7)])
+    target = batched[3]
+    solo = DecodeEngine(model, scfg, stacked=stacked).run(
+        [ServeRequest(prompt_token=4, seed=13)])[0]
+    assert np.array_equal(solo.tokens, target.tokens)
+    assert np.array_equal(solo.token_entropy, target.token_entropy)
+
+
+def test_classify_abstain_stable_under_batch_composition(radar):
+    _, apply, stacked, ds = radar
+    # pick the median entropy as threshold so both outcomes occur
+    _, ent = BankPredictor(apply, stacked=stacked, node_axis=1).predict(
+        {"x": jnp.asarray(ds["x"][:16])})
+    thr = float(np.median(np.asarray(ent)))
+    together = _classify_engine(apply, stacked, ds, entropy_threshold=thr)
+    all_resps = together.run(
+        [ServeRequest(x=ds["x"][i]) for i in range(16)])
+    alone = _classify_engine(apply, stacked, ds, entropy_threshold=thr)
+    for i, r in enumerate(all_resps):
+        solo = alone.run([ServeRequest(x=ds["x"][i])])[0]
+        assert solo.abstain == r.abstain
+        assert solo.entropy == r.entropy                # bitwise
+    assert {r.abstain for r in all_resps} == {True, False}, \
+        "threshold should split this posterior's entropies"
+
+
+# -------------------------------------------------------------------------
+# posterior hot swap
+# -------------------------------------------------------------------------
+
+def test_hot_swap_mid_stream_preserves_completed_outputs(lm):
+    model, stacked = lm
+    bank2 = jax.tree.map(lambda x: x + 0.05, stacked)
+    scfg = ServeConfig(slots=2, max_len=16, max_new_tokens=4)
+    # staggered lengths so completions happen while others are mid-flight
+    reqs = lambda: [ServeRequest(prompt_token=i + 1, seed=i,
+                                 max_new_tokens=2 + 2 * (i % 2))
+                    for i in range(6)]
+
+    ref = DecodeEngine(model, scfg, stacked=stacked).run(reqs())
+
+    eng = DecodeEngine(model, scfg, stacked=stacked)
+    for r in reqs():
+        eng.submit(r)
+    early = []
+    while not early:                          # let some requests complete
+        early.extend(eng.step())
+    in_flight = sum(r is not None for r in eng.slot_req)
+    assert in_flight > 0
+    eng.install_bank(bank2)                   # swap with requests in flight
+    late = eng.drain()
+    assert len(early) + len(late) == 6        # nothing dropped
+
+    by_id = {r.request_id: r for r in ref}
+    for r in early:                           # completed before the swap:
+        assert np.array_equal(r.tokens, by_id[r.request_id].tokens)
+        assert r.entropy == by_id[r.request_id].entropy
+        assert r.bank_version == 1
+    assert all(r.bank_version == 2 for r in late)
+    # and the swapped posterior actually changes what gets decoded
+    changed = any(not np.array_equal(r.tokens, by_id[r.request_id].tokens)
+                  for r in late)
+    assert changed
+
+
+def test_hot_swap_rejects_sample_count_change(lm):
+    model, stacked = lm
+    scfg = ServeConfig(slots=2, max_len=16, max_new_tokens=2)
+    eng = DecodeEngine(model, scfg, stacked=stacked)
+    smaller = jax.tree.map(lambda x: x[:-1], stacked)
+    with pytest.raises(ValueError, match="sample count"):
+        eng.install_bank(smaller)
+
+
+def test_swap_steady_state_memory_and_compiles(lm):
+    """N hot swaps: no recompiles, no cache realloc, no leaked banks —
+    the bug the old serve demo's per-sample cache list had."""
+    model, stacked = lm
+    scfg = ServeConfig(slots=2, max_len=16, max_new_tokens=2)
+    eng = DecodeEngine(model, scfg, stacked=stacked)
+    eng.run([ServeRequest(prompt_token=1, seed=0)])
+
+    def swap_and_serve(i):
+        eng.install_bank(jax.tree.map(lambda x: x + 0.01 * (i + 1), stacked))
+        eng.run([ServeRequest(prompt_token=1, seed=100 + i)])
+
+    swap_and_serve(0)                         # reach steady state
+    gc.collect()
+    c0, b0 = eng.compile_count(), live_device_bytes()
+    for i in range(1, 6):
+        swap_and_serve(i)
+    gc.collect()
+    assert eng.compile_count() == c0
+    assert live_device_bytes() == b0
+    assert eng.bank_version == 7
+
+
+def test_classify_swap_bumps_version_not_compiles(radar):
+    _, apply, stacked, ds = radar
+    eng = _classify_engine(apply, stacked, ds)
+    r0 = eng.run([ServeRequest(x=ds["x"][0])])[0]
+    c0 = eng.compile_count()
+    eng.install_bank(jax.tree.map(lambda x: x + 0.1, stacked))
+    r1 = eng.run([ServeRequest(x=ds["x"][0])])[0]
+    assert eng.compile_count() == c0
+    assert (r0.bank_version, r1.bank_version) == (1, 2)
+    assert not np.array_equal(r0.probs, r1.probs)
+
+
+# -------------------------------------------------------------------------
+# bank snapshots (train -> serve)
+# -------------------------------------------------------------------------
+
+def test_bank_snapshot_roundtrip(tmp_path, radar):
+    _, apply, stacked, ds = radar
+    d = str(tmp_path)
+    save_bank(d, 10, jax.tree.map(np.asarray, stacked))
+    save_bank(d, 20, jax.tree.map(lambda x: np.asarray(x) * 2.0, stacked))
+    assert latest_bank_step(d) == 20
+    like = jax.tree.map(lambda x: x[0, 0], stacked)     # any params pytree
+    back10 = load_bank(d, step=10, like=like)
+    assert jax.tree.structure(back10) == jax.tree.structure(like)
+    for a, b in zip(jax.tree.leaves(back10), jax.tree.leaves(stacked)):
+        assert np.array_equal(a, np.asarray(b))
+    # manifest-path restore (no like=) agrees leaf-for-leaf
+    nested = load_bank(d, step=10)
+    assert np.allclose(
+        np.concatenate([np.ravel(x) for x in jax.tree.leaves(nested)]),
+        np.concatenate([np.ravel(np.asarray(x))
+                        for x in jax.tree.leaves(back10)]))
+    # atomic publish leaves no temp dir behind
+    assert not os.path.isdir(os.path.join(d, ".bank_tmp"))
+    # a snapshot hot-swaps into a serving engine unchanged
+    eng = _classify_engine(apply, stacked, ds)
+    eng.run([ServeRequest(x=ds["x"][0])])
+    eng.install_bank(jax.tree.map(jnp.asarray, back10))
+    r = eng.run([ServeRequest(x=ds["x"][0])])[0]
+    assert r.bank_version == 2
+
+
+# -------------------------------------------------------------------------
+# selective prediction in the eval plane
+# -------------------------------------------------------------------------
+
+def test_eval_selective_metrics_and_default_unchanged(radar):
+    _, apply, stacked, ds = radar
+    base = ScanEvalEngine(apply, batch_size=8).evaluate(
+        stacked, ds, node_axis=1)
+    assert base.abstain_rate == 0.0                  # threshold = inf
+    assert np.isnan(base.kept_accuracy) or base.kept_accuracy >= 0
+
+    _, ent = BankPredictor(apply, stacked=stacked, node_axis=1).predict(
+        {"x": jnp.asarray(ds["x"])})
+    thr = float(np.median(np.asarray(ent)))
+    gated = ScanEvalEngine(apply, batch_size=8,
+                           entropy_threshold=thr).evaluate(
+        stacked, ds, node_axis=1)
+    # the gate feeds only the selective stats; everything else bitwise
+    assert gated.accuracy == base.accuracy
+    assert gated.ece == base.ece
+    assert gated.nll == base.nll
+    assert gated.entropy == base.entropy
+    assert 0.0 < gated.abstain_rate < 1.0
+    # kept_accuracy is the accuracy over answered examples
+    assert 0.0 <= gated.kept_accuracy <= 1.0
+
+
+def test_abstain_mask_is_the_shared_rule():
+    ent = jnp.asarray([0.1, 1.0, 2.5])
+    assert np.array_equal(np.asarray(abstain_mask(ent, 1.0)),
+                          [False, False, True])
+    assert not abstain_mask(np.float32(0.5), float("inf"))
+
+
+# -------------------------------------------------------------------------
+# ensemble-axis sharding
+# -------------------------------------------------------------------------
+
+@pytest.mark.skipif(NDEV < 2, reason="needs >=2 devices for the ensemble "
+                                     "mesh (tier1-spmd forces 8)")
+def test_place_ensemble_shards_sample_axis(lm):
+    model, stacked = lm
+    n = 2 if NDEV % 2 == 0 else NDEV
+    mesh = jax.make_mesh((n,), ("ens",))
+    big = jax.tree.map(
+        lambda x: jnp.concatenate([x] * ((n * 2) // S + 1))[:n * 2], stacked)
+    placed = place_ensemble(big, mesh, "ens")
+    leaf = jax.tree.leaves(placed)[0]
+    assert len(leaf.sharding.device_set) == n
+    bad = jax.tree.map(lambda x: x[:n + 1], big) if n > 1 else None
+    with pytest.raises(ValueError, match="divide"):
+        place_ensemble(bad, mesh, "ens")
+
+
+@pytest.mark.skipif(NDEV < 2, reason="needs >=2 devices for the ensemble "
+                                     "mesh (tier1-spmd forces 8)")
+def test_sharded_classify_matches_unsharded(radar):
+    _, apply, stacked, ds = radar
+    n = 2
+    mesh = jax.make_mesh((n,), ("ens",))
+    # S=3 doesn't divide 2: tile to 4 samples (duplicates keep BMA sane)
+    big = jax.tree.map(lambda x: jnp.concatenate([x, x[:1]]), stacked)
+    scfg = ServeConfig(slots=4, ensemble_axis="ens")
+    eng = ClassifyEngine(apply, scfg, input_shape=ds["x"].shape[1:],
+                         stacked=big, node_axis=1, mesh=mesh)
+    got = eng.run([ServeRequest(x=ds["x"][i]) for i in range(4)])
+    ref, _ = BankPredictor(apply, stacked=big, node_axis=1).predict(
+        {"x": jnp.asarray(ds["x"][:4])})
+    np.testing.assert_allclose(np.stack([r.probs for r in got]),
+                               np.asarray(ref), rtol=1e-6, atol=1e-7)
+
+
+def test_trainer_predictor_matches_eval_report(radar):
+    """FedTrainer.predictor() is the serving-side view of the trainer:
+    its BMA probs are bitwise the eval engine's on the same batch."""
+    from repro.config import FedConfig
+    from repro.data.partition import partition_iid
+    from repro.train import FedTrainer
+
+    model, _, _, ds = radar
+    k = 3
+    train = make_dataset(k * 12, hw=HW, day=1, seed=0)
+    fed = FedConfig(num_nodes=k, local_steps=2, eta=3e-3, zeta=0.3,
+                    rounds=6, burn_in=2, compressor="block_topk",
+                    compress_ratio=0.05, topology="full",
+                    algorithm="cdbfl", seed=0)
+    tr = FedTrainer(model, fed, partition_iid(train, k, seed=0),
+                    minibatch=6, eval_batch_size=8)
+    tr.run(rounds=6)
+    pred = tr.predictor()
+    assert pred.num_samples() == jax.tree.leaves(tr._stacked_bank())[0].shape[0]
+    probs, ent = pred.predict({"x": jnp.asarray(ds["x"][:8])})
+    _, ref = tr.eval_report({f: v[:8] for f, v in ds.items()},
+                            return_probs=True)
+    assert np.array_equal(np.asarray(probs), ref)
+    assert np.all(np.isfinite(np.asarray(ent)))
