@@ -1,0 +1,169 @@
+"""Drift-recovery benchmark: rounds-to-recovery vs drift rate (DESIGN.md §15).
+
+Runs the continual-training recovery protocol
+(``repro.eval.matrix.run_drift_recovery``) across drift rates — an
+abrupt step (``ramp_rounds=0``) and progressively slower ramps — for
+cdbfl (compressed Bayesian, bank aging on) against the uncompressed
+dsgld baseline, reporting how many rounds after drift onset each takes
+to bring probe ECE back within the pre-drift band.
+
+Before any recovery run, every invocation proves two deterministic
+contracts (exact-gated by ``check_regression`` via the ``bitwise``
+token):
+
+* ``drift_pool_bitwise`` — two syntheses of the same ``(schedule, t)``
+  drifted pool are bit-identical (purity of ``make_drift_shards``);
+* ``pre_onset_bitwise`` — training under a never-firing schedule is
+  bit-identical to training with no schedule at all (the refresher adds
+  zero perturbation before onset).
+
+``rounds_to_recovery`` / ``excursion_round`` / ``pre_ece`` columns are
+informational (float-trajectory-derived, so machine-pinned only to the
+committed tiny baselines' environment); the wall-clock column follows
+the usual ``name,us_per_call,derived`` convention at us per round.
+
+    PYTHONPATH=src python -m benchmarks.bench_drift [--tiny|--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from dataclasses import replace
+from typing import Dict, List
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "drift")
+
+
+def _contract_bits() -> Dict[str, float]:
+    """Deterministic purity proofs, cheap enough to run every invocation."""
+    import jax
+    from repro.config import ContinualConfig, FedConfig, get_arch
+    from repro.data.partition import partition_iid
+    from repro.data.radar import make_dataset
+    from repro.data.scenarios import DriftSchedule, make_drift_shards
+    from repro.models import get_model
+    from repro.train import FedTrainer
+
+    sched = DriftSchedule(scenario="day23_critical", kind="step",
+                          severity=0.7, onset=0, seed=3)
+    a = make_drift_shards(sched, 9, [8, 8, 8], (16, 16))
+    b = make_drift_shards(sched, 9, [8, 8, 8], (16, 16))
+    pool_bit = float(all(
+        sa["x"].tobytes() == sb["x"].tobytes()
+        and sa["y"].tobytes() == sb["y"].tobytes()
+        for sa, sb in zip(a, b)))
+
+    k = 4
+    cfg = get_arch("lenet-radar").reduced
+    model = get_model(cfg)
+    shards = partition_iid(
+        make_dataset(k * 8, hw=cfg.input_hw, day=1, seed=0), k)
+
+    def params(cont):
+        fed = FedConfig(num_nodes=k, local_steps=3, eta=3e-3, zeta=0.3,
+                        rounds=6, burn_in=3, compressor="topk",
+                        compress_ratio=0.05, topology="full",
+                        algorithm="cdbfl")
+        tr = FedTrainer(model, fed, shards, minibatch=6, continual=cont,
+                        bank_capacity=4, bank_thin=1)
+        tr.run(rounds=6)
+        return tr.state.params
+
+    never = ContinualConfig(scenario="gain_drift", schedule="step",
+                            severity=0.9, onset=1000, refresh_every=2)
+    pre_bit = float(all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree_util.tree_leaves(params(None)),
+                        jax.tree_util.tree_leaves(params(never)))))
+    return {"drift_pool_bitwise": pool_bit, "pre_onset_bitwise": pre_bit}
+
+
+def measure(spec, algorithm: str, bits: Dict[str, float]) -> Dict:
+    from repro.eval.matrix import run_drift_recovery
+    t0 = time.time()
+    res = run_drift_recovery(spec, algorithm=algorithm, log=None)
+    wall = time.time() - t0
+    return {
+        "algorithm": algorithm,
+        "scenario": spec.scenario,
+        "severity": spec.severity,
+        "schedule": spec.schedule,
+        "ramp_rounds": spec.ramp_rounds,
+        "rounds": spec.rounds,
+        "onset": spec.onset,
+        "pre_ece": res["pre_ece"],
+        "excursion_round": res["excursion_round"],
+        "recovery_round": res["recovery_round"],
+        "rounds_to_recovery": res["rounds_to_recovery"],
+        "train_wall_s": wall,
+        **bits,
+    }
+
+
+def _name(rec: Dict) -> str:
+    return (f"drift_{rec['algorithm']}_ramp{rec['ramp_rounds']}"
+            f"_r{rec['rounds']}")
+
+
+def _row(rec: Dict) -> str:
+    us = 1e6 * rec["train_wall_s"] / rec["rounds"]
+    rtr = rec["rounds_to_recovery"]
+    return (f"{_name(rec)},{us:.1f},"
+            f"rounds_to_recovery={'never' if rtr is None else rtr};"
+            f"excursion={rec['excursion_round']};"
+            f"pre_ece={rec['pre_ece']:.4f};"
+            f"pool_bitwise={rec['drift_pool_bitwise']:.0f};"
+            f"pre_onset_bitwise={rec['pre_onset_bitwise']:.0f}")
+
+
+def _save(rec: Dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{_name(rec)}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def run(quick: bool = False, tiny: bool = False) -> List[str]:
+    from repro.eval.matrix import DriftRecoverySpec
+    if tiny:
+        base = DriftRecoverySpec(
+            rounds=24, onset=10, probe_every=2, refresh_every=2,
+            burn_in=4, window=10, decay=0.9, nodes=4, per_node=12,
+            local_steps=4, eval_examples=96)
+        ramps = (0,)
+    elif quick:
+        base = DriftRecoverySpec(
+            rounds=45, onset=20, probe_every=5, refresh_every=5,
+            burn_in=10, window=15, decay=0.9, eval_examples=120)
+        ramps = (0, 10)
+    else:
+        base = DriftRecoverySpec()        # the claims-gate scale
+        ramps = (0, 20, 40)
+    bits = _contract_bits()
+    rows = []
+    for ramp in ramps:
+        spec = replace(base, schedule="ramp" if ramp else "step",
+                       ramp_rounds=ramp)
+        for algorithm in ("cdbfl", "dsgld"):
+            rec = measure(spec, algorithm, bits)
+            _save(rec)
+            rows.append(_row(rec))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized: one step drift, small federation")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(quick=args.quick, tiny=args.tiny):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

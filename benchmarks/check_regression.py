@@ -66,6 +66,7 @@ BENCHES = {
     "kernels": "Pallas kernel parity bits + fused-update traffic model",
     "fused_compress": "fused encode HBM ledger + bitwise-vs-two-pass bit",
     "serve": "uncertainty-aware serving engine (bitwise + swap leak + req/s)",
+    "drift": "drift-recovery protocol (pool purity bits + recovery rounds)",
 }
 
 THROUGHPUT_SUFFIX = ("rounds_per_s", "requests_per_s")
@@ -177,9 +178,11 @@ def run_claims(out_path: str) -> None:
         print("claims gate needs PYTHONPATH=src (repro not importable)",
               file=sys.stderr)
         sys.exit(2)
-    from repro.eval.matrix import matrix_markdown, run_claims_smoke
+    from repro.eval.matrix import (matrix_markdown, run_claims_smoke,
+                                   run_drift_claims)
 
     out = run_claims_smoke()
+    drift = run_drift_claims()
     report = [
         "# Calibration claims report",
         "",
@@ -197,6 +200,38 @@ def run_claims(out_path: str) -> None:
         "",
     ]
     report += [f"* {k}: {v}" for k, v in out["claims"].items()]
+    report += [
+        "",
+        "## Drift recovery (DESIGN.md §15)",
+        "",
+        "Gate: after a step drift "
+        f"(`{drift['claims']['drift_scenario']}` at severity "
+        f"{drift['claims']['drift_severity']:g}, onset round "
+        f"{drift['claims']['drift_onset']}), cdbfl with bank aging must "
+        "bring probe ECE back within the pre-drift band inside "
+        "`DRIFT_RECOVERY_MAX_ROUNDS` rounds of onset; the uncompressed "
+        "dsgld baseline is reported for comparison, not gated.",
+        "",
+        "| algorithm | pre-drift ECE | excursion round | recovery round "
+        "| rounds to recovery |",
+        "|---|---|---|---|---|",
+    ]
+    for alg, curve in drift["curves"].items():
+        report.append(
+            f"| {alg} | {curve['pre_ece']:.4f} "
+            f"| {curve['excursion_round']} | {curve['recovery_round']} "
+            f"| {curve['rounds_to_recovery']} |")
+    report += ["", "### Probe curves", ""]
+    for alg, curve in drift["curves"].items():
+        report += [f"**{alg}**", "",
+                   "| round | severity | accuracy | ECE |",
+                   "|---|---|---|---|"]
+        report += [f"| {int(p['round'])} | {p['severity']:g} "
+                   f"| {p['accuracy']:.4f} | {p['ece']:.4f} |"
+                   for p in curve["probes"]]
+        report.append("")
+    report += [f"* {k}: {v}" for k, v in drift["claims"].items()]
+    out["failures"] = list(out["failures"]) + list(drift["failures"])
     if out["failures"]:
         report += ["", "## Failures", ""] + \
             [f"* {f}" for f in out["failures"]]

@@ -255,6 +255,31 @@ def serve_table(results_dir: str = None) -> str:
     return "\n".join(lines)
 
 
+def drift_table(results_dir: str = None) -> str:
+    """§Drift: rounds-to-recovery vs drift rate, cdbfl vs dsgld."""
+    results_dir = results_dir or os.path.join(
+        os.path.dirname(__file__), "results", "drift")
+    lines = [
+        "| algorithm | schedule | ramp rounds | onset | pre-drift ECE | "
+        "excursion | recovery | rounds to recovery | pool bitwise |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for fn in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        rec = json.load(open(fn))
+        rtr = rec["rounds_to_recovery"]
+        lines.append(
+            f"| {rec['algorithm']} | {rec['schedule']} "
+            f"| {rec['ramp_rounds']} | {rec['onset']} "
+            f"| {rec['pre_ece']:.4f} | {rec['excursion_round']} "
+            f"| {rec['recovery_round']} "
+            f"| {'never' if rtr is None else rtr} "
+            f"| {rec['drift_pool_bitwise']:.0f} |")
+    if len(lines) == 2:
+        lines.append("| _no records — run bench_drift --tiny first_ "
+                     "| | | | | | | | |")
+    return "\n".join(lines)
+
+
 def main():
     print("### §Dry-run results\n")
     print(dryrun_table())
@@ -277,6 +302,9 @@ def main():
     print(fused_compress_table())
     print("\n### §Serving — uncertainty-aware BMA serving plane\n")
     print(serve_table())
+    print("\n### §Drift — recovery after distribution shift "
+          "(DESIGN.md §15)\n")
+    print(drift_table())
     print("\n### §Roofline — single-pod 16×16\n")
     print(markdown_table(mesh="16x16"))
     print("\n### §Roofline — multi-pod 2×16×16\n")

@@ -21,12 +21,12 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_ablation, bench_comm_overhead,
-                            bench_eval_engine, bench_fig3_l_sweep,
-                            bench_fig4_reliability, bench_fused_compress,
-                            bench_kernels, bench_round_engine,
-                            bench_serve, bench_shard_engine,
-                            bench_topology_sweep, bench_transport,
-                            bench_wire, roofline)
+                            bench_drift, bench_eval_engine,
+                            bench_fig3_l_sweep, bench_fig4_reliability,
+                            bench_fused_compress, bench_kernels,
+                            bench_round_engine, bench_serve,
+                            bench_shard_engine, bench_topology_sweep,
+                            bench_transport, bench_wire, roofline)
     suites = {
         "fig3_l_sweep": bench_fig3_l_sweep.run,
         "fig4_reliability": bench_fig4_reliability.run,
@@ -40,6 +40,7 @@ def main() -> None:
         "kernels": bench_kernels.run,
         "fused_compress": bench_fused_compress.run,
         "serve": bench_serve.run,
+        "drift": bench_drift.run,
         "roofline": roofline.run,
     }
     # beyond-paper sweeps, opt-in (heavier): --only ablation

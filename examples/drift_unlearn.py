@@ -1,0 +1,97 @@
+"""Continual-training demo: drift mid-run, posterior aging, node unlearning.
+
+The factory floor does not hold its distribution still (DESIGN.md §15):
+this driver trains CD-BFL while the training distribution itself shifts
+to the day-2/3 critical cell at ``--onset``, with the sample bank kept
+current by a moving window + age-decayed BMA weights. Probe evals show
+shifted-test ECE spike at onset and come back. Afterwards one node is
+deleted from the posterior with ``FedTrainer.unlearn`` and the
+predictive views are re-scored without it.
+
+Reduced scale by default (CPU container, ~1 min):
+
+    PYTHONPATH=src python examples/drift_unlearn.py
+    PYTHONPATH=src python examples/drift_unlearn.py --rounds 90 --onset 45
+"""
+import argparse
+
+from repro.config import ContinualConfig, FedConfig, get_arch
+from repro.data.partition import partition_iid
+from repro.data.radar import make_dataset
+from repro.data.scenarios import make_scenario_dataset
+from repro.models import get_model
+from repro.train import FedTrainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--onset", type=int, default=16,
+                    help="first drifted round (step schedule)")
+    ap.add_argument("--scenario", default="day23_critical")
+    ap.add_argument("--severity", type=float, default=1.0)
+    ap.add_argument("--window", type=int, default=12,
+                    help="bank aging window in rounds (0 = keep all)")
+    ap.add_argument("--decay", type=float, default=0.9,
+                    help="per-round BMA weight decay")
+    ap.add_argument("--unlearn", type=int, default=None,
+                    help="node id to delete after training "
+                         "(default: last node)")
+    args = ap.parse_args()
+
+    cfg = get_arch("lenet-radar").reduced
+    model = get_model(cfg)
+    K = args.nodes
+
+    train = make_dataset(K * 32, hw=cfg.input_hw, day=1, seed=0)
+    shards = partition_iid(train, K)
+    # probe on the *drifted* distribution: this is the ECE that spikes
+    shifted_test = make_scenario_dataset(
+        args.scenario, args.severity, 160, hw=cfg.input_hw, seed=77)
+
+    fed = FedConfig(
+        num_nodes=K, local_steps=4, eta=3e-3, zeta=0.3, temperature=0.2,
+        rounds=args.rounds, burn_in=max(args.rounds // 6, 2),
+        compressor="block_topk", compress_ratio=0.05, topology="full",
+        algorithm="cdbfl",
+        continual=ContinualConfig(
+            scenario=args.scenario, schedule="step",
+            severity=args.severity, onset=args.onset,
+            refresh_every=4, window=args.window, decay=args.decay),
+    )
+    tr = FedTrainer(model, fed, shards, minibatch=8, bank_capacity=16,
+                    bank_thin=1)
+
+    print(f"== drift demo: {args.scenario}@{args.severity} switches on at "
+          f"round {args.onset}/{args.rounds}; bank window {args.window}, "
+          f"decay {args.decay} ==")
+    probe_every = max(args.rounds // 10, 2)
+    res = tr.run(rounds=args.rounds, eval_batch=shifted_test,
+                 eval_every=probe_every)
+    print(f"\n  {'round':>5}  {'sev':>4}  {'acc':>6}  {'ece':>6}")
+    sched = tr._refresher.schedule if tr._refresher is not None else None
+    for snap in res.eval_history:
+        t = int(snap["round"])
+        sev = sched.severity_at(t) if sched is not None else 0.0
+        print(f"  {t:>5}  {sev:>4.2f}  {snap['accuracy']:>6.3f}  "
+              f"{snap['ece']:>6.3f}")
+    final = tr.eval_report(shifted_test)
+    print(f"\nfinal (aged BMA over {len(tr.bank)} bank samples): "
+          f"acc={final.accuracy:.3f} ece={final.ece:.3f}")
+
+    # -- unlearning --------------------------------------------------------
+    target = args.unlearn if args.unlearn is not None else K - 1
+    tr.unlearn(target)
+    after = tr.eval_report(shifted_test)
+    print(f"after unlearn(node {target}):          "
+          f"acc={after.accuracy:.3f} ece={after.ece:.3f} "
+          f"(removed {sorted(tr.unlearned)}; remaining chains "
+          f"{K - len(tr.unlearned)})")
+    print("exact-removal contract: bank rows + gossip control variates "
+          "zeroed;\nresidual gossip influence bounded by the retrain "
+          "oracle (tests/test_unlearn.py)")
+
+
+if __name__ == "__main__":
+    main()

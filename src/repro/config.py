@@ -17,6 +17,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 @dataclass(frozen=True)
 class MoEConfig:
+    """Frozen pure data — hashable, safe jit cache-key material."""
     num_experts: int = 0            # routed experts (0 = dense MLP)
     num_shared_experts: int = 0     # always-on experts (DeepSeek style)
     top_k: int = 2
@@ -33,6 +34,7 @@ class MoEConfig:
 
 @dataclass(frozen=True)
 class ModelConfig:
+    """Frozen pure data describing one architecture; hashable — models build deterministically from it."""
     name: str = "model"
     family: str = "dense"           # dense | moe | hybrid | ssm | vlm | audio | lenet
     num_layers: int = 2
@@ -208,6 +210,49 @@ class ParticipationConfig:
 
 
 @dataclass(frozen=True)
+class ContinualConfig:
+    """Streaming drift + continual posterior refresh (DESIGN.md §15).
+
+    Pure data, mirroring :class:`TransportConfig` — the drift half is
+    interpreted by ``repro.data.scenarios.DriftSchedule`` (severity
+    trajectories pure in ``(seed, round)``), the refresh half by
+    ``repro.core.posterior.DeviceSampleBank`` bank aging (window
+    eviction + age-discounted BMA weights). ``FedTrainer(continual=...)``
+    and ``launch/train.py --drift/--refresh-*`` consume it.
+    """
+    # -- drift schedule over the node-local training distribution --------
+    scenario: str = "clean"       # shift family (repro.data.scenarios);
+                                  # "clean" = no drift, bitwise-unchanged
+    schedule: str = "step"        # constant | step | ramp | cyclic | piecewise
+    severity: float = 0.0         # plateau / peak severity in [0, 1]
+    base_severity: float = 0.0    # pre-onset severity (keeps caller shards)
+    onset: int = 0                # first drifted round
+    ramp_rounds: int = 0          # ramp duration (0 degenerates to step)
+    period: int = 0               # cyclic period in rounds
+    breakpoints: Tuple[Tuple[int, float], ...] = ()   # piecewise knots
+    refresh_every: int = 1        # rounds per drift phase (pool re-draw)
+    drift_seed: int = 0           # drift-synthesis stream seed
+    # -- continual posterior refresh (bank aging) ------------------------
+    # >0: posterior samples older than this many rounds are evicted from
+    # the BMA (their weight masks to zero) — the moving-window posterior
+    window: int = 0
+    # <1: BMA weight decay**age (age in rounds since admission),
+    # renormalized over the surviving window — newest samples dominate
+    decay: float = 1.0
+
+    @property
+    def drifts(self) -> bool:
+        return self.scenario not in ("", "clean")
+
+    @property
+    def ages(self) -> bool:
+        return self.window > 0 or self.decay < 1.0
+
+    def replace(self, **kw) -> "ContinualConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
 class ServeConfig:
     """Uncertainty-aware serving plane (DESIGN.md §14).
 
@@ -239,6 +284,7 @@ class ServeConfig:
 
 @dataclass(frozen=True)
 class FedConfig:
+    """The one config for a federated run; pure data — a training run is a deterministic function of ``(FedConfig, seed)`` (DESIGN.md §1)."""
     num_nodes: int = 10             # K
     topology: str = "full"          # legacy string: full | ring | grid | star
     # full graph spec; when set it overrides the ``topology`` string
@@ -275,11 +321,15 @@ class FedConfig:
     # barrier-free participation (None = every node, every round — the
     # global-barrier model, bitwise unchanged)
     participation: Optional[ParticipationConfig] = None
+    # streaming drift + continual posterior refresh (None = static data
+    # and the un-aged uniform-BMA bank, bitwise unchanged)
+    continual: Optional[ContinualConfig] = None
     seed: int = 0
 
 
 @dataclass(frozen=True)
 class TrainConfig:
+    """Frozen pure data — optimizer/schedule scalars only."""
     global_batch: int = 256
     seq_len: int = 4096
     steps: int = 100
@@ -295,6 +345,7 @@ class TrainConfig:
 
 @dataclass(frozen=True)
 class MeshConfig:
+    """Frozen pure data naming mesh axes; deterministic mesh construction."""
     multi_pod: bool = False
     fed_axis: str = "data"          # mesh axis that carries federated nodes
     fsdp_axis: str = "data"         # axis params are fully-sharded over
@@ -307,6 +358,7 @@ class MeshConfig:
 
 @dataclass(frozen=True)
 class InputShape:
+    """Frozen pure data — static shapes, safe jit cache-key material."""
     name: str
     seq_len: int
     global_batch: int
@@ -327,6 +379,7 @@ INPUT_SHAPES: Dict[str, InputShape] = {
 
 @dataclass(frozen=True)
 class ArchSpec:
+    """Frozen registry entry: full + reduced (``--trim``) configs for one arch id; pure data."""
     arch_id: str
     config: ModelConfig
     reduced: ModelConfig            # smoke-test variant (<=2 layers, d_model<=512)

@@ -144,6 +144,7 @@ def _langevin_noise(key, tree, eta: float, temperature: float, node_ids):
 
 
 class RoundMetrics(NamedTuple):
+    """Per-round scalar metrics, reduced on device; a pure function of the round's inputs."""
     loss: jax.Array            # (K, L) local losses (shard-local under SPMD)
     consensus_error: jax.Array  # scalar: mean ||θ_k - θ̄||²
     delta_norm: jax.Array      # scalar: mean ||Δθ_k||²

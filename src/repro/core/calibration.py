@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 
 class ReliabilityBins(NamedTuple):
+    """Fixed-bin reliability histogram; deterministic in (probs, labels, bins)."""
     bin_confidence: jnp.ndarray   # (O,) mean confidence per bin
     bin_accuracy: jnp.ndarray     # (O,) mean accuracy per bin
     bin_counts: jnp.ndarray       # (O,) samples per bin

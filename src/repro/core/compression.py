@@ -161,7 +161,10 @@ _LEAF_OPS: Dict[str, Callable] = {
 
 @dataclass(frozen=True)
 class Compressor:
-    """Pytree compression operator with wire-cost accounting."""
+    """Pytree compression operator with wire-cost accounting.
+
+    Purity: ``compress`` is deterministic in ``(tree, key)`` — same key, same bits and same wire-byte count.
+    """
 
     name: str = "block_topk"
     ratio: float = 0.01
@@ -309,6 +312,8 @@ class Codec:
     on a carrier of ``n`` elements; ``out_size(n)`` the carrier size it
     emits; ``sidecar_formula_bytes`` / ``carrier_formula_bytes`` the
     closed-form byte table kept as the cross-check for measured bytes.
+
+    Purity: ``encode``/``decode`` are deterministic in their inputs; randomized stages thread an explicit key rather than ambient RNG.
     """
 
     name: str = "identity"
@@ -335,6 +340,7 @@ class Codec:
 
 @dataclass(frozen=True)
 class IdentityCodec(Codec):
+    """No-op stage: ``decode(encode(x))`` is ``x`` bitwise, zero sidecar bytes."""
     name: str = "identity"
     kind: str = "identity"
 
@@ -587,13 +593,19 @@ class SignCodec(Codec):
 
 
 class LeafPayload(NamedTuple):
-    """Wire buffers for one leaf: final carrier + per-stage sidecars."""
+    """Wire buffers for one leaf: final carrier + per-stage sidecars.
+
+    The buffers fully determine the decode — byte-exact round-trip accounting.
+    """
     wire: Any                         # last stage's carrier buffer
     aux: Tuple[Dict[str, Any], ...]   # sidecars, one dict per stage
 
 
 class LeafSpec(NamedTuple):
-    """Static per-leaf decode spec."""
+    """Static per-leaf decode spec.
+
+    Static and hashable — safe jit cache-key material, pure in the input pytree structure.
+    """
     shape: Tuple[int, ...]
     dtype: str
     passthrough: bool                 # min_dense_size leaves ride dense
@@ -624,6 +636,8 @@ class WirePayload:
     keys), replacing the closed-form estimate as the source of truth; the
     formula table stays available as a cross-check via
     :meth:`CompressionPipeline.formula_bytes`.
+
+    Byte counts derive deterministically from shapes/dtypes and are exact-gated in CI.
     """
 
     def __init__(self, entries, treedef, specs, stages):
@@ -671,6 +685,8 @@ class CompressionPipeline:
     is ``decode(encode(x))``. Deltas compose multiplicatively
     (Gong & Simeone '22: a δ₁-contraction followed by a δ₂-contraction of
     its output is a δ₁·δ₂-contraction).
+
+    Purity: the encode/decode pair is deterministic given the stage key, and wire bytes are an exact static function of the input structure.
     """
 
     stages: Tuple[Codec, ...] = (BlockTopKCodec(),)
@@ -909,6 +925,8 @@ class PerLayerPipeline(FusedCodec):
     everything. Unmatched leaves use the base ``stages``. Decode reads
     the per-leaf stage tuple recorded in each :class:`LeafSpec`, so
     payloads stay self-describing (transport keep-masks included).
+
+    Routing is static per leaf path — pure in the pytree structure, so jit traces one stable graph.
     """
 
     rules: Tuple[Tuple[str, CompressionPipeline], ...] = ()

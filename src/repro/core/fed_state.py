@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 
 class FedState(NamedTuple):
+    """Per-node federated state pytree (node-stacked params + CHOCO control variates ``v``/``v_bar``); a pure value — round functions map ``FedState -> FedState`` deterministically given the PRNG key."""
     params: Any          # θ_k        leaves: (K, ...)
     v: Any               # v_k        control sequence (paper Eq. 7)
     v_bar: Any           # v̄_k       neighbor aggregate (paper Eq. 8)

@@ -303,6 +303,8 @@ class ShardContext(NamedTuple):
     Built by the caller that owns the mesh (ShardRoundEngine, launch.train);
     consumed by code that runs *inside* ``shard_map`` — mixers, round
     functions — to derive shard-local node ids and global reductions.
+
+    Static and hashable — safe jit cache-key material.
     """
     axis_name: str
     num_shards: int
@@ -322,6 +324,8 @@ class ShardMixStats(NamedTuple):
     ppermute slots count as moved — that is what crosses the interconnect.
     Link dropout / gossip-pair masks do NOT reduce cross rows: the
     collective pattern is static, dead links are zero-weighted locally.
+
+    Deterministic device-side accounting; carries no RNG.
     """
     mode: str
     cross_rows: float
@@ -352,6 +356,8 @@ class ShardMixPlan:
     per shard-offset delta, one ``lax.ppermute`` of a packed row buffer.
     Shapes are static per schedule, so the collective pattern — and the
     compiled program — is identical for every round.
+
+    Pure in (schedule, shard layout): static python lists, so compilation is stable.
     """
     num_shards: int
     local_k: int

@@ -16,13 +16,20 @@ import numpy as np
 
 
 class SampleBank:
-    """Host-side reservoir of posterior samples (thinned, post burn-in)."""
+    """Host-side reservoir of posterior samples (thinned, post burn-in).
+
+    Mutable host state — the reference oracle for :class:`DeviceSampleBank`
+    (admission/eviction semantics are pinned equal by tests/test_engine.py).
+
+    Admission is deterministic in ``(round, burn_in, thin, capacity)`` and slots store exact chain bits — replaying a run refills an identical bank.
+    """
 
     def __init__(self, burn_in: int, max_samples: int = 50, thin: int = 1):
         self.burn_in = burn_in
         self.max_samples = max_samples
         self.thin = thin
         self.samples: List[Any] = []
+        self.rounds: List[int] = []   # admission round per sample (aging)
         self._seen = 0
 
     def maybe_add(self, round_idx: int, params) -> bool:
@@ -36,7 +43,9 @@ class SampleBank:
             # reservoir-style: drop the oldest (keeps a moving posterior window,
             # which also tracks the paper's continual daily re-training)
             self.samples.pop(0)
+            self.rounds.pop(0)
         self.samples.append(params)
+        self.rounds.append(int(round_idx))
         return True
 
     def __len__(self):
@@ -54,10 +63,15 @@ class DeviceBankState(NamedTuple):
     per-(slot, row) f32 dequantization scales; ``None`` (an empty pytree)
     in the default f32 mode, so the state stays scan/donation compatible
     either way.
+
+    ``rounds`` records the admission round per slot (``-1`` = empty), the
+    raw material for the continual-learning age weights (DESIGN.md §15);
+    it rides along replicated and costs ``C`` int32s.
     """
     slots: Any           # leaves (C, ...) — params with capacity axis
     count: jax.Array     # scalar int32, total samples admitted
     scales: Any = None   # int8 mode: f32 leaves (C, *leaf.shape[:1])
+    rounds: Any = None   # (C,) int32 admission round per slot, -1 empty
 
 
 class DeviceSampleBank:
@@ -89,6 +103,7 @@ class DeviceSampleBank:
                              f"got {store_dtype!r}")
 
     def init(self, params) -> DeviceBankState:
+        rounds = jnp.full((self.capacity,), -1, jnp.int32)
         if self.store_dtype == "int8":
             slots = jax.tree.map(
                 lambda x: jnp.zeros((self.capacity,) + x.shape, jnp.int8),
@@ -101,12 +116,13 @@ class DeviceSampleBank:
             )
             return DeviceBankState(slots=slots,
                                    count=jnp.zeros((), jnp.int32),
-                                   scales=scales)
+                                   scales=scales, rounds=rounds)
         slots = jax.tree.map(
             lambda x: jnp.zeros((self.capacity,) + x.shape, jnp.float32),
             params,
         )
-        return DeviceBankState(slots=slots, count=jnp.zeros((), jnp.int32))
+        return DeviceBankState(slots=slots, count=jnp.zeros((), jnp.int32),
+                               rounds=rounds)
 
     # -- int8 storage helpers ---------------------------------------------
     @staticmethod
@@ -145,16 +161,26 @@ class DeviceSampleBank:
             )
             return jax.lax.dynamic_update_index_in_dim(slot_leaf, new, ptr, 0)
 
+        rounds = bank.rounds
+        if rounds is not None:
+            cur_r = jax.lax.dynamic_index_in_dim(rounds, ptr, 0,
+                                                 keepdims=False)
+            new_r = jax.lax.select(add, jnp.asarray(round_idx, jnp.int32),
+                                   cur_r)
+            rounds = jax.lax.dynamic_update_index_in_dim(rounds, new_r,
+                                                         ptr, 0)
         if bank.scales is not None:
             qtree = jax.tree.map(self._quantize_leaf, params)
             stree = jax.tree.map(self._leaf_scale, params)
             return DeviceBankState(
                 slots=jax.tree.map(write, bank.slots, qtree),
                 count=bank.count + add.astype(jnp.int32),
-                scales=jax.tree.map(write, bank.scales, stree))
+                scales=jax.tree.map(write, bank.scales, stree),
+                rounds=rounds)
         slots = jax.tree.map(write, bank.slots, params)
         return DeviceBankState(slots=slots,
-                               count=bank.count + add.astype(jnp.int32))
+                               count=bank.count + add.astype(jnp.int32),
+                               rounds=rounds)
 
     # -- mesh placement ---------------------------------------------------
     def pspecs(self, bank: DeviceBankState, fed_axis: str) -> DeviceBankState:
@@ -170,6 +196,7 @@ class DeviceSampleBank:
             scales=(None if bank.scales is None else jax.tree.map(
                 lambda s: P(None, fed_axis) if s.ndim > 1 else P(None),
                 bank.scales)),
+            rounds=(None if bank.rounds is None else P(None)),
         )
 
     # -- host-side views -------------------------------------------------
@@ -203,14 +230,62 @@ class DeviceSampleBank:
     def length(self, bank: DeviceBankState) -> int:
         return min(int(bank.count), self.capacity)
 
+    def rounds_list(self, bank: DeviceBankState) -> np.ndarray:
+        """Admission rounds in insertion order (host SampleBank.rounds)."""
+        if bank.rounds is None:
+            return np.zeros((self.length(bank),), np.int32)
+        return np.asarray(bank.rounds)[self.order(bank)]
+
+    def age_weights(self, bank: DeviceBankState, now: int,
+                    window: int = 0, decay: float = 1.0) -> np.ndarray:
+        """Age-discounted BMA weights in insertion order (DESIGN.md §15)."""
+        return bank_age_weights(self.rounds_list(bank), now,
+                                window=window, decay=decay)
+
+
+def bank_age_weights(rounds, now: int, window: int = 0,
+                     decay: float = 1.0) -> np.ndarray:
+    """Age-discounted, window-evicted BMA weights over a sample bank.
+
+    Pure host function of ``(rounds, now, window, decay)``: sample ``i``
+    with admission round ``r_i`` gets raw weight ``decay ** (now - r_i)``,
+    zeroed when ``window > 0`` and ``now - r_i >= window`` (hard eviction
+    from the predictive mixture without touching device slots), then
+    renormalized to sum to one. Invariants pinned by tests/test_drift.py:
+    weights are non-negative, sum to 1, and are non-increasing with age.
+    If every sample falls outside the window, the newest sample alone
+    carries weight 1 — the predictor never divides by zero and always has
+    at least one vote.
+    """
+    rounds = np.asarray(rounds, np.int64)
+    if rounds.size == 0:
+        return np.zeros((0,), np.float64)
+    age = np.maximum(np.int64(now) - rounds, 0)
+    w = np.power(np.float64(min(max(decay, 0.0), 1.0)), age)
+    if window > 0:
+        w = np.where(age < window, w, 0.0)
+    total = float(w.sum())
+    if total <= 0.0:
+        w = np.zeros_like(w)
+        w[int(np.argmin(age))] = 1.0
+        return w
+    return w / total
+
 
 def bma_predict_stacked(apply_fn: Callable, stacked, batch,
-                        node_axis: Optional[int] = None) -> jnp.ndarray:
+                        node_axis: Optional[int] = None,
+                        weights=None) -> jnp.ndarray:
     """BMA over a stacked ``(S, ...)`` sample axis in one traced vmap.
 
     Same predictive distribution as :func:`bma_predict` over the equivalent
     list of samples, but the sample loop is a ``vmap`` instead of S traced
     calls — one dispatch for the whole bank (and one XLA program to fuse).
+
+    ``weights`` (optional, shape ``(S,)``) replaces the uniform sample mean
+    with an age-discounted mixture (:func:`bank_age_weights`); nodes are
+    still averaged uniformly first. The ``weights=None`` path is bitwise
+    identical to the pre-continual kernel — weighted averaging is a
+    separate reduction, never a rescaled default path.
     """
     if node_axis is not None:
         per_sample = lambda p: jax.vmap(lambda q: apply_fn(q, batch))(p)
@@ -218,8 +293,14 @@ def bma_predict_stacked(apply_fn: Callable, stacked, batch,
         per_sample = lambda p: apply_fn(p, batch)
     logits = jax.vmap(per_sample)(stacked)      # (S, [K,] B, classes)
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
-    axes = (0, 1) if node_axis is not None else (0,)
-    return jnp.mean(probs, axis=axes)
+    if weights is None:
+        axes = (0, 1) if node_axis is not None else (0,)
+        return jnp.mean(probs, axis=axes)
+    if node_axis is not None:
+        probs = jnp.mean(probs, axis=1)         # nodes first, then samples
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), jnp.float32(1e-12))
+    return jnp.einsum("s,s...->...", w, probs)
 
 
 def predictive_entropy(probs: jnp.ndarray) -> jnp.ndarray:
@@ -243,6 +324,8 @@ class PosteriorPredictor:
     Eval engines, the serving plane and the examples all consume this
     protocol; the legacy per-sample loops (:func:`bma_predict`, serve.py's
     ad-hoc softmax loop) are deprecated in its favor.
+
+    Deterministic: same samples, same batch, same engine — same probability bits.
     """
 
     def predict(self, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -262,6 +345,8 @@ class BankPredictor(PosteriorPredictor):
     With ``mesh``/``ensemble_axis`` the sample axis is sharded over the
     mesh (:func:`place_ensemble`), so BMA cost scales down with devices —
     the ensemble dimension is a parallel axis, not a loop.
+
+    ``install(stacked, weights=None)`` keeps the uniform-mean graph bitwise pre-§15; an age-weight vector routes to a separately-jitted weighted branch.
     """
 
     def __init__(self, apply_fn: Callable, stacked: Any = None,
@@ -272,7 +357,9 @@ class BankPredictor(PosteriorPredictor):
         self.mesh = mesh
         self.ensemble_axis = ensemble_axis
         self._fn = jax.jit(self._predict)
+        self._fn_weighted = jax.jit(self._predict_weighted)
         self._stacked = None
+        self._weights = None
         if stacked is not None:
             self.install(stacked)
 
@@ -281,17 +368,30 @@ class BankPredictor(PosteriorPredictor):
                                     node_axis=self.node_axis)
         return probs, predictive_entropy(probs)
 
+    def _predict_weighted(self, stacked, weights, batch):
+        probs = bma_predict_stacked(self.apply_fn, stacked, batch,
+                                    node_axis=self.node_axis,
+                                    weights=weights)
+        return probs, predictive_entropy(probs)
+
     # -- bank lifecycle ----------------------------------------------------
-    def install(self, stacked) -> None:
+    def install(self, stacked, weights=None) -> None:
         """Atomically install a new bank (posterior hot swap).
 
         The reference swap is a single Python assignment, so concurrent
         ``predict`` calls see either the old bank or the new one, never a
         mix. Keeping the sample-axis length constant keeps the compiled
         kernel valid (no recompile, no cache realloc downstream).
+
+        ``weights`` (optional ``(S,)``, e.g. :func:`bank_age_weights`)
+        switches ``predict`` onto a separately compiled age-weighted BMA
+        kernel; ``weights=None`` keeps the original uniform kernel bitwise
+        untouched.
         """
         if self.mesh is not None and self.ensemble_axis:
             stacked = place_ensemble(stacked, self.mesh, self.ensemble_axis)
+        self._weights = (None if weights is None
+                         else jnp.asarray(weights, jnp.float32))
         self._stacked = stacked
 
     @property
@@ -305,11 +405,13 @@ class BankPredictor(PosteriorPredictor):
 
     def compile_count(self) -> int:
         """Entries in the predict kernel's jit cache (zero-recompile gate)."""
-        return self._fn._cache_size()
+        return self._fn._cache_size() + self._fn_weighted._cache_size()
 
     def predict(self, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
         if self._stacked is None:
             raise ValueError("no bank installed; call install(stacked)")
+        if self._weights is not None:
+            return self._fn_weighted(self._stacked, self._weights, batch)
         return self._fn(self._stacked, batch)
 
 

@@ -199,6 +199,7 @@ def spectral_gap(omega: np.ndarray) -> float:
 
 @dataclass(frozen=True)
 class Topology:
+    """Materialized graph for one :class:`TopologyConfig`: adjacency, Ω, spectral gap, schedule. Pure in the config — same config (and ``topo_seed``), same adjacency and Ω bits."""
     config: TopologyConfig
     k: int
     adjacency: np.ndarray           # (K, K) 0/1, symmetric, hollow
@@ -302,6 +303,8 @@ class MixSchedule:
 
     Circulant fast path: when Ω[i,j] depends only on (j-i) mod K,
     ``shifts``/``coeffs`` hold the equivalent ``Σ_s c_s·roll(x, -s)``.
+
+    Deterministic in Ω: the greedy coloring uses no RNG, so the matching decomposition is reproducible.
     """
     k: int
     perms: np.ndarray               # (M, K) int32, each row an involution

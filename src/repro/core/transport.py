@@ -212,7 +212,10 @@ class LossModel:
 @dataclass(frozen=True)
 class BernoulliLoss(LossModel):
     """iid per-frame erasure; ``rate`` is a scalar or per-node tuple
-    (per-node rates model asymmetric links; 1.0 is a dead transmitter)."""
+    (per-node rates model asymmetric links; 1.0 is a dead transmitter).
+
+    Erasures are pure in ``(seed, round, node, frame)`` — replayable, never ambient.
+    """
 
     rate: object = 0.0               # float | tuple per node
 
@@ -235,6 +238,8 @@ class GilbertElliottLoss(LossModel):
     ``p_exit``: bad→good; the start state is drawn from the stationary
     distribution), and frames erase at ``loss_good``/``loss_bad``
     depending on the state — bursty episodes instead of iid drops.
+
+    Burst-state evolution is pure in ``(seed, round, node)`` — replayable.
     """
 
     p_enter: float = 0.05
@@ -288,7 +293,10 @@ class FixedMaskLoss(LossModel):
 
 @dataclass(frozen=True)
 class DeadNodeLoss(LossModel):
-    """Wrap a base model; listed nodes' broadcasts are fully erased."""
+    """Wrap a base model; listed nodes' broadcasts are fully erased.
+
+    Deterministic wrapper: the dead-set schedule is pure in the round index.
+    """
 
     base: LossModel = BernoulliLoss(0.0)
     dead: Tuple[int, ...] = ()
@@ -375,7 +383,10 @@ def lora_toa_s(frame_bytes, sf: int = 7, bw_hz: float = 125_000.0,
 # --------------------------------------------------------------------------
 
 class LeafFraming(NamedTuple):
-    """Static framing of one leaf's wire bytes (host-side arithmetic)."""
+    """Static framing of one leaf's wire bytes (host-side arithmetic).
+
+    Host-side integer arithmetic — exact, no floats involved.
+    """
     nbytes: int                  # payload bytes (measured from the buffers)
     n_frames: int
     frame_bytes: np.ndarray      # (F,) on-air bytes incl. header
@@ -390,7 +401,10 @@ class TransportMetrics(NamedTuple):
     traced — how much is re-sent depends on the loss draws. ``retransmits``
     counts frame transmissions beyond each frame's first attempt;
     ``abandoned`` is the bytes never delivered after every attempt (their
-    mass rides the CHOCO residual)."""
+    mass rides the CHOCO residual).
+
+    Deterministic accounting; byte totals are exact-gated in CI.
+    """
     offered: jax.Array
     delivered: jax.Array
     airtime_s: jax.Array
@@ -433,6 +447,8 @@ class LossyTransport:
     injects fixed masks / bursts / dead nodes this way); ``link_probs``
     overrides the SNR-derived per-edge outage callable handed to the
     gossip layer. ``num_nodes`` sizes the per-node SNR draws.
+
+    Pure in ``(cfg.seed, round)``: same seed, same erasure pattern, same delivered bytes.
     """
 
     def __init__(self, cfg, num_nodes: int = 0,

@@ -58,7 +58,10 @@ def abstain_mask(entropy: jnp.ndarray, threshold: float) -> jnp.ndarray:
 
 
 class EvalAccum(NamedTuple):
-    """Streaming sufficient statistics for one evaluation pass."""
+    """Streaming sufficient statistics for one evaluation pass.
+
+    A pure streaming reduction — order-fixed, so accumulation is deterministic.
+    """
     n: jax.Array             # () f32 — examples scored (mask-weighted)
     correct: jax.Array       # () f32 — argmax hits
     nll_sum: jax.Array       # () f32 — summed -log p(y)
@@ -73,7 +76,10 @@ class EvalAccum(NamedTuple):
 
 
 class EvalReport(NamedTuple):
-    """Finalized metrics (host floats) + the reliability bins."""
+    """Finalized metrics (host floats) + the reliability bins.
+
+    Finalization is deterministic in the accumulated statistics.
+    """
     accuracy: float
     ece: float
     mce: float
@@ -238,6 +244,8 @@ class ScanEvalEngine:
     sample axis ``(S, ...)`` (``DeviceSampleBank.stacked``) and, with
     ``node_axis=1``, a node-chain axis ``(S, K, ...)`` — the same BMA
     semantics as :func:`repro.core.posterior.bma_predict_stacked`.
+
+    Bitwise-equivalent to :class:`HostEvalEngine` (tier-1 gated).
     """
 
     name = "scan"
@@ -251,14 +259,16 @@ class ScanEvalEngine:
         self.entropy_threshold = float(entropy_threshold)
         self._fns = {}
 
-    def _fn(self, node_axis: Optional[int], with_probs: bool):
-        key = (node_axis, with_probs)
+    def _fn(self, node_axis: Optional[int], with_probs: bool,
+            weighted: bool = False):
+        key = (node_axis, with_probs, weighted)
         if key not in self._fns:
-            def run(stacked, batches, masks, accum0):
+            def run(stacked, weights, batches, masks, accum0):
                 def body(acc, xs):
                     batch, mask = xs
                     probs = bma_predict_stacked(self.apply_fn, stacked,
-                                                batch, node_axis=node_axis)
+                                                batch, node_axis=node_axis,
+                                                weights=weights)
                     acc = update_accum(acc, probs, batch["y"], mask,
                                       self.num_bins,
                                       self.entropy_threshold)
@@ -272,13 +282,20 @@ class ScanEvalEngine:
 
     def evaluate(self, stacked, data: Dict[str, np.ndarray],
                  node_axis: Optional[int] = None,
-                 return_probs: bool = False):
+                 return_probs: bool = False, weights=None):
         """One fused pass -> :class:`EvalReport` (and optionally the
-        unpadded (N, C) BMA probabilities for diagram rendering)."""
+        unpadded (N, C) BMA probabilities for diagram rendering).
+
+        ``weights`` (optional ``(S,)``) switches the BMA mean to the
+        age-discounted mixture; ``weights=None`` traces the pre-continual
+        graph unchanged (bitwise-pinned against :class:`HostEvalEngine`)."""
         n = len(data["y"])
+        if weights is not None:
+            weights = jnp.asarray(weights, jnp.float32)
         batches, masks = stack_eval_batches(data, self.batch_size)
-        accum, probs = self._fn(node_axis, return_probs)(
-            stacked, batches, masks, init_accum(self.num_bins))
+        accum, probs = self._fn(node_axis, return_probs,
+                                weights is not None)(
+            stacked, weights, batches, masks, init_accum(self.num_bins))
         report = finalize(accum)
         if return_probs:
             # (nb, B, ...) -> (nb*B, ...): flatten only the batch stacking,
@@ -294,6 +311,8 @@ class HostEvalEngine:
     Runs the *same* per-batch statistics kernel as the scan body, one jit
     call per batch, accumulating on device in host loop order; kept
     deliberately boring so the fused engine has a trustworthy target.
+
+    Deterministic in (stacked, data, weights) — the bitwise reference.
     """
 
     name = "host"
@@ -307,29 +326,33 @@ class HostEvalEngine:
         self.entropy_threshold = float(entropy_threshold)
         self._fns = {}
 
-    def _step(self, node_axis: Optional[int]):
-        if node_axis not in self._fns:
-            def step(stacked, batch, mask, acc):
+    def _step(self, node_axis: Optional[int], weighted: bool = False):
+        key = (node_axis, weighted)
+        if key not in self._fns:
+            def step(stacked, weights, batch, mask, acc):
                 probs = bma_predict_stacked(self.apply_fn, stacked, batch,
-                                            node_axis=node_axis)
+                                            node_axis=node_axis,
+                                            weights=weights)
                 return update_accum(acc, probs, batch["y"], mask,
                                     self.num_bins,
                                     self.entropy_threshold), probs
-            self._fns[node_axis] = jax.jit(step)
-        return self._fns[node_axis]
+            self._fns[key] = jax.jit(step)
+        return self._fns[key]
 
     def evaluate(self, stacked, data: Dict[str, np.ndarray],
                  node_axis: Optional[int] = None,
-                 return_probs: bool = False):
+                 return_probs: bool = False, weights=None):
         n = len(data["y"])
+        if weights is not None:
+            weights = jnp.asarray(weights, jnp.float32)
         batches, masks = stack_eval_batches(data, self.batch_size)
         nb = masks.shape[0]
         acc = init_accum(self.num_bins)
-        step = self._step(node_axis)
+        step = self._step(node_axis, weights is not None)
         all_probs = []
         for i in range(nb):
             batch = {f: v[i] for f, v in batches.items()}
-            acc, probs = step(stacked, batch, masks[i], acc)
+            acc, probs = step(stacked, weights, batch, masks[i], acc)
             if return_probs:
                 all_probs.append(np.asarray(probs, np.float32))
         report = finalize(acc)
@@ -349,6 +372,8 @@ class ShardEvalEngine:
     ``B/num_shards`` slice of the batch; the metric accumulators are
     psum-reduced across the fed axis after the scan, so the returned
     statistics are replicated and identical on every shard.
+
+    Matches the host oracle to float tolerance (conv reductions reorder under shard_map); node-dropping and age weights are exact.
     """
 
     name = "shard"
@@ -382,51 +407,76 @@ class ShardEvalEngine:
         s = NamedSharding(self.mesh, P(None, self.fed_axis))
         return jax.device_put(stacked, s)
 
-    def _fn(self, stacked, k_total: int):
-        key = k_total
+    def _fn(self, stacked, k_total: int, weighted: bool = False):
+        key = (k_total, weighted)
         if key not in self._fns:
             axis, num_bins = self.fed_axis, self.num_bins
             ent_thr = self.entropy_threshold
             slice_b = self.batch_size // self.num_shards
 
-            def local(stacked_l, batches, masks):
-                r = jax.lax.axis_index(axis)
-                own = (jnp.arange(self.batch_size) // slice_b) == r
+            def make_local(with_weights: bool):
+                def run(stacked_l, weights, batches, masks):
+                    r = jax.lax.axis_index(axis)
+                    own = (jnp.arange(self.batch_size) // slice_b) == r
 
-                def body(acc, xs):
-                    batch, mask = xs
-                    # local partial BMA: sum of softmax over (S, local K)
-                    logits = jax.vmap(lambda p: jax.vmap(
-                        lambda q: self.apply_fn(q, batch))(p))(stacked_l)
-                    p_sum = jnp.sum(
-                        jax.nn.softmax(logits.astype(jnp.float32), axis=-1),
-                        axis=(0, 1))
-                    probs = jax.lax.psum(p_sum, axis) / (
-                        logits.shape[0] * k_total)
-                    acc = update_accum(acc, probs, batch["y"], mask * own,
-                                      num_bins, ent_thr)
-                    return acc, None
+                    def body(acc, xs):
+                        batch, mask = xs
+                        # local partial BMA: sum of softmax over (S, local K)
+                        logits = jax.vmap(lambda p: jax.vmap(
+                            lambda q: self.apply_fn(q, batch))(p))(stacked_l)
+                        p = jax.nn.softmax(logits.astype(jnp.float32),
+                                           axis=-1)
+                        if not with_weights:
+                            p_sum = jnp.sum(p, axis=(0, 1))
+                            probs = jax.lax.psum(p_sum, axis) / (
+                                logits.shape[0] * k_total)
+                        else:
+                            # age-weighted: psum the per-sample node sums,
+                            # node-mean, then mix samples with the weights
+                            p_s = jax.lax.psum(jnp.sum(p, axis=1),
+                                               axis) / k_total
+                            w = weights / jnp.maximum(
+                                jnp.sum(weights), jnp.float32(1e-12))
+                            probs = jnp.einsum("s,s...->...", w, p_s)
+                        acc = update_accum(acc, probs, batch["y"],
+                                           mask * own, num_bins, ent_thr)
+                        return acc, None
 
-                acc, _ = jax.lax.scan(body, init_accum(num_bins),
-                                      (batches, masks))
-                # psum the metric accumulators across the fed mesh axis
-                return jax.tree.map(lambda x: jax.lax.psum(x, axis), acc)
+                    acc, _ = jax.lax.scan(body, init_accum(num_bins),
+                                          (batches, masks))
+                    # psum the metric accumulators across the fed mesh axis
+                    return jax.tree.map(lambda x: jax.lax.psum(x, axis),
+                                        acc)
+
+                if with_weights:
+                    return run
+                return lambda stacked_l, batches, masks: run(
+                    stacked_l, None, batches, masks)
 
             stacked_specs = jax.tree.map(lambda _: P(None, self.fed_axis),
                                          stacked)
             accum_specs = jax.tree.map(lambda _: P(),
                                        init_accum(self.num_bins))
-            fn = self._shard_map(local,
-                                 in_specs=(stacked_specs, P(), P()),
+            in_specs = ((stacked_specs, P(), P(), P()) if weighted
+                        else (stacked_specs, P(), P()))
+            fn = self._shard_map(make_local(weighted),
+                                 in_specs=in_specs,
                                  out_specs=accum_specs)
             self._fns[key] = jax.jit(fn)
         return self._fns[key]
 
-    def evaluate(self, stacked, data: Dict[str, np.ndarray]) -> EvalReport:
+    def evaluate(self, stacked, data: Dict[str, np.ndarray],
+                 weights=None) -> EvalReport:
         k_total = jax.tree.leaves(stacked)[0].shape[1]
         stacked = self.place(stacked)
+        if weights is not None:
+            weights = jnp.asarray(weights, jnp.float32)
         batches, masks = stack_eval_batches(data, self.batch_size)
-        accum = self._fn(stacked, k_total)(stacked, batches, masks)
+        fn = self._fn(stacked, k_total, weights is not None)
+        if weights is not None:
+            accum = fn(stacked, weights, batches, masks)
+        else:
+            accum = fn(stacked, batches, masks)
         return finalize(accum)
 
 

@@ -155,6 +155,37 @@ def _parse_args():
     ap.add_argument("--pool", type=int, default=64,
                     help="per-node synthetic sequence pool size (rounds "
                          "sample minibatches from it on device)")
+    ap.add_argument("--drift", default="",
+                    help="scenario family whose severity drifts over "
+                         "training (lenet pools only; empty = static "
+                         "data). The schedule is pure in (seed, round) — "
+                         "see --drift-*/--refresh-* and DESIGN.md §15")
+    ap.add_argument("--drift-kind", default="step",
+                    choices=["constant", "step", "ramp", "cyclic"],
+                    help="severity trajectory shape")
+    ap.add_argument("--drift-severity", type=float, default=0.8,
+                    help="plateau/peak severity of the drift")
+    ap.add_argument("--drift-base", type=float, default=0.0,
+                    help="pre-onset severity (base == severity never "
+                         "leaves the original pool)")
+    ap.add_argument("--drift-onset", type=int, default=0,
+                    help="first drifted round (step/ramp/cyclic)")
+    ap.add_argument("--drift-ramp-rounds", type=int, default=0,
+                    help="ramp duration in rounds (kind=ramp)")
+    ap.add_argument("--drift-period", type=int, default=0,
+                    help="cycle period in rounds (kind=cyclic)")
+    ap.add_argument("--drift-seed", type=int, default=0,
+                    help="drift-synthesis stream seed")
+    ap.add_argument("--refresh-every", type=int, default=5,
+                    help="drift phase quantization: rounds between "
+                         "training-pool refreshes")
+    ap.add_argument("--refresh-window", type=int, default=0,
+                    help=">0: evict posterior-bank samples older than "
+                         "this many rounds from the BMA mixture "
+                         "(continual bank aging, DESIGN.md §15)")
+    ap.add_argument("--refresh-decay", type=float, default=1.0,
+                    help="<1: exponential age discount on bank-sample "
+                         "BMA weights")
     ap.add_argument("--eval-every", type=int, default=0,
                     help=">0: score the consensus model every N rounds "
                          "through the fused eval engine (DESIGN.md §10)")
@@ -328,6 +359,34 @@ def main():
             for k_node in range(fed.num_nodes)
         ]
     dshards = DeviceShards.from_shards(pool)
+    # streaming drift: the training pool follows a severity schedule, the
+    # engines re-draw it at phase boundaries via set_shards (DESIGN.md §15)
+    refresher = cont = None
+    if args.drift:
+        if cfg.family != "lenet":
+            raise SystemExit("--drift needs a lenet pool (the scenario "
+                             "registry synthesizes radar maps, not tokens)")
+        if args.mesh > 1 and args.engine != "shard":
+            raise SystemExit("--drift with --mesh > 1 needs --engine shard "
+                             "(GSPMD-auto placement would be lost on pool "
+                             "refresh)")
+        from repro.config import ContinualConfig
+        from repro.train.drift import make_refresher
+        cont = ContinualConfig(
+            scenario=args.drift, schedule=args.drift_kind,
+            severity=args.drift_severity, base_severity=args.drift_base,
+            onset=args.drift_onset, ramp_rounds=args.drift_ramp_rounds,
+            period=args.drift_period, refresh_every=args.refresh_every,
+            drift_seed=args.drift_seed, window=args.refresh_window,
+            decay=args.refresh_decay)
+        refresher = make_refresher(cont, dshards)
+        print(f"drift: {args.drift} kind={args.drift_kind} "
+              f"severity={args.drift_base:g}->{args.drift_severity:g} "
+              f"onset={args.drift_onset} refresh_every={args.refresh_every}"
+              + (f" window={args.refresh_window}" if args.refresh_window
+                 else "")
+              + (f" decay={args.refresh_decay:g}"
+                 if args.refresh_decay < 1.0 else ""))
     if mesh is not None and args.engine != "shard":
         # GSPMD-auto: same scan engine, node axis sharded by placement —
         # the compiler inserts the gossip collectives (DESIGN.md §3)
@@ -404,13 +463,32 @@ def main():
             return None
         return bank_cfg.stacked(bank_state)
 
+    def bank_weights(now: int):
+        """Age-discounted BMA weights under --refresh-window/--refresh-
+        decay (None = uniform, the pre-continual path)."""
+        if cont is None or not cont.ages or bank_cfg is None \
+                or bank_state is None:
+            return None
+        from repro.core.posterior import bank_age_weights
+        rounds_seen = (bank_state.rounds if hasattr(bank_state, "samples")
+                       else bank_cfg.rounds_list(bank_state))
+        if not len(rounds_seen):
+            return None
+        return bank_age_weights(rounds_seen, now, window=cont.window,
+                                decay=cont.decay)
+
     segment = args.eval_every if args.eval_every > 0 else args.rounds
     done = 0
     while done < args.rounds:
         n = min(segment, args.rounds - done)
-        state, key, bank_state, losses, _ = engine.run(
-            state, key, bank_state, n, t0=done,
-            log_every=args.log_every, log_cb=log_cb)
+        subsegs = (list(refresher.segments(done, n))
+                   if refresher is not None else [(done, n)])
+        for s0, m in subsegs:
+            if refresher is not None:
+                refresher.refresh(engine, s0)
+            state, key, bank_state, losses, _ = engine.run(
+                state, key, bank_state, m, t0=s0,
+                log_every=args.log_every, log_cb=log_cb)
         done += n
         stacked_bank = bank_stacked()
         if eval_engine is not None:
@@ -418,15 +496,29 @@ def main():
             # consensus point model before burn-in
             stacked = (stacked_bank if stacked_bank is not None
                        else as_stacked(state.params))
+            # under drift, score the *current* distribution's held-out
+            # cell (what "calibration recovers" means in DESIGN.md §15)
+            eval_name, eval_sev, ds_now = (args.eval_scenario,
+                                           args.eval_severity, eval_ds)
+            if refresher is not None:
+                eval_name = args.drift
+                eval_sev = float(refresher.schedule.severity_at(done - 1))
+                ds_now = refresher.eval_dataset(done - 1,
+                                                args.eval_examples,
+                                                seed=fed.seed + 90)
+            w = (bank_weights(done)
+                 if stacked_bank is not None else None)
             if args.engine == "shard":
-                rep = eval_engine.evaluate(stacked, eval_ds)
+                rep = eval_engine.evaluate(stacked, ds_now, weights=w)
             else:
-                rep = eval_engine.evaluate(stacked, eval_ds, node_axis=1)
+                rep = eval_engine.evaluate(stacked, ds_now, node_axis=1,
+                                           weights=w)
             s = jax.tree.leaves(stacked)[0].shape[0]
-            print(f"eval  round {done:4d} [{args.eval_scenario}"
-                  f"@{args.eval_severity:g}] S={s} acc={rep.accuracy:.4f} "
+            print(f"eval  round {done:4d} [{eval_name}"
+                  f"@{eval_sev:g}] S={s} acc={rep.accuracy:.4f} "
                   f"ece={rep.ece:.4f} nll={rep.nll:.4f} "
-                  f"gap={rep.overconf_gap:+.4f}")
+                  f"gap={rep.overconf_gap:+.4f}"
+                  + (" aged" if w is not None else ""))
         if args.ckpt_dir and stacked_bank is not None:
             # atomic publish: a concurrently polling server (launch.serve
             # --poll-s) hot-swaps this snapshot in without ever seeing a

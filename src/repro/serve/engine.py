@@ -84,7 +84,10 @@ class ServeRequest:
 
 @dataclasses.dataclass
 class ServeResponse:
-    """The API response: prediction + uncertainty + the abstain gate."""
+    """The API response: prediction + uncertainty + the abstain gate.
+
+    Deterministic given the installed bank and the request bits.
+    """
     request_id: int
     probs: np.ndarray              # (C,) BMA predictive distribution
     entropy: float                 # nats; decode: mean over emitted tokens
@@ -102,6 +105,8 @@ class ServingEngine:
     queued requests into free slots, runs one compiled kernel over the
     whole table, and retires finished slots into responses. ``drain``
     steps until idle; ``run`` is submit-all-then-drain.
+
+    Purity: the classification path reproduces the eval engine's probabilities bitwise (``serve_vs_eval_bitwise``, exact-gated in ``bench_serve``).
     """
 
     def __init__(self, cfg: ServeConfig):

@@ -1,0 +1,118 @@
+"""Streaming-drift driver: schedules → engine shard refreshes (DESIGN.md §15).
+
+The engines train on a :class:`~repro.data.partition.DeviceShards` pool
+that historically never changed. Continual training (the follow-up
+setting of arXiv 2504.15328) moves the *training distribution itself*
+over rounds: a :class:`~repro.data.scenarios.DriftSchedule` maps each
+round to a scheduled severity, and this module owns the mechanics of
+applying it — splitting a training run into constant-severity segments,
+synthesizing the per-node pools for each phase, and swapping them into
+the engine via ``set_shards`` between compiled chunks.
+
+Purity contract: the shards installed for round ``t`` are a pure
+function of ``(schedule, t, sizes, hw)`` (see
+:func:`~repro.data.scenarios.make_drift_shards`), and a phase whose
+severity equals the schedule's ``base`` keeps the caller's original
+shards object untouched — training before drift onset is bitwise the
+no-drift trajectory. Both :class:`~repro.train.trainer.FedTrainer` and
+``launch/train.py`` route through this one driver so their drift
+semantics cannot diverge.
+"""
+from __future__ import annotations
+
+from typing import Iterator, List, Optional, Tuple
+
+from repro.data.partition import DeviceShards
+from repro.data.scenarios import DriftSchedule, make_drift_shards
+
+
+class DriftRefresher:
+    """Applies a :class:`DriftSchedule` to a round engine's data pool.
+
+    ``base_shards`` is the pristine pre-drift pool (kept by reference and
+    re-installed verbatim whenever the scheduled severity returns to
+    ``base``). Synthesized phase pools are cached per severity value, so
+    cyclic schedules that revisit a severity pay the synthesis cost once.
+    Only image-style pools (fields ``x``/``y``) support drift — the
+    scenario registry synthesizes radar maps, not token streams.
+
+    Purity: phase pools are pure in ``(schedule, t, sizes, hw)``, and base-severity phases return the caller's original shards object — a bitwise no-op.
+    """
+
+    def __init__(self, schedule: DriftSchedule, base_shards: DeviceShards):
+        if "x" not in base_shards.data or "y" not in base_shards.data:
+            raise ValueError(
+                "drift schedules need an image-style pool with 'x'/'y' "
+                f"fields, got {sorted(base_shards.data)} — LM token pools "
+                "have no scenario synthesis path")
+        self.schedule = schedule
+        self.base_shards = base_shards
+        self.sizes: List[int] = [int(n) for n in base_shards.sizes]
+        x = base_shards.data["x"]
+        self.hw: Tuple[int, int] = (int(x.shape[2]), int(x.shape[3]))
+        self._cache = {}              # severity (float) -> DeviceShards
+        self.current_severity: float = float(schedule.base)
+
+    # -- segmentation ------------------------------------------------------
+    def segments(self, t0: int, rounds: int) -> Iterator[Tuple[int, int]]:
+        """Split ``[t0, t0 + rounds)`` at phase boundaries.
+
+        Yields ``(start, n)`` runs of rounds with constant scheduled
+        severity, so the caller refreshes once per segment and hands each
+        segment to the engine as ordinary chunked rounds. Consecutive
+        phases with equal severity merge into one segment — a flat
+        schedule (or the whole pre-onset region) costs zero extra
+        dispatches even at ``refresh_every=1``.
+        """
+        step = max(1, int(self.schedule.refresh_every))
+        t, end = int(t0), int(t0) + int(rounds)
+        while t < end:
+            sev = self.schedule.severity_at(t)
+            nxt = (t // step + 1) * step
+            while nxt < end and self.schedule.severity_at(nxt) == sev:
+                nxt += step
+            n = min(nxt, end) - t
+            yield t, n
+            t += n
+
+    # -- pool synthesis ----------------------------------------------------
+    def shards_for(self, t: int) -> DeviceShards:
+        """The training pool for round ``t``'s phase (cached per severity)."""
+        sev = float(self.schedule.severity_at(t))
+        if sev == float(self.schedule.base):
+            return self.base_shards
+        if sev not in self._cache:
+            shard_list = make_drift_shards(self.schedule, t, self.sizes,
+                                           self.hw)
+            self._cache[sev] = DeviceShards.from_shards(shard_list)
+        return self._cache[sev]
+
+    def refresh(self, engine, t: int) -> float:
+        """Install round ``t``'s pool on ``engine`` (no-op when the phase
+        severity matches what is already installed). Returns the severity
+        now in effect — the caller's log/eval hook."""
+        sev = float(self.schedule.severity_at(t))
+        if sev != self.current_severity:
+            engine.set_shards(self.shards_for(t))
+            self.current_severity = sev
+        return sev
+
+    def eval_dataset(self, t: int, num_examples: int, seed: int = 0):
+        """A held-out test cell drawn from round ``t``'s severity — what
+        "current distribution" means for in-training drift evals."""
+        from repro.data.scenarios import make_scenario_dataset
+        sev = float(self.schedule.severity_at(t))
+        return make_scenario_dataset(self.schedule.scenario, sev,
+                                     int(num_examples), hw=self.hw,
+                                     seed=seed)
+
+
+def make_refresher(continual, shards: DeviceShards
+                   ) -> Optional[DriftRefresher]:
+    """Build a refresher from a :class:`~repro.config.ContinualConfig`
+    (None when the config carries no drift)."""
+    from repro.data.scenarios import make_drift_schedule
+    schedule = make_drift_schedule(continual)
+    if schedule is None:
+        return None
+    return DriftRefresher(schedule, shards)

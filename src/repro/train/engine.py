@@ -56,13 +56,17 @@ def round_data_key(kround: jax.Array) -> jax.Array:
 
 
 class EngineCarry(NamedTuple):
+    """Donated scan carry (state, key, round index) — a pure value threaded through compiled super-rounds."""
     state: Any                    # FedState
     key: jax.Array                # trainer-level PRNG stream
     bank: Any                     # DeviceBankState or None
 
 
 class ChunkMetrics(NamedTuple):
-    """Per-round scalars, reduced on device (one small D2H per chunk)."""
+    """Per-round scalars, reduced on device (one small D2H per chunk).
+
+    Deterministic device-side reductions; no host RNG touches them.
+    """
     loss: jax.Array               # (chunk,) mean over (K, L)
     consensus: jax.Array          # (chunk,)
     delta_norm: jax.Array         # (chunk,)
@@ -128,8 +132,29 @@ def _append_round_histories(hists: dict, metrics) -> None:
             np.asarray(getattr(metrics, rfield), np.float64).tolist())
 
 
+def _check_same_layout(old: DeviceShards, new: DeviceShards) -> None:
+    """Swapped shards must keep the compiled layout (shapes/dtypes/field):
+    a mismatch would silently retrace every cached chunk fn."""
+    if new.example_field != old.example_field:
+        raise ValueError(f"set_shards: example_field changed "
+                         f"({old.example_field!r} -> {new.example_field!r})")
+    old_l = {f: (v.shape, v.dtype) for f, v in old.data.items()}
+    new_l = {f: (v.shape, v.dtype) for f, v in new.data.items()}
+    if old_l != new_l:
+        raise ValueError(f"set_shards: data layout changed "
+                         f"({old_l} -> {new_l})")
+
+
 class ScanRoundEngine:
-    """R federated rounds as chunked, donated ``lax.scan`` super-rounds."""
+    """R federated rounds as chunked, donated ``lax.scan`` super-rounds.
+
+    The node shards enter every chunk as explicit jit arguments (not
+    trace-time closure constants), so :meth:`set_shards` — the streaming
+    drift hook — swaps the training distribution between chunks without
+    invalidating a single compiled chunk fn (same shapes, zero recompiles).
+
+    Bitwise-equivalent to :class:`HostRoundEngine` round-for-round (tier-1 gated).
+    """
 
     name = "scan"
 
@@ -145,12 +170,21 @@ class ScanRoundEngine:
         self._chunk_fns = {}              # static chunk length -> compiled fn
         _init_histories(self)
 
+    def set_shards(self, shards: DeviceShards) -> None:
+        """Swap the training data between chunks (drift refresh). The new
+        shards must match the current layout bit-for-bit in shape/dtype."""
+        _check_same_layout(self.shards, shards)
+        self.shards = shards
+
     # -- one round, traced inside the scan --------------------------------
-    def _body(self, carry: EngineCarry, t) -> Tuple[EngineCarry, ChunkMetrics]:
+    def _body(self, data, sizes, carry: EngineCarry, t
+              ) -> Tuple[EngineCarry, ChunkMetrics]:
         state, key, bank = carry
         key, kround = jax.random.split(key)
-        batches = self.shards.sample(round_data_key(kround),
-                                     self.local_steps, self.minibatch)
+        shards_now = DeviceShards(data=data, sizes=sizes,
+                                  example_field=self.shards.example_field)
+        batches = shards_now.sample(round_data_key(kround),
+                                    self.local_steps, self.minibatch)
         state, metrics = self.round_fn(state, batches, kround)
         if self.bank is not None:
             bank = self.bank.update(bank, t, state.params)
@@ -172,12 +206,14 @@ class ScanRoundEngine:
 
     def _chunk_fn(self, length: int):
         if length not in self._chunk_fns:
-            def chunk(carry, t0):
+            def chunk(data_sizes, carry, t0):
+                data, sizes = data_sizes
                 ts = t0 + jnp.arange(length, dtype=jnp.int32)
-                return jax.lax.scan(self._body, carry, ts)
+                return jax.lax.scan(partial(self._body, data, sizes),
+                                    carry, ts)
 
             # donate the carry: params/v/v_bar (+ bank slots) update in place
-            self._chunk_fns[length] = jax.jit(chunk, donate_argnums=(0,))
+            self._chunk_fns[length] = jax.jit(chunk, donate_argnums=(1,))
         return self._chunk_fns[length]
 
     def run(self, state, key, bank_state, rounds: int, t0: int = 0,
@@ -198,8 +234,9 @@ class ScanRoundEngine:
         done = 0
         while done < rounds:
             n = min(chunk, rounds - done)
-            carry, ms = self._chunk_fn(n)(carry, jnp.asarray(t0 + done,
-                                                             jnp.int32))
+            data_sizes = (self.shards.data, self.shards.sizes)
+            carry, ms = self._chunk_fn(n)(data_sizes, carry,
+                                          jnp.asarray(t0 + done, jnp.int32))
             losses.extend(np.asarray(ms.loss, np.float64).tolist())
             cons.extend(np.asarray(ms.consensus, np.float64).tolist())
             _extend_histories(hists, ms)
@@ -218,6 +255,8 @@ class HostRoundEngine:
     one jit dispatch per round, a blocking ``float()`` metrics sync, and a
     D2H parameter pull into the host :class:`SampleBank` for every admitted
     posterior sample. ``bank_state`` is a (mutable) :class:`SampleBank`.
+
+    Deterministic given ``(state, key)`` — the bitwise reference the other engines are gated against.
     """
 
     name = "host"
@@ -230,6 +269,11 @@ class HostRoundEngine:
         self.minibatch = int(minibatch)
         self.bank = bank                  # config only: burn_in/thin/capacity
         _init_histories(self)
+
+    def set_shards(self, shards: DeviceShards) -> None:
+        """Swap the training data (drift refresh); layout must match."""
+        _check_same_layout(self.shards, shards)
+        self.shards = shards
 
     def make_bank(self) -> Optional[SampleBank]:
         if self.bank is None:
@@ -313,6 +357,12 @@ class ShardRoundEngine:
         self.default_chunk = int(default_chunk)
         self._chunk_fns = {}
         _init_histories(self)
+
+    def set_shards(self, shards: DeviceShards) -> None:
+        """Swap the training data (drift refresh): re-placed on the fed
+        mesh; layout must match the compiled chunk fns bit-for-bit."""
+        _check_same_layout(self.shards, shards)
+        self.shards = shards.with_sharding(self.mesh, self.fed_axis)
 
     # -- spec/placement helpers -------------------------------------------
     def _carry_specs(self, carry: EngineCarry):

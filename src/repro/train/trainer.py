@@ -42,6 +42,7 @@ from repro.train.engine import make_engine
 
 @dataclass
 class TrainResult:
+    """Final state + metrics of one training run; reproducible — a run is a pure function of ``(FedConfig, seed)`` on a fixed engine."""
     accuracy: float
     ece: float
     nll: float
@@ -106,13 +107,22 @@ class _BankView:
 
 
 class FedTrainer:
+    """Host-side orchestration of the paper's decentralized protocol.
+
+    Builds model, data, topology, transport and engine from a
+    :class:`FedConfig` and runs R rounds (optionally drift-segmented,
+    DESIGN.md §15). Purity contract: a run is deterministic in
+    ``(config, seed)`` on a fixed engine, and engines are
+    bitwise-interchangeable per DESIGN.md §8–§9.
+    """
     def __init__(self, model, fed_cfg, shards: List[Dict[str, np.ndarray]],
                  minibatch: int = 10, data_scale: Optional[float] = None,
                  seed: int = 0, engine: str = "scan",
                  chunk: Optional[int] = None, bank_capacity: int = 40,
                  bank_thin: int = 2, bank_dtype: str = "float32",
                  mesh=None, fed_axis: str = "fed",
-                 eval_batch_size: int = 64, transport=None):
+                 eval_batch_size: int = 64, transport=None,
+                 continual=None):
         assert len(shards) == fed_cfg.num_nodes, "one shard per node"
         self.model = model
         self.fed_cfg = fed_cfg
@@ -180,6 +190,16 @@ class FedTrainer:
         self._fed_axis = fed_axis
         self.eval_batch_size = int(eval_batch_size)
         self._eval_engines: Dict[str, Any] = {}
+
+        # continual learning: drift schedule + bank aging (DESIGN.md §15);
+        # None (the default) leaves every path bitwise pre-continual
+        from repro.train.drift import make_refresher
+        self.continual = (continual if continual is not None
+                          else getattr(fed_cfg, "continual", None))
+        self._refresher = make_refresher(self.continual, self.device_shards)
+        # unlearned node ids: excluded from every posterior view/eval and
+        # zeroed out of the residual state by unlearn()
+        self._unlearned: set = set()
         if engine == "host":
             self._bank_state: Any = self._engine.make_bank()
         else:
@@ -203,6 +223,57 @@ class FedTrainer:
         if isinstance(self._bank_state, SampleBank):
             return self._bank_state
         return _BankView(self.bank_cfg, self._bank_state)
+
+    # ------------------------------------------------------------------
+    def unlearn(self, node_id: int) -> None:
+        """Remove node ``node_id``'s contribution from the posterior.
+
+        Federated unlearning in the sense of arXiv 2209.07267, applied to
+        this repo's particle representation: the node's posterior chain is
+        (a) zeroed out of every sample-bank slot and dropped from all
+        stacked views, predictors and evaluations (axis-1 exclusion), and
+        (b) its compressed-gossip control variates ``v``/``v̄`` are zeroed
+        so no residual of its past transmissions keeps propagating. What
+        cannot be removed exactly is the influence its past gossip already
+        had on *other* nodes' chains — which is why the eval matrix pins
+        ``unlearn`` against a retrain-without-the-node oracle within an
+        accuracy/ECE tolerance (``eval/matrix.py``) rather than bitwise.
+
+        Continued training re-admits the node (it still sits in the
+        topology); unlearn is a post-training operation. Idempotent.
+        """
+        k = int(node_id)
+        if not 0 <= k < self.fed_cfg.num_nodes:
+            raise ValueError(f"node_id {k} out of range "
+                             f"[0, {self.fed_cfg.num_nodes})")
+        if k in self._unlearned:
+            return
+        if len(self._unlearned) + 1 >= self.fed_cfg.num_nodes:
+            raise ValueError("cannot unlearn every node")
+        self._unlearned.add(k)
+        # zero the node's control-variate rows (residual state)
+        self.state = self.state._replace(
+            v=jax.tree.map(lambda x: x.at[k].set(0), self.state.v),
+            v_bar=jax.tree.map(lambda x: x.at[k].set(0), self.state.v_bar))
+        # physically erase the node's rows from the bank storage (the
+        # view-level exclusion alone would keep the bits resident)
+        if isinstance(self._bank_state, SampleBank):
+            for i, s in enumerate(self._bank_state.samples):
+                self._bank_state.samples[i] = jax.tree.map(
+                    lambda x: np.asarray(
+                        jnp.asarray(x).at[k].set(0)), s)
+        elif self._bank_state is not None:
+            bs = self._bank_state
+            slots = jax.tree.map(lambda x: x.at[:, k].set(0), bs.slots)
+            scales = (None if bs.scales is None else jax.tree.map(
+                lambda x: x.at[:, k].set(1.0) if x.ndim > 1 else x,
+                bs.scales))
+            self._bank_state = bs._replace(slots=slots, scales=scales)
+
+    @property
+    def unlearned(self) -> frozenset:
+        """Node ids removed by :meth:`unlearn` (read-only view)."""
+        return frozenset(self._unlearned)
 
     # ------------------------------------------------------------------
     def run(self, rounds: Optional[int] = None, log_every: int = 0,
@@ -236,28 +307,37 @@ class FedTrainer:
         while done < rounds:
             n = min(segment, rounds - done)
             t_start = int(self.state.round)
-            (self.state, self.key, self._bank_state, seg_losses, seg_cons
-             ) = self._engine.run(self.state, self.key, self._bank_state, n,
-                                  t0=t_start, log_every=log_every,
-                                  log_cb=log_cb)
-            losses.extend(seg_losses)
-            cons.extend(seg_cons)
-            wire_hist.extend(getattr(self._engine, "last_wire_history", []))
-            cross_hist.extend(getattr(self._engine, "last_cross_history", []))
-            offered_hist.extend(
-                getattr(self._engine, "last_offered_history", []))
-            delivered_hist.extend(
-                getattr(self._engine, "last_delivered_history", []))
-            airtime_hist.extend(
-                getattr(self._engine, "last_airtime_history", []))
-            energy_hist.extend(
-                getattr(self._engine, "last_energy_history", []))
-            retransmit_hist.extend(
-                getattr(self._engine, "last_retransmit_history", []))
-            abandoned_hist.extend(
-                getattr(self._engine, "last_abandoned_history", []))
-            participation_hist.extend(
-                getattr(self._engine, "last_participation_history", []))
+            # drift: split the segment at schedule phase boundaries and
+            # refresh the engine's pool once per constant-severity run
+            subsegs = (list(self._refresher.segments(t_start, n))
+                       if self._refresher is not None else [(t_start, n)])
+            for s, m in subsegs:
+                if self._refresher is not None:
+                    self._refresher.refresh(self._engine, s)
+                (self.state, self.key, self._bank_state, seg_losses,
+                 seg_cons) = self._engine.run(
+                     self.state, self.key, self._bank_state, m, t0=s,
+                     log_every=log_every, log_cb=log_cb)
+                losses.extend(seg_losses)
+                cons.extend(seg_cons)
+                wire_hist.extend(
+                    getattr(self._engine, "last_wire_history", []))
+                cross_hist.extend(
+                    getattr(self._engine, "last_cross_history", []))
+                offered_hist.extend(
+                    getattr(self._engine, "last_offered_history", []))
+                delivered_hist.extend(
+                    getattr(self._engine, "last_delivered_history", []))
+                airtime_hist.extend(
+                    getattr(self._engine, "last_airtime_history", []))
+                energy_hist.extend(
+                    getattr(self._engine, "last_energy_history", []))
+                retransmit_hist.extend(
+                    getattr(self._engine, "last_retransmit_history", []))
+                abandoned_hist.extend(
+                    getattr(self._engine, "last_abandoned_history", []))
+                participation_hist.extend(
+                    getattr(self._engine, "last_participation_history", []))
             done += n
             if segment < rounds and done < rounds:
                 # in-training snapshot through the same fused eval path
@@ -345,6 +425,30 @@ class FedTrainer:
             return None
         return self.bank_cfg.stacked(self._bank_state)
 
+    def _filter_nodes(self, stacked):
+        """Drop unlearned node chains (axis 1) from a stacked bank view."""
+        if not self._unlearned:
+            return stacked
+        keep = jnp.asarray([i for i in range(self.fed_cfg.num_nodes)
+                            if i not in self._unlearned], jnp.int32)
+        return jax.tree.map(lambda x: jnp.take(x, keep, axis=1), stacked)
+
+    def _bank_weights(self, stacked):
+        """Age-discounted BMA weights for the current bank, or None when
+        no aging policy is configured / the view is a point fallback."""
+        c = self.continual
+        if c is None or not c.ages or stacked is None:
+            return None
+        if isinstance(self._bank_state, SampleBank):
+            rounds = self._bank_state.rounds
+        else:
+            rounds = self.bank_cfg.rounds_list(self._bank_state)
+        if len(rounds) != int(jax.tree.leaves(stacked)[0].shape[0]):
+            return None
+        from repro.core.posterior import bank_age_weights
+        return bank_age_weights(rounds, int(self.state.round),
+                                window=c.window, decay=c.decay)
+
     def _eval_engine(self, apply_fn, kind: str):
         eng = self._eval_engines.get(kind)
         if eng is None:
@@ -365,10 +469,13 @@ class FedTrainer:
         Falls back to the point estimate while the bank is empty."""
         from repro.core.posterior import BankPredictor
         stacked = self._stacked_bank()
+        weights = self._bank_weights(stacked)
         if stacked is None:
             stacked = as_stacked(self.state.params)    # (1, K, ...)
-        return BankPredictor(lambda p, b: self.model.logits(p, b),
-                             stacked=stacked, node_axis=1)
+        bp = BankPredictor(lambda p, b: self.model.logits(p, b),
+                           node_axis=1)
+        bp.install(self._filter_nodes(stacked), weights=weights)
+        return bp
 
     def eval_report(self, batch: Dict[str, np.ndarray],
                     return_probs: bool = False):
@@ -380,12 +487,19 @@ class FedTrainer:
         data = dict(batch)
         data["y"] = np.asarray(labels)
         stacked = self._stacked_bank()
+        weights = self._bank_weights(stacked)
         if stacked is None:
             stacked = as_stacked(self.state.params)    # (1, K, ...)
-        if self.engine == "shard" and not return_probs:
-            return self._eval_engine(apply, "shard").evaluate(stacked, data)
+        stacked = self._filter_nodes(stacked)
+        # the SPMD eval path needs the node axis to tile the mesh; after
+        # unlearning K-1 nodes may not, so fall back to the scan engine
+        if (self.engine == "shard" and not return_probs
+                and not self._unlearned):
+            return self._eval_engine(apply, "shard").evaluate(
+                stacked, data, weights=weights)
         return self._eval_engine(apply, "scan").evaluate(
-            stacked, data, node_axis=1, return_probs=return_probs)
+            stacked, data, node_axis=1, return_probs=return_probs,
+            weights=weights)
 
     def evaluate(self, batch: Dict[str, np.ndarray],
                  res: Optional[TrainResult] = None) -> TrainResult:

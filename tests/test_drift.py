@@ -1,0 +1,417 @@
+"""Streaming drift: schedule purity, refresher segmentation, bank aging,
+and weighted (age-discounted) BMA evaluation (DESIGN.md §15).
+
+The load-bearing contracts pinned here:
+
+* ``DriftSchedule.severity_at`` is pure in ``(schedule fields, round)``
+  and phase-quantized; ``make_drift_shards`` is bitwise-reproducible in
+  ``(schedule, t, sizes, hw)`` with independent per-node streams.
+* Training *before* drift onset is bitwise the no-drift trajectory, and
+  host/scan engines stay bitwise identical *through* a drift transition
+  (the set_shards refresh does not perturb PRNG or state threading).
+* ``bank_age_weights`` invariants: non-negative, renormalized,
+  age-monotone, hard window eviction, newest-sample fallback.
+* ``weights=None`` eval paths are the pre-continual graphs (pinned
+  indirectly by the engine-equivalence suites); the weighted paths agree
+  across host/scan engines and reduce to single-sample prediction under
+  a one-hot weighting.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ContinualConfig, FedConfig, get_arch
+from repro.core.posterior import bank_age_weights
+from repro.data.partition import DeviceShards, partition_iid
+from repro.data.radar import make_dataset
+from repro.data.scenarios import (DriftSchedule, make_drift_schedule,
+                                  make_drift_shards)
+from repro.models import get_model
+from repro.train import FedTrainer
+from repro.train.drift import DriftRefresher, make_refresher
+
+NDEV = len(jax.devices())
+K = 4
+
+
+# ---------------------------------------------------------------------------
+# schedule trajectory
+# ---------------------------------------------------------------------------
+
+def test_step_schedule_values():
+    s = DriftSchedule(scenario="gain_drift", kind="step", severity=0.8,
+                      onset=10, refresh_every=5)
+    assert s.severity_at(0) == 0.0
+    assert s.severity_at(9) == 0.0
+    assert s.severity_at(10) == 0.8
+    assert s.severity_at(99) == 0.8
+    assert s.onset_round() == 10
+
+
+def test_ramp_schedule_interpolates():
+    s = DriftSchedule(scenario="gain_drift", kind="ramp", severity=1.0,
+                      onset=10, ramp_rounds=20, refresh_every=1)
+    assert s.severity_at(9) == 0.0
+    assert s.severity_at(10) == 0.0
+    assert np.isclose(s.severity_at(20), 0.5)
+    assert s.severity_at(30) == 1.0
+    assert s.severity_at(50) == 1.0   # plateau after the ramp
+    # ramp_rounds=0 degenerates to a step
+    s0 = DriftSchedule(scenario="gain_drift", kind="ramp", severity=1.0,
+                       onset=10, ramp_rounds=0)
+    assert s0.severity_at(10) == 1.0
+
+
+def test_cyclic_schedule_oscillates():
+    s = DriftSchedule(scenario="gain_drift", kind="cyclic", severity=1.0,
+                      onset=0, period=20, refresh_every=1)
+    assert np.isclose(s.severity_at(0), 0.0)
+    assert np.isclose(s.severity_at(10), 1.0)   # half-period peak
+    assert np.isclose(s.severity_at(20), 0.0)   # full period back to base
+    assert 0.0 <= min(s.severity_at(t) for t in range(40))
+    assert max(s.severity_at(t) for t in range(40)) <= 1.0
+
+
+def test_piecewise_schedule_and_onset():
+    s = DriftSchedule(scenario="gain_drift", kind="piecewise",
+                      breakpoints=((30, 0.9), (10, 0.4)), refresh_every=1)
+    assert s.severity_at(5) == 0.0
+    assert s.severity_at(10) == 0.4
+    assert s.severity_at(29) == 0.4
+    assert s.severity_at(30) == 0.9
+    assert s.onset_round() == 10     # breakpoints sort by round
+
+
+def test_phase_quantization():
+    s = DriftSchedule(scenario="gain_drift", kind="ramp", severity=1.0,
+                      onset=0, ramp_rounds=100, refresh_every=10)
+    # severity is constant within each refresh_every-round phase
+    for t0 in range(0, 100, 10):
+        sevs = {s.severity_at(t) for t in range(t0, t0 + 10)}
+        assert len(sevs) == 1
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError):
+        DriftSchedule(scenario="gain_drift", kind="bogus")
+    with pytest.raises(ValueError):
+        DriftSchedule(scenario="gain_drift", kind="cyclic", period=0)
+    with pytest.raises(ValueError):
+        DriftSchedule(scenario="gain_drift", kind="piecewise")
+    with pytest.raises(KeyError):
+        DriftSchedule(scenario="not-a-scenario")
+
+
+def test_make_drift_schedule_none_when_clean():
+    assert make_drift_schedule(None) is None
+    assert make_drift_schedule(ContinualConfig()) is None
+    assert make_drift_schedule(ContinualConfig(scenario="clean")) is None
+    s = make_drift_schedule(ContinualConfig(scenario="gain_drift",
+                                            severity=0.5, onset=7))
+    assert s is not None and s.onset == 7
+
+
+# ---------------------------------------------------------------------------
+# drifted-pool purity
+# ---------------------------------------------------------------------------
+
+def test_drift_shards_bitwise_reproducible():
+    s = DriftSchedule(scenario="day23_critical", kind="step", severity=0.7,
+                      onset=0, seed=3)
+    a = make_drift_shards(s, 12, [8, 8, 6], (16, 16))
+    b = make_drift_shards(s, 12, [8, 8, 6], (16, 16))
+    for sa, sb in zip(a, b):
+        assert sa["x"].tobytes() == sb["x"].tobytes()
+        assert sa["y"].tobytes() == sb["y"].tobytes()
+    # per-node streams are independent: distinct nodes draw distinct data
+    assert a[0]["x"].tobytes() != a[1]["x"].tobytes()
+
+
+def test_drift_shards_same_severity_same_pool():
+    # cyclic schedules revisit severities — the pool must be identical
+    s = DriftSchedule(scenario="gain_drift", kind="cyclic", severity=1.0,
+                      onset=0, period=20, refresh_every=10)
+    a = make_drift_shards(s, 5, [6, 6], (16, 16))     # phase 0, sev 0
+    b = make_drift_shards(s, 25, [6, 6], (16, 16))    # phase 2, sev 0 again
+    assert s.severity_at(5) == s.severity_at(25)
+    for sa, sb in zip(a, b):
+        assert sa["x"].tobytes() == sb["x"].tobytes()
+
+
+def _world(seed=0, per_node=12):
+    cfg = get_arch("lenet-radar").reduced
+    model = get_model(cfg)
+    train = make_dataset(K * per_node, hw=cfg.input_hw, day=1, seed=seed)
+    shards = partition_iid(train, K)
+    return cfg, model, shards
+
+
+def test_refresher_base_phase_keeps_original_shards():
+    cfg, model, shards = _world()
+    dshards = DeviceShards.from_shards(shards)
+    sched = DriftSchedule(scenario="gain_drift", kind="step", severity=0.8,
+                          onset=20, refresh_every=5)
+    ref = DriftRefresher(sched, dshards)
+    assert ref.shards_for(0) is dshards          # pre-onset: same object
+    assert ref.shards_for(19) is dshards
+    drifted = ref.shards_for(20)
+    assert drifted is not dshards
+    assert ref.shards_for(25) is drifted         # cached per severity
+
+
+def test_refresher_rejects_token_pools():
+    sched = DriftSchedule(scenario="gain_drift", kind="step", severity=0.5)
+    pool = DeviceShards.from_shards(
+        [{"tokens": np.zeros((4, 8), np.int32)}])
+    with pytest.raises(ValueError, match="image-style"):
+        DriftRefresher(sched, pool)
+
+
+def test_segments_merge_equal_severity():
+    cfg, model, shards = _world()
+    dshards = DeviceShards.from_shards(shards)
+    sched = DriftSchedule(scenario="gain_drift", kind="step", severity=0.8,
+                          onset=20, refresh_every=1)
+    ref = DriftRefresher(sched, dshards)
+    # refresh_every=1 but flat regions merge: exactly one split at onset
+    assert list(ref.segments(0, 40)) == [(0, 20), (20, 20)]
+    assert list(ref.segments(0, 15)) == [(0, 15)]
+    assert list(ref.segments(25, 10)) == [(25, 10)]
+    # a ramp splits at every phase boundary inside the ramp
+    ramp = DriftSchedule(scenario="gain_drift", kind="ramp", severity=1.0,
+                         onset=10, ramp_rounds=20, refresh_every=10)
+    rr = DriftRefresher(ramp, dshards)
+    # ramp severities: 0.0 for phases 0-1 (frac=0 at onset), 0.5, 1.0
+    assert list(rr.segments(0, 40)) == [(0, 20), (20, 10), (30, 10)]
+
+
+# ---------------------------------------------------------------------------
+# engine integration: bitwise purity through drift
+# ---------------------------------------------------------------------------
+
+def _fed(rounds, **kw):
+    base = dict(num_nodes=K, local_steps=3, eta=3e-3, zeta=0.3,
+                rounds=rounds, burn_in=4, compressor="topk",
+                compress_ratio=0.05, topology="full", algorithm="cdbfl")
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _params_bytes(params):
+    return jax.tree_util.tree_map(
+        lambda x: np.asarray(x).tobytes(), params)
+
+
+def test_pre_onset_training_is_bitwise_no_drift():
+    cfg, model, shards = _world()
+    cont = ContinualConfig(scenario="gain_drift", schedule="step",
+                           severity=0.9, onset=100, refresh_every=5)
+    tr_drift = FedTrainer(model, _fed(8), shards, minibatch=6,
+                          continual=cont)
+    tr_plain = FedTrainer(model, _fed(8), shards, minibatch=6)
+    tr_drift.run(rounds=8)
+    tr_plain.run(rounds=8)
+    assert (_params_bytes(tr_drift.state.params)
+            == _params_bytes(tr_plain.state.params))
+
+
+def test_drift_training_scan_matches_host_bitwise():
+    cfg, model, shards = _world()
+    cont = ContinualConfig(scenario="gain_drift", schedule="step",
+                           severity=0.8, onset=4, refresh_every=2,
+                           window=6, decay=0.9)
+    outs = {}
+    for engine in ("scan", "host"):
+        tr = FedTrainer(model, _fed(10), shards, minibatch=6,
+                        engine=engine, continual=cont, bank_capacity=8,
+                        bank_thin=1)
+        tr.run(rounds=10)
+        outs[engine] = _params_bytes(tr.state.params)
+    assert outs["scan"] == outs["host"]
+
+
+@pytest.mark.skipif(NDEV < 4, reason="needs >=4 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+def test_drift_on_shard_engine_matches_scan():
+    """Drift plumbing on the SPMD engine: a never-firing schedule is a
+    bitwise no-op, and a firing one stays within the pre-existing
+    scan↔shard conv-lowering tolerance (lenet conv reductions compile
+    with different fma contraction under shard_map — the engine suites
+    pin bitwise equality on the toy linear model only)."""
+    k = NDEV                       # K must tile the fed mesh
+    cfg = get_arch("lenet-radar").reduced
+    model = get_model(cfg)
+    train = make_dataset(k * 8, hw=cfg.input_hw, day=1, seed=0)
+    shards = partition_iid(train, k)
+
+    def run(engine, cont):
+        tr = FedTrainer(model, _fed(10, num_nodes=k, topology="ring"),
+                        shards, minibatch=6, engine=engine, continual=cont,
+                        bank_capacity=8, bank_thin=1)
+        tr.run(rounds=10)
+        return tr.state.params
+
+    pre_onset = ContinualConfig(scenario="gain_drift", schedule="step",
+                                severity=0.8, onset=100, refresh_every=2)
+    assert (_params_bytes(run("shard", None))
+            == _params_bytes(run("shard", pre_onset)))
+    drifting = ContinualConfig(scenario="gain_drift", schedule="step",
+                               severity=0.8, onset=4, refresh_every=2)
+    for a, b in zip(jax.tree_util.tree_leaves(run("scan", drifting)),
+                    jax.tree_util.tree_leaves(run("shard", drifting))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_same_seed_round_same_batch_across_engines():
+    # the drifted pool installed for round t is identical across engines:
+    # severity_at is pure and shards_for caches by severity only
+    cfg, model, shards = _world()
+    dshards = DeviceShards.from_shards(shards)
+    sched = DriftSchedule(scenario="day23_critical", kind="step",
+                          severity=0.6, onset=6, refresh_every=3, seed=11)
+    a = DriftRefresher(sched, dshards).shards_for(9)
+    b = DriftRefresher(sched, dshards).shards_for(9)
+    assert (np.asarray(a.data["x"]).tobytes()
+            == np.asarray(b.data["x"]).tobytes())
+    assert list(a.sizes) == list(b.sizes)
+
+
+# ---------------------------------------------------------------------------
+# bank aging
+# ---------------------------------------------------------------------------
+
+def test_age_weights_invariants():
+    rounds = np.array([3, 7, 11, 15])
+    w = bank_age_weights(rounds, now=16, window=0, decay=0.9)
+    assert np.all(w >= 0)
+    assert np.isclose(w.sum(), 1.0)
+    # age-monotone: newer sample never gets less weight
+    assert np.all(np.diff(w) >= 0)
+    # pure exponential discount: older/newer ratio = decay^(round gap)
+    assert np.allclose(w[:-1] / w[1:], 0.9 ** np.diff(rounds.astype(float)))
+
+
+def test_age_weights_window_evicts():
+    rounds = np.array([0, 10, 20, 30])
+    w = bank_age_weights(rounds, now=35, window=20, decay=1.0)
+    assert w[0] == 0.0 and w[1] == 0.0      # ages 35, 25 >= window
+    assert w[2] > 0 and w[3] > 0            # ages 15, 5 survive
+    assert np.isclose(w.sum(), 1.0)
+    assert np.isclose(w[2], w[3])           # decay=1: uniform survivors
+
+
+def test_age_weights_all_evicted_falls_back_to_newest():
+    rounds = np.array([0, 5, 9])
+    w = bank_age_weights(rounds, now=100, window=10, decay=0.5)
+    assert w.tolist() == [0.0, 0.0, 1.0]
+
+
+def test_age_weights_no_aging_is_uniform():
+    w = bank_age_weights(np.array([2, 4, 6, 8]), now=9, window=0, decay=1.0)
+    assert np.allclose(w, 0.25)
+
+
+def test_device_bank_tracks_rounds():
+    from repro.core.posterior import DeviceSampleBank
+    bank_cfg = DeviceSampleBank(burn_in=2, capacity=3, thin=1)
+    params = {"w": jnp.zeros((K, 2))}
+    st = bank_cfg.init(params)
+    assert st.rounds is not None
+    for t in range(7):
+        st = bank_cfg.update(st, t, params)
+    # admitted rounds 2..6, ring capacity 3 keeps the newest three
+    assert bank_cfg.rounds_list(st).tolist() == [4, 5, 6]
+    w = bank_cfg.age_weights(st, now=7, window=0, decay=0.5)
+    assert np.allclose(w, bank_age_weights(np.array([4, 5, 6]), 7,
+                                           window=0, decay=0.5))
+
+
+def test_trainer_host_bank_tracks_rounds():
+    cfg, model, shards = _world()
+    tr = FedTrainer(model, _fed(8, burn_in=3), shards, minibatch=6,
+                    engine="host", bank_thin=1)
+    tr.run(rounds=8)
+    assert tr.bank.rounds == list(range(3, 8))
+
+
+# ---------------------------------------------------------------------------
+# weighted BMA evaluation
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg, model, shards = _world()
+    tr = FedTrainer(model, _fed(10, burn_in=4), shards, minibatch=6,
+                    bank_capacity=8, bank_thin=1)
+    tr.run(rounds=10)
+    test = make_dataset(48, hw=cfg.input_hw, day=1, seed=99)
+    return model, tr, test
+
+
+def test_weighted_eval_one_hot_matches_newest(trained):
+    model, tr, test = trained
+    apply_fn, _ = tr._apply_fn(test)
+    stacked = tr._stacked_bank()
+    S = int(jax.tree_util.tree_leaves(stacked)[0].shape[0])
+    assert S >= 2
+    from repro.core.posterior import bma_predict_stacked
+    one_hot = np.zeros(S, np.float32)
+    one_hot[-1] = 1.0
+    probs_w = bma_predict_stacked(apply_fn, stacked, test,
+                                  node_axis=1, weights=jnp.asarray(one_hot))
+    newest = jax.tree.map(lambda x: x[-1], stacked)
+    probs_1 = bma_predict_stacked(
+        apply_fn, jax.tree.map(lambda x: x[None], newest), test,
+        node_axis=1)
+    assert np.allclose(np.asarray(probs_w), np.asarray(probs_1), atol=1e-6)
+
+
+def test_weighted_eval_host_scan_agree(trained):
+    model, tr, test = trained
+    apply_fn, _ = tr._apply_fn(test)
+    stacked = tr._stacked_bank()
+    S = int(jax.tree_util.tree_leaves(stacked)[0].shape[0])
+    w = bank_age_weights(np.arange(S), now=S, window=0, decay=0.8)
+    from repro.eval.engine import HostEvalEngine, ScanEvalEngine
+    data = {k: np.asarray(v) for k, v in test.items()}
+    rep_h = HostEvalEngine(apply_fn, batch_size=32).evaluate(
+        stacked, data, node_axis=1, weights=w)
+    rep_s = ScanEvalEngine(apply_fn, batch_size=32).evaluate(
+        stacked, data, node_axis=1, weights=w)
+    assert np.isclose(rep_h.accuracy, rep_s.accuracy)
+    assert np.isclose(rep_h.ece, rep_s.ece, atol=1e-5)
+    # uniform weights ≈ the unweighted mean (not bitwise: different graph)
+    rep_u = ScanEvalEngine(apply_fn, batch_size=32).evaluate(
+        stacked, data, node_axis=1, weights=np.full(S, 1.0 / S))
+    rep_0 = ScanEvalEngine(apply_fn, batch_size=32).evaluate(
+        stacked, data, node_axis=1)
+    assert np.isclose(rep_u.ece, rep_0.ece, atol=1e-5)
+
+
+def test_trainer_eval_report_with_aging(trained):
+    model, tr, test = trained
+    rep = tr.eval_report(test)
+    assert np.isfinite(rep.ece)
+    # aged trainer: same trained state viewed through an aging config
+    cont = ContinualConfig(scenario="gain_drift", severity=0.5, onset=10_000,
+                           window=4, decay=0.7)
+    assert cont.ages
+    tr.continual = cont
+    try:
+        rep_aged = tr.eval_report(test)
+    finally:
+        tr.continual = None
+    assert np.isfinite(rep_aged.ece)
+
+
+def test_make_refresher_roundtrip():
+    cfg, model, shards = _world()
+    dshards = DeviceShards.from_shards(shards)
+    assert make_refresher(None, dshards) is None
+    assert make_refresher(ContinualConfig(), dshards) is None
+    ref = make_refresher(ContinualConfig(scenario="gain_drift",
+                                         severity=0.5, onset=3), dshards)
+    assert isinstance(ref, DriftRefresher)
+    ds = ref.eval_dataset(5, 16, seed=1)
+    assert ds["x"].shape[0] == 16

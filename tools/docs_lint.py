@@ -1,0 +1,198 @@
+"""Docs lint: code fences and cross-references must match the live code.
+
+Three classes of rot this catches, all of which have bitten by-hand docs:
+
+  1. CLI drift — a fence shows ``python -m repro.launch.train --foo`` but
+     the parser never grew ``--foo`` (or it was renamed).  Flags used in
+     fenced commands are checked against the ``add_argument`` declarations
+     of the module actually named on that line.
+  2. Registry drift — ``--arch``/``--scenarios``/``--drift`` operands must
+     name entries in the live arch / scenario registries.
+  3. Dead cross-references — ``§N`` mentions must resolve to a
+     ``## §N`` heading in DESIGN.md, ``EXPERIMENTS.md §Name`` mentions to a
+     ``## §Name`` heading there, and in-file ``[...](#anchor)`` links to a
+     real heading slug.
+
+Needs the repo importable (registries), so it runs in the tier-1 CI job,
+not the dependency-free lint job:
+
+    PYTHONPATH=src python tools/docs_lint.py
+
+Exit status is the number of problems found; each is printed one per line
+as ``file:line: message``.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import Dict, List, Set, Tuple
+
+ROOT = Path(__file__).resolve().parents[1]
+DOCS = ["README.md", "EXPERIMENTS.md", "DESIGN.md"]
+
+# flags that argparse provides for free
+IMPLICIT_FLAGS = {"--help"}
+
+
+def _module_source(module: str) -> Path | None:
+    """Map a ``python -m`` module path to its source file, if in-repo."""
+    if module.startswith("repro."):
+        p = ROOT / "src" / (module.replace(".", "/") + ".py")
+    elif module.startswith("benchmarks."):
+        p = ROOT / (module.replace(".", "/") + ".py")
+    else:
+        return None  # pytest, pip, ... — not ours to check
+    return p if p.exists() else None
+
+
+def _declared_flags(path: Path) -> Set[str]:
+    txt = path.read_text()
+    flags = set(re.findall(r"add_argument\(\s*['\"](--[A-Za-z0-9][A-Za-z0-9-]*)", txt))
+    return flags | IMPLICIT_FLAGS
+
+
+def _fences(text: str) -> List[Tuple[int, str]]:
+    """Return (start_line, body) for each fenced code block."""
+    out = []
+    lines = text.split("\n")
+    i = 0
+    while i < len(lines):
+        if lines[i].lstrip().startswith("```"):
+            start = i + 1
+            j = i + 1
+            while j < len(lines) and not lines[j].lstrip().startswith("```"):
+                j += 1
+            out.append((start + 1, "\n".join(lines[start:j])))  # 1-based
+            i = j + 1
+        else:
+            i += 1
+    return out
+
+
+def _commands(body: str) -> List[str]:
+    """Join backslash continuations, keep lines that invoke ``python -m``."""
+    joined: List[str] = []
+    acc = ""
+    for raw in body.split("\n"):
+        line = raw.rstrip()
+        if acc:
+            acc += " " + line.strip().rstrip("\\").strip()
+            if not line.endswith("\\"):
+                joined.append(acc)
+                acc = ""
+        elif line.endswith("\\"):
+            acc = line.rstrip("\\").strip()
+        else:
+            joined.append(line)
+    if acc:
+        joined.append(acc)
+    return [ln for ln in joined if "python -m " in ln]
+
+
+def _inline_commands(text: str) -> List[Tuple[int, str]]:
+    """``python -m ...`` invocations inside backtick inline code spans."""
+    out = []
+    for ln, line in enumerate(text.split("\n"), start=1):
+        for span in re.findall(r"`([^`]*python -m [^`]*)`", line):
+            out.append((ln, span))
+    return out
+
+
+def _check_command(cmd: str, where: str, problems: List[str],
+                   scenarios: Set[str], archs: Set[str]) -> None:
+    m = re.search(r"python -m\s+([A-Za-z0-9_.]+)", cmd)
+    if not m:
+        return
+    module = m.group(1)
+    src = _module_source(module)
+    if src is None:
+        if module.startswith(("repro.", "benchmarks.")):
+            problems.append(f"{where}: no such module `{module}`")
+        return
+    declared = _declared_flags(src)
+    tail = cmd[m.end():]
+    tokens = tail.split()
+    used = [t.split("=")[0] for t in tokens if t.startswith("--")]
+    for flag in used:
+        if flag not in declared:
+            problems.append(
+                f"{where}: `{module}` has no flag `{flag}` "
+                f"(declared: {', '.join(sorted(declared))})")
+    # registry-valued operands
+    for i, tok in enumerate(tokens[:-1]):
+        val = tokens[i + 1]
+        if tok == "--arch" and val not in archs:
+            problems.append(f"{where}: unknown arch `{val}`")
+        elif tok in ("--drift", "--scenario"):
+            if val not in scenarios:
+                problems.append(f"{where}: unknown scenario `{val}`")
+        elif tok == "--scenarios" and val != "all":
+            for name in val.split(","):
+                if name and name not in scenarios:
+                    problems.append(f"{where}: unknown scenario `{name}`")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug."""
+    h = heading.strip().lstrip("#").strip().lower()
+    h = re.sub(r"[`*]", "", h)
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _headings(text: str) -> List[str]:
+    return [ln for ln in text.split("\n") if re.match(r"^#{1,6}\s", ln)]
+
+
+def main() -> int:
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.config import list_archs
+    from repro.data.scenarios import list_scenarios
+
+    scenarios = set(list_scenarios()) | {"clean"}
+    archs = set(list_archs())
+
+    texts: Dict[str, str] = {d: (ROOT / d).read_text() for d in DOCS}
+    design_secs = set(re.findall(r"^## §(\d+)\b", texts["DESIGN.md"], re.M))
+    exp_secs = set(re.findall(r"^## §(\w+)", texts["EXPERIMENTS.md"], re.M))
+
+    problems: List[str] = []
+    for doc, text in texts.items():
+        # 1+2: fenced + inline commands
+        for start, body in _fences(text):
+            for cmd in _commands(body):
+                _check_command(cmd, f"{doc}:{start}", problems, scenarios, archs)
+        for ln, cmd in _inline_commands(text):
+            _check_command(cmd, f"{doc}:{ln}", problems, scenarios, archs)
+
+        # 3a: §N references must exist in DESIGN.md; EXPERIMENTS.md §Name
+        # references must exist there.  A bare §Name outside EXPERIMENTS.md
+        # is prose, not a link, and is left alone.
+        for ln, line in enumerate(text.split("\n"), start=1):
+            for num in re.findall(r"§§?(\d+)", line):
+                if num not in design_secs:
+                    problems.append(f"{doc}:{ln}: dead section ref §{num} "
+                                    f"(DESIGN.md has §1–§{max(map(int, design_secs))})")
+            for name in re.findall(r"EXPERIMENTS\.md §(\w+)", line):
+                if name not in exp_secs:
+                    problems.append(f"{doc}:{ln}: dead ref EXPERIMENTS.md §{name}")
+
+        # 3b: in-file anchors
+        slugs = {_slug(h) for h in _headings(text)}
+        for ln, line in enumerate(text.split("\n"), start=1):
+            for anchor in re.findall(r"\]\(#([^)]+)\)", line):
+                if anchor not in slugs:
+                    problems.append(f"{doc}:{ln}: dead anchor #{anchor}")
+
+    for p in problems:
+        print(p)
+    if not problems:
+        print(f"docs_lint: {len(DOCS)} docs clean "
+              f"({len(scenarios)} scenarios, {len(archs)} archs, "
+              f"{len(design_secs)} DESIGN sections)")
+    return min(len(problems), 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
